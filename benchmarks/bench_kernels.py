@@ -1,0 +1,48 @@
+"""Kernel-layer benchmark: fused distance+top-l vs unfused oracle.
+
+On this CPU container the Pallas kernels run in interpret mode (Python) —
+meaningless to time.  What IS meaningful on CPU: the oracle pipeline's
+wall time (XLA-fused jnp) as the baseline the TPU kernel must beat, and
+the ANALYTIC HBM-traffic model of both variants (the quantity the fused
+kernel optimizes; see kernels/distance_topk.py header).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, time_fn
+from repro.kernels import ref
+
+
+def run(emit=print):
+    rng = np.random.default_rng(0)
+    # CPU-feasible timing shape
+    B, d, m, l = 64, 512, 1 << 13, 64
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    p = rng.normal(size=(m, d)).astype(np.float32)
+    f = jax.jit(lambda q, p: ref.distance_topk_ref(q, p, l))
+    t = time_fn(lambda: f(q, p), repeats=5)
+    emit(row(f"kernels/oracle_timing_B{B}_m{m}", t * 1e6,
+             f"oracle_us={t*1e6:.0f};flops={2.0*B*m*d:.2e}"))
+
+    # traffic model at serving shapes (kNN-LM decode batches): the fused
+    # kernel's win grows as the (B, m) score matrix starts dominating the
+    # (m, d) point reads — i.e. exactly the high-QPS regime.
+    for (B, d, m, l) in [(256, 1024, 1 << 20, 64), (2048, 512, 1 << 20, 64),
+                         (8192, 512, 1 << 20, 64)]:
+        unfused_hbm = 4.0 * (B * d + m * d + 2 * B * m + B * l * 2)
+        fused_hbm = 4.0 * (B * d + m * d + B * l * 2)
+        flops = 2.0 * B * m * d
+        emit(row(f"kernels/traffic_model_B{B}_d{d}", flops / fused_hbm,
+                 f"flops={flops:.2e};hbm_unfused={unfused_hbm:.2e};"
+                 f"hbm_fused={fused_hbm:.2e};"
+                 f"traffic_saving={unfused_hbm/fused_hbm:.1f}x;"
+                 f"intensity_fused={flops/fused_hbm:.0f};"
+                 f"intensity_unfused={flops/unfused_hbm:.0f};"
+                 f"v5e_crossover_intensity=240"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Theorem 2.4 — message complexity O(k log l).
+
+Counts the actual messages our SPMD implementation exchanges per query
+(derived from the measured iteration count and the implementation's
+collective schedule: 1 gather + 1 psum per iteration, 1 sampling gather,
+1 verification psum, 1 output pack) and checks the O(k log l) envelope.
+In the k-machine accounting, one all-gather/psum over k machines costs
+k-1 messages on a star and 2(k-1) on the all-to-all ICI analogue — we
+report the star count, matching the paper's leader-centric accounting.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import kmachine_mesh, row
+import repro.core as core
+
+
+def run(emit=print):
+    rng = np.random.default_rng(0)
+    dim = 8
+    for k in (2, 4, 8):
+        mesh = kmachine_mesh(k)
+        n = k * (1 << 13)
+        pts = rng.normal(size=(n, dim)).astype(np.float32)
+        pids = np.arange(n, dtype=np.int32)
+        for l in (32, 256):
+            q = rng.normal(size=(1, dim)).astype(np.float32)
+
+            def fn(p, i, qq, key):
+                r = core.knn_query(p, i, qq, l, key, axis_name="x")
+                return r.selection.iterations
+
+            f = jax.jit(jax.shard_map(
+                fn, mesh=mesh,
+                in_specs=(P("x"), P("x"), P(None), P(None)),
+                out_specs=P()))
+            iters = float(f(pts, pids, q, jax.random.PRNGKey(0)))
+            # collective phases: sampling(1) + verify(1) + iters*(2) + out(2)
+            phases = 4 + 2 * iters
+            messages = (k - 1) * phases
+            bound = k * max(np.log(l), 1.0)
+            emit(row(f"messages/k{k}_l{l}", messages,
+                     f"iters={iters:.0f};messages={messages:.0f};"
+                     f"k_log_l={bound:.0f};ratio={messages/bound:.2f}"))
+
+
+if __name__ == "__main__":
+    run()

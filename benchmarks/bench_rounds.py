@@ -1,0 +1,68 @@
+"""Theorems 2.2 / 2.4 — round complexity.
+
+Empirically measures selection iterations (2 collective rounds each):
+  * vs n          -> O(log n) scaling (Theorem 2.2)
+  * vs l at fixed buffers after Algorithm-2 pruning -> O(log l),
+    independent of k (Theorem 2.4) — swept over k = 2..8 machines
+  * multi-pivot (beyond-paper) -> ~log-k-fold fewer iterations
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import kmachine_mesh, row
+from repro.core.selection import SelectionResult, select_l_smallest
+
+
+def _iters(mesh, k, n, l, seed=0, num_pivots=1, repeats=5):
+    def fn(v, i, key):
+        r = select_l_smallest(v, i, l, key, axis_name="x",
+                              num_pivots=num_pivots)
+        return r.iterations
+
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(None, "x"), P(None, "x"), P(None)),
+        out_specs=P()))
+    rng = np.random.default_rng(seed)
+    out = []
+    for r in range(repeats):
+        vals = rng.normal(size=(1, n)).astype(np.float32)
+        ids = np.arange(n, dtype=np.int32)[None]
+        out.append(int(f(vals, ids, jax.random.PRNGKey(seed + r))))
+    return float(np.mean(out))
+
+
+def run(emit=print):
+    k = 8
+    mesh = kmachine_mesh(k)
+
+    # Theorem 2.2: iterations vs n (selecting the median)
+    for n in (1 << 10, 1 << 13, 1 << 16):
+        it = _iters(mesh, k, n, n // 2)
+        emit(row(f"rounds/selection_n{n}", it,
+                 f"iters={it:.1f};2logn={2*np.log2(n):.1f};"
+                 f"rounds={2*it:.0f}"))
+
+    # Theorem 2.4: k-independence — fixed l, growing k
+    for kk in (2, 4, 8):
+        m = kmachine_mesh(kk)
+        it = _iters(m, kk, kk * 512, 128)
+        emit(row(f"rounds/k_independence_k{kk}", it,
+                 f"iters={it:.1f};l=128"))
+
+    # beyond-paper multi-pivot
+    n = 1 << 14
+    it1 = _iters(mesh, k, n, n // 2, num_pivots=1)
+    itk = _iters(mesh, k, n, n // 2, num_pivots=k)
+    emit(row("rounds/multi_pivot_speedup", itk,
+             f"single={it1:.1f};multi={itk:.1f};ratio={it1/itk:.2f}"))
+
+
+if __name__ == "__main__":
+    run()

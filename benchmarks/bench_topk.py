@@ -1,0 +1,52 @@
+"""Sampler crossover — selection (paper) vs gather (simple method) at the
+vocab-top-k layer, the production face of Figure 2.
+
+Reports per-token wall time on the simulated mesh plus the wire-byte model:
+gather moves k_machines x k_sel (val,id) pairs; selection moves O(log k_sel)
+scalar rounds + the k winners.  On real ICI the crossover sits where
+latency x rounds beats bytes / bandwidth — both sides are recorded so the
+EXPERIMENTS.md analysis can place it.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import kmachine_mesh, row, time_fn
+import repro.core as core
+
+
+def run(emit=print):
+    k = 8
+    mesh = kmachine_mesh(k)
+    rng = np.random.default_rng(0)
+    V, B = k * 19008, 8          # ~152k vocab over 8 machines
+    logits = rng.normal(size=(B, V)).astype(np.float32)
+
+    for ksel in (8, 64, 256):
+        for method in ("selection", "gather"):
+            def fn(lg, key):
+                r = core.distributed_topk(lg, ksel, key, axis_name="x",
+                                          method=method)
+                return r.values, r.iterations
+
+            f = jax.jit(jax.shard_map(
+                fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
+                out_specs=(P(None), P())))
+            key = jax.random.PRNGKey(0)
+            t = time_fn(lambda: f(logits, key), repeats=10)
+            _, iters = f(logits, key)
+            if method == "gather":
+                wire = k * ksel * 8 * B
+            else:
+                wire = (float(iters) * k * (3 * 4) * B
+                        + 2 * ksel * 4 * B + k * 4 * B)
+            emit(row(f"topk/{method}_k{ksel}", t * 1e6,
+                     f"us={t*1e6:.0f};wire_bytes={wire:.0f};"
+                     f"iters={float(iters):.0f}"))
+
+
+if __name__ == "__main__":
+    run()

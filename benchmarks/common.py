@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing.
+
+The k-machine-model benchmarks need k >= 2 host devices; like
+launch/dryrun.py (which claims 512), the benchmark entrypoint claims its
+own process-local device count — nothing leaks into tests or other runs.
+"""
+
+from __future__ import annotations
+
+import os
+
+K_MACHINES = 8
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={K_MACHINES} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+
+def kmachine_mesh(k: int = K_MACHINES):
+    return jax.make_mesh((k,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
+    """Median wall seconds per call (fn must return jax arrays)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,51 @@
+"""Regenerate the EXPERIMENTS.md roofline table from results/dryrun/*.json."""
+
+import glob
+import json
+import sys
+
+
+def fmt(x):
+    if x is None:
+        return "-"
+    if x == 0:
+        return "0"
+    if abs(x) < 1e-2 or abs(x) >= 1e4:
+        return f"{x:.2e}"
+    return f"{x:.3f}"
+
+
+def main(results_dir="results/dryrun", mesh="single"):
+    rows = []
+    for p in sorted(glob.glob(f"{results_dir}/*__{mesh}.json")):
+        r = json.load(open(p))
+        cell = r["cell"].rsplit("|", 1)[0]
+        arch, shape = cell.split("|")
+        if r["status"] == "SKIP":
+            rows.append((arch, shape, "SKIP(full-attention)", "", "", "",
+                         "", "", ""))
+            continue
+        if r["status"] != "OK":
+            rows.append((arch, shape, "FAIL", "", "", "", "", "", ""))
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]
+        tot = sum(v for k, v in mem.items()
+                  if isinstance(v, (int, float)) and k.endswith("device"))
+        rows.append((
+            arch, shape, ro["dominant"],
+            fmt(ro["compute_s"]), fmt(ro["memory_s"]),
+            fmt(ro["collective_s"]),
+            fmt(ro["model_flops"]),
+            fmt(ro["useful_flops_frac"]),
+            f"{tot/2**30:.1f}",
+        ))
+    print("| arch | shape | bottleneck | compute_s | memory_s | "
+          "collective_s | MODEL_FLOPS | useful_frac | GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for row in rows:
+        print("| " + " | ".join(str(x) for x in row) + " |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,26 @@
+"""Benchmark harness — one module per paper table/figure/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  bench_fig2      paper Figure 2 (Alg 2 vs simple method)
+  bench_rounds    Theorems 2.2 / 2.4 (round complexity, k-independence)
+  bench_messages  Theorem 2.4 (message complexity O(k log l))
+  bench_prune     Lemma 2.3 (sample-prune survivor envelope)
+  bench_topk      sampler-level selection-vs-gather crossover
+  bench_kernels   fused distance+top-l traffic model vs oracle timing
+"""
+
+from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
+
+
+def main() -> None:
+    from benchmarks import (bench_fig2, bench_kernels, bench_messages,
+                            bench_prune, bench_rounds, bench_topk)
+    print("name,us_per_call,derived")
+    for mod in (bench_rounds, bench_fig2, bench_messages, bench_prune,
+                bench_topk, bench_kernels):
+        mod.run(emit=print)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint import serialization
+
+__all__ = ["CheckpointManager", "serialization"]

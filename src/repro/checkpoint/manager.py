@@ -1,0 +1,107 @@
+"""Checkpoint manager: async, atomic, keep-N, elastic restore.
+
+Fault-tolerance contract (DESIGN.md Section 5):
+  * **atomic** — writes go to `<dir>/tmp_<step>` and are os.rename'd to
+    `<dir>/step_<step>` only when complete; a crash mid-save can never
+    corrupt the latest checkpoint;
+  * **async** — `save()` snapshots to host memory synchronously (cheap)
+    and serializes on a background thread, so the train step resumes
+    immediately; `wait()` joins before exit / before the next save;
+  * **keep-N** — bounded disk usage, oldest checkpoints pruned after a
+    successful save;
+  * **elastic restore** — `restore()` reassembles logical arrays and
+    device_puts them onto whatever mesh/sharding the *current* run uses
+    (serialization.py stores logical indices, not device ids).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import serialization
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ---- save ---------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False):
+        """Snapshot `tree` (device -> host) and serialize asynchronously."""
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                tmp = os.path.join(self.directory, f"tmp_{step}")
+                final = os.path.join(self.directory, f"step_{step}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                serialization.save_pytree(host_tree, tmp)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._prune()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ---- restore --------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target_tree, *, mesh=None, specs=None):
+        """Load step; if (mesh, specs) given, device_put each leaf onto its
+        NamedSharding — the elastic path."""
+        d = os.path.join(self.directory, f"step_{step}")
+        tree = serialization.load_pytree(d, target_tree)
+        if mesh is not None and specs is not None:
+            from jax.sharding import NamedSharding
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+                tree, specs)
+        return tree
+
+    def restore_latest(self, target_tree, *, mesh=None, specs=None):
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return step, self.restore(step, target_tree, mesh=mesh, specs=specs)
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,49 @@
+"""Architecture registry: one module per assigned architecture.
+
+`get(name)` returns the exact published ModelConfig; `registry()` lists all.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_ARCHS = (
+    "qwen2_5_14b",
+    "qwen1_5_4b",
+    "qwen2_0_5b",
+    "yi_6b",
+    "phi3_5_moe_42b",
+    "granite_moe_3b",
+    "jamba_1_5_large",
+    "pixtral_12b",
+    "seamless_m4t_v2",
+    "xlstm_125m",
+)
+
+_ALIASES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "yi-6b": "yi_6b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "granite-moe-3b-a800m": "granite_moe_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "pixtral-12b": "pixtral_12b",
+    "seamless-m4t-large-v2": "seamless_m4t_v2",
+    "xlstm-125m": "xlstm_125m",
+    "knn-service": "knn_service",
+}
+
+
+def get(name: str):
+    mod_name = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def registry():
+    return tuple(_ARCHS)
+
+
+def all_names():
+    return tuple(a for a in _ARCHS)

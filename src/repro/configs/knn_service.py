@@ -1,0 +1,23 @@
+"""The paper's own artifact: a standalone distributed l-NN service config.
+
+Mirrors the paper's experimental setup (Section 3): synthetic points
+distributed over the mesh, scalar or d-dimensional, query broadcast,
+answer = l nearest.  Used by examples/quickstart.py and launch/serve.py
+--arch knn-service.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class KnnServiceConfig:
+    name: str = "knn-service"
+    n_points: int = 1 << 22          # paper: 2^22 points per process
+    dim: int = 64                    # paper uses scalars; dim=1 reproduces it
+    l: int = 128                     # neighbors per query
+    query_batch: int = 8
+    num_classes: int = 16            # for the classification head
+    value_range: float = 4294967295.0  # paper: U[0, 2^32 - 1]
+
+
+CONFIG = KnnServiceConfig()

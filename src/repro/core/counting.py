@@ -1,0 +1,87 @@
+"""Composite-key comparisons and masked range counting.
+
+The paper (Section 2, "implementation issue") breaks ties between points of
+equal distance with random unique IDs drawn from [1, n^3].  We replace the
+randomized IDs with a *deterministic* composite key ``(value, global_index)``
+compared lexicographically: collision-free by construction, same effect on the
+algorithm (every element has a distinct rank), and free of the 1/n failure
+probability of random IDs.
+
+All selection/counting code in :mod:`repro.core` works on these keys.  A key is
+represented as a pair of arrays ``(v, i)`` with ``v`` floating (the value /
+distance) and ``i`` int32 (the global element id).  ``+inf`` sentinels (the
+paper's Step 2 padding in Algorithm 2) carry ``i = INT32_MAX`` so they sort
+after every real element; the lower bound sentinel is ``(-inf, -1)``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel ids for the exclusive interval bounds (lo, hi).
+ID_LO = jnp.int32(-2_147_483_648)  # pairs with -inf
+ID_HI = jnp.int32(2_147_483_647)   # pairs with +inf
+
+
+def key_lt(av, ai, bv, bi):
+    """Lexicographic ``(av, ai) < (bv, bi)``.
+
+    NaN-free by contract: distances are finite or +/-inf sentinels.
+    """
+    return (av < bv) | ((av == bv) & (ai < bi))
+
+
+def key_le(av, ai, bv, bi):
+    return (av < bv) | ((av == bv) & (ai <= bi))
+
+
+def key_min(av, ai, bv, bi):
+    """Pointwise lexicographic minimum of two keys."""
+    take_a = key_lt(av, ai, bv, bi)
+    return jnp.where(take_a, av, bv), jnp.where(take_a, ai, bi)
+
+
+def key_max(av, ai, bv, bi):
+    take_a = key_lt(av, ai, bv, bi)
+    return jnp.where(take_a, bv, av), jnp.where(take_a, bi, ai)
+
+
+def in_open_interval(v, i, lo_v, lo_i, hi_v, hi_i):
+    """Mask of elements with ``lo < (v, i) < hi`` (both bounds exclusive).
+
+    This is the candidate set of the current selection iteration; keeping both
+    bounds exclusive guarantees the pivot itself leaves the candidate set every
+    iteration, so Algorithm 1 terminates deterministically (DESIGN.md Section 2).
+
+    Shapes: ``v, i`` are ``(..., m)``; bounds broadcast (typically ``(..., 1)``).
+    """
+    above_lo = key_lt(lo_v, lo_i, v, i)
+    below_hi = key_lt(v, i, hi_v, hi_i)
+    return above_lo & below_hi
+
+
+def count_le(v, i, bound_v, bound_i, within=None):
+    """``|{x : x <= bound}|`` per row, optionally restricted to ``within`` mask.
+
+    This is the per-machine answer to the leader's ``getSize(min, p)`` query
+    (Algorithm 1, line 7): each machine reports how many of its points fall at
+    or below the pivot.  The caller psums the result over the machine axis.
+    """
+    m = key_le(v, i, bound_v, bound_i)
+    if within is not None:
+        m = m & within
+    return jnp.sum(m.astype(jnp.int32), axis=-1)
+
+
+def masked_select_nth(mask, n):
+    """Index of the ``n``-th True entry of ``mask`` (0-based) along axis -1.
+
+    Used by the per-shard uniform pivot draw: machine i picks its ``n``-th
+    in-range point where ``n ~ U[0, n_i)`` (Algorithm 1, line 5(2)).  Returns
+    an arbitrary valid index when ``mask`` has fewer than ``n+1`` True entries
+    (callers guard on the count).
+    """
+    csum = jnp.cumsum(mask.astype(jnp.int32), axis=-1)
+    target = jnp.expand_dims(n + 1, -1)
+    hit = (csum == target) & mask
+    return jnp.argmax(hit, axis=-1)

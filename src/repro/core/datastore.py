@@ -1,0 +1,125 @@
+"""Sharded kNN-LM datastore — the paper's l-NN as a serving-time feature.
+
+kNN-LM (Khandelwal et al., ICLR 2020) interpolates the LM's next-token
+distribution with a nearest-neighbor distribution over a datastore of
+(hidden-state key, next-token value) pairs.  The datastore is naturally
+*distributed* — billions of keys sharded across the mesh — which is precisely
+the paper's setting: query point (the decoder hidden state) broadcast to all
+machines, answer = l nearest keys.  Retrieval runs Algorithm 2 per decode
+step; only distances/ids/token-values cross the ICI, never the d_model-sized
+keys (paper Section 1.3's privacy/bandwidth note, production form).
+
+The kNN mixture is returned *sparse* — (token_id, weight) pairs for the l
+winners, replicated — and scattered into the model-sharded logits locally by
+`interp_logits`, so the full-vocab distribution is never materialized
+unsharded.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import knn as knn_mod
+
+
+class Datastore(NamedTuple):
+    """Per-shard slice of the (keys, values) store.
+
+    keys:   (m, d)  hidden-state keys (bf16 storage is fine; distances are
+                     accumulated in f32 by the distance kernel)
+    values: (m,)    int32 next-token ids
+    ids:    (m,)    globally unique int32 point ids
+    """
+
+    keys: jax.Array
+    values: jax.Array
+    ids: jax.Array
+
+
+def build_local(keys: jax.Array, values: jax.Array, *,
+                axis_name: str) -> Datastore:
+    """Wrap this shard's slice, assigning globally-unique contiguous ids."""
+    m = keys.shape[0]
+    start = lax.axis_index(axis_name) * m
+    ids = (start + jnp.arange(m)).astype(jnp.int32)
+    return Datastore(keys=keys, values=values.astype(jnp.int32), ids=ids)
+
+
+class RetrievalResult(NamedTuple):
+    tokens: jax.Array      # (B, l) replicated winner token values
+    weights: jax.Array     # (B, l) replicated softmax(-d / T) weights
+    dists: jax.Array       # (B, l) replicated distances (+inf padding)
+    iterations: jax.Array  # selection iterations (round-count telemetry)
+
+
+def retrieve(
+    store: Datastore,
+    queries: jax.Array,
+    l: int,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    temperature: float = 10.0,
+    distances_fn=knn_mod.squared_l2_distances,
+    num_pivots: int = 1,
+) -> RetrievalResult:
+    """Algorithm 2 retrieval + softmax weighting of the l winners."""
+    res = knn_mod.knn_query(
+        store.keys, store.ids, queries, l, key, axis_name=axis_name,
+        distances_fn=distances_fn, num_pivots=num_pivots,
+        gather_results=False)
+
+    # Winners' token values: reuse the rank-stable pack, sending the token
+    # value in place of the point id (values are what the LM needs).  The
+    # local top-l buffer's global ids map back to local store rows as
+    # id - shard_offset (ids were assigned contiguously in build_local).
+    m = store.keys.shape[0]
+    start = lax.axis_index(axis_name) * m
+    local_row = jnp.clip(res.local_ids - start, 0, m - 1)
+    vals = store.values[local_row]                              # (B, l)
+    dists, tokens = knn_mod.gather_selected(
+        res.local_dists, jnp.where(res.mask, vals, 0), res.mask, l,
+        axis_name=axis_name)
+
+    logit = jnp.where(jnp.isfinite(dists), -dists / temperature, -jnp.inf)
+    weights = jax.nn.softmax(logit, axis=-1)
+    return RetrievalResult(tokens=tokens, weights=weights, dists=dists,
+                           iterations=res.selection.iterations)
+
+
+def interp_logits(
+    lm_logits: jax.Array,
+    retrieval: RetrievalResult,
+    lam: float,
+    *,
+    axis_name: str,
+) -> jax.Array:
+    """(1-lam) * p_LM + lam * p_kNN, computed on model-sharded logits.
+
+    ``lm_logits``: (B, V_local), this shard's contiguous vocab chunk.  The
+    sparse kNN mass is scattered only into the owning shard's chunk; the
+    log-space result feeds the (also sharded) sampler directly.
+    """
+    B, v_local = lm_logits.shape
+    start = lax.axis_index(axis_name) * v_local
+
+    # p_LM needs a global softmax over the sharded vocab: max + sumexp psums.
+    m = lax.pmax(jnp.max(lm_logits, axis=-1), axis_name)
+    e = jnp.exp(lm_logits - m[:, None])
+    z = lax.psum(jnp.sum(e, axis=-1), axis_name)
+    p_lm = e / z[:, None]
+
+    # Scatter this shard's share of the kNN mass.
+    local_tok = retrieval.tokens - start
+    in_range = (local_tok >= 0) & (local_tok < v_local)
+    cols = jnp.where(in_range, local_tok, v_local)
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], cols.shape)
+    p_knn = jnp.zeros((B, v_local + 1), p_lm.dtype).at[rows, cols].add(
+        jnp.where(in_range, retrieval.weights, 0.0), mode="drop")[:, :v_local]
+
+    mixed = (1.0 - lam) * p_lm + lam * p_knn
+    return jnp.log(jnp.maximum(mixed, 1e-30))

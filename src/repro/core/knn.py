@@ -1,0 +1,214 @@
+"""Algorithm 2 — distributed l-nearest-neighbors, end to end.
+
+Paper Section 2.2.  Pipeline per query batch (each step annotated with its
+paper line and its collective cost):
+
+  1. distance computation  d_ij = dis(p_ij, q)        local (Step 8; Pallas
+     kernel `kernels.distance_topk` on the hot path, jnp fallback here)
+  2. local top-l reduction, +inf sentinel padding      local (Step 2)
+  3. sample-and-prune to O(l) survivors                1 all_gather + 1 psum
+     (Steps 3-7, `core.sampling`)
+  4. Algorithm 1 selection on survivors                O(log l) x (all_gather
+     + psum) of O(B) scalars  (`core.selection`)
+  5. output: per-shard mask of the l winners           local
+     optional result gather into a replicated (B, l) buffer: 1 psum of O(l)
+
+Only *distances and ids* ever cross the network (the paper's privacy note:
+points themselves, which may be high-dimensional, stay put).
+
+Also provided: the paper's experimental baseline (`knn_simple`, Section 3):
+gather every machine's local top-l to one place and reduce — O(l) rounds /
+O(k l) values on the wire; used by `benchmarks/bench_fig2.py` to reproduce
+the paper's speedup figure, and by tests as a second oracle.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import sampling
+from repro.core.selection import (SelectionResult, select_l_smallest,
+                                  selected_mask)
+
+
+class KnnResult(NamedTuple):
+    """Distributed l-NN answer.
+
+    ``mask``/``local_dists``/``local_ids`` are per-shard (the paper's native
+    output form: "each machine outputs all the points <= max").  When
+    ``gather_results=True``, ``dists``/``ids`` hold the l winners replicated
+    on every shard (ascending +inf-padded slots), else they are None.
+    """
+
+    mask: jax.Array                 # (B, L) bool, per-shard winners
+    local_dists: jax.Array          # (B, L) per-shard candidate distances
+    local_ids: jax.Array            # (B, L) per-shard candidate global ids
+    selection: SelectionResult      # replicated threshold + iteration stats
+    prune: sampling.PruneResult     # Lemma 2.3 stats
+    dists: jax.Array | None         # (B, l) replicated, or None
+    ids: jax.Array | None           # (B, l) replicated, or None
+
+
+def squared_l2_distances(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """`(B, d) x (m, d) -> (B, m)` squared euclidean distances (jnp reference).
+
+    The MXU-friendly expansion ||q||^2 - 2 q.p + ||p||^2: one (B, d) @ (d, m)
+    matmul dominates.  The Pallas kernel `kernels.l2_distance` implements the
+    same contraction with explicit VMEM tiling; `kernels/ref.py` mirrors this
+    function as the oracle.
+    """
+    q2 = jnp.sum(queries.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    p2 = jnp.sum(points.astype(jnp.float32) ** 2, axis=-1)
+    qp = queries.astype(jnp.float32) @ points.astype(jnp.float32).T
+    return jnp.maximum(q2 - 2.0 * qp + p2[None, :], 0.0)
+
+
+def local_top_l(d: jax.Array, ids: jax.Array, l: int):
+    """Per-shard top-l smallest (Algorithm 2, Step 2), +inf sentinel padded.
+
+    ``d``: (B, m) distances, ``ids``: (B, m) or (m,) global ids.  When the
+    shard holds fewer than l points the paper pads with "fake" sentinel
+    points of infinite value; callers with m < l must pre-pad (XLA shapes are
+    static, so the pad is part of the buffer layout, not data-dependent).
+    """
+    if ids.ndim == 1:
+        ids = jnp.broadcast_to(ids[None], d.shape)
+    m = d.shape[-1]
+    if m <= l:
+        pad = l - m
+        d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=2**31 - 1)
+        return d, ids
+    neg_top, top_idx = lax.top_k(-d, l)
+    return -neg_top, jnp.take_along_axis(ids, top_idx, axis=-1)
+
+
+def gather_selected(d, gid, mask, l: int, *, axis_name: str):
+    """Pack the globally selected elements into replicated (B, l) buffers.
+
+    Rank-stable pack: shard j's winners land after all winners of shards
+    < j, preserving nothing about intra-order (callers sort the l-sized
+    result locally if they need ascending order — l is small).  Cost: one
+    all_gather of a scalar count + one psum of 2 l floats (this is the
+    *output* step; the paper's Algorithm 2 leaves results distributed, so
+    this is optional).
+    """
+    B = d.shape[0]
+    my_cnt = jnp.sum(mask.astype(jnp.int32), axis=-1)            # (B,)
+    all_cnt = lax.all_gather(my_cnt, axis_name)                  # (k, B)
+    me = lax.axis_index(axis_name)
+    offset = jnp.sum(jnp.where(
+        (jnp.arange(all_cnt.shape[0]) < me)[:, None], all_cnt, 0), axis=0)
+
+    rank = jnp.cumsum(mask.astype(jnp.int32), axis=-1) - 1       # (B, L)
+    col = jnp.where(mask, offset[:, None] + rank, l)             # l => dropped
+    rows = jnp.broadcast_to(jnp.arange(B)[:, None], col.shape)
+
+    dbuf = jnp.zeros((B, l + 1), d.dtype).at[rows, col].add(
+        jnp.where(mask, d, 0), mode="drop")
+    ibuf = jnp.zeros((B, l + 1), jnp.int32).at[rows, col].add(
+        jnp.where(mask, gid, 0), mode="drop")
+    dists = lax.psum(dbuf[:, :l], axis_name)
+    ids = lax.psum(ibuf[:, :l], axis_name)
+    # Unfilled slots (when fewer than l finite points exist) become +inf.
+    filled = jnp.arange(l)[None] < lax.psum(my_cnt, axis_name)[:, None]
+    dists = jnp.where(filled, dists, jnp.inf)
+    ids = jnp.where(filled, ids, 2**31 - 1)
+    return dists, ids
+
+
+def knn_query(
+    points: jax.Array,
+    point_ids: jax.Array,
+    queries: jax.Array,
+    l: int,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    distances_fn=squared_l2_distances,
+    use_sampling: bool = True,
+    num_pivots: int = 1,
+    gather_results: bool = True,
+) -> KnnResult:
+    """Full Algorithm 2 inside a shard_map context.
+
+    ``points``: (m, dim) this shard's points; ``point_ids``: (m,) globally
+    unique int32 ids; ``queries``: (B, dim) replicated query batch.
+    ``num_pivots > 1`` enables the beyond-paper multi-pivot selection.
+    """
+    d_full = distances_fn(queries, points)                       # (B, m)
+    d, gid = local_top_l(d_full, point_ids, l)                   # (B, l)
+
+    if use_sampling:
+        prune = sampling.sample_prune(d, key, l, axis_name=axis_name)
+    else:
+        finite = jnp.isfinite(d)
+        cnt = lax.psum(jnp.sum(finite.astype(jnp.int32), -1), axis_name)
+        prune = sampling.PruneResult(
+            valid=finite, radius=jnp.full(d.shape[:1], jnp.inf),
+            survivors=cnt, applied=jnp.zeros(d.shape[:1], bool))
+
+    sel = select_l_smallest(
+        d, gid, l, jax.random.fold_in(key, 1), axis_name=axis_name,
+        valid=prune.valid, num_pivots=num_pivots)
+    mask = selected_mask(d, gid, sel, valid=prune.valid)
+
+    dists = ids = None
+    if gather_results:
+        dists, ids = gather_selected(d, gid, mask, l, axis_name=axis_name)
+    return KnnResult(mask=mask, local_dists=d, local_ids=gid, selection=sel,
+                     prune=prune, dists=dists, ids=ids)
+
+
+def knn_simple(
+    points: jax.Array,
+    point_ids: jax.Array,
+    queries: jax.Array,
+    l: int,
+    *,
+    axis_name: str,
+    distances_fn=squared_l2_distances,
+):
+    """The paper's baseline "simple method" (Section 3).
+
+    Local top-l, then gather all k*l candidates and reduce.  O(l) rounds in
+    the k-machine model (k*l values over the leader's links); one
+    all_gather of l values per shard here.  Returns replicated ascending
+    (dists, ids) of shape (B, l).
+    """
+    d_full = distances_fn(queries, points)
+    d, gid = local_top_l(d_full, point_ids, l)
+    gd = lax.all_gather(d, axis_name)                            # (k, B, l)
+    gi = lax.all_gather(gid, axis_name)
+    B = d.shape[0]
+    k = gd.shape[0]
+    flat_d = jnp.moveaxis(gd, 0, 1).reshape(B, k * l)
+    flat_i = jnp.moveaxis(gi, 0, 1).reshape(B, k * l)
+    neg_top, idx = lax.top_k(-flat_d, l)
+    from repro.parallel.collectives import replicate
+    return (replicate(-neg_top, axis_name),
+            replicate(jnp.take_along_axis(flat_i, idx, axis=-1), axis_name))
+
+
+def knn_classify(mask, labels, num_classes: int, *, axis_name: str):
+    """Majority vote over the selected neighbors — fully distributed.
+
+    ``labels``: (B, L) int32 per-shard labels aligned with the knn buffers
+    (gather-free: the label histogram, not the points, crosses the network —
+    the paper's privacy property extends to inference).
+    """
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.int32)
+    hist = jnp.sum(jnp.where(mask[..., None], onehot, 0), axis=-2)
+    hist = lax.psum(hist, axis_name)                             # (B, C)
+    return jnp.argmax(hist, axis=-1), hist
+
+
+def knn_regress(mask, values, *, axis_name: str):
+    """Mean of neighbor target values — fully distributed (1 psum)."""
+    num = lax.psum(jnp.sum(jnp.where(mask, values, 0.0), axis=-1), axis_name)
+    den = lax.psum(jnp.sum(mask.astype(jnp.float32), axis=-1), axis_name)
+    return num / jnp.maximum(den, 1.0)

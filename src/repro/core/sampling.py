@@ -1,0 +1,111 @@
+"""Algorithm 2, steps 3-7 — the sample-and-prune search-space reduction.
+
+Paper Section 2.2 / Lemma 2.3: every machine samples ``12 log l`` of its local
+top-l distances independently with replacement; the sorted union of the
+``12 k log l`` samples is taken; the element at index ``21 log l`` becomes the
+prune radius r.  With probability >= 1 - 2/l^2 the survivor set {x <= r}
+contains the true l nearest neighbors and has at most ``11 l`` elements, so
+the follow-up selection (Algorithm 1) runs on O(l) candidates — O(log l)
+rounds independent of k (Theorem 2.4).
+
+Hardening (DESIGN.md Section 2): the paper's prune is Monte Carlo.  We spend
+one extra psum to *verify* that at least ``l`` elements survive; if not (the
+<= 2/l^2 tail event), the prune is skipped via a mask select and the algorithm
+degrades to the un-pruned O(log(k l)) variant — the implementation is
+therefore Las Vegas: always correct, fast w.h.p.
+
+Collective cost: one all_gather of ``ceil(12 ln l)`` scalars per shard (the
+paper's sampling round, Step 4) + one scalar psum (verification).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# Paper constants (Lemma 2.3): mu = SAMPLE_C * log(l) samples per machine;
+# radius index RADIUS_C * log(l) = (1 + sqrt(0.5)) * SAMPLE_C rounded up.
+SAMPLE_C = 12
+RADIUS_C = 21
+
+
+class PruneResult(NamedTuple):
+    valid: jax.Array          # (B, l) bool — survivor mask incl. finiteness
+    radius: jax.Array         # (B,)   prune radius actually applied (+inf if skipped)
+    survivors: jax.Array      # (B,)   int32 global survivor count
+    applied: jax.Array        # (B,)   bool — False if verification rejected r
+
+
+def sample_count(l: int) -> int:
+    """``ceil(12 ln l)`` — per-machine samples (Algorithm 2, Step 3)."""
+    return max(1, math.ceil(SAMPLE_C * math.log(max(l, 2))))
+
+
+def radius_index(l: int) -> int:
+    """``ceil(21 ln l)`` — 1-based index of r in the sorted sample (Step 5)."""
+    return max(1, math.ceil(RADIUS_C * math.log(max(l, 2))))
+
+
+def sample_prune(
+    d: jax.Array,
+    key: jax.Array,
+    l: jax.Array | int,
+    *,
+    axis_name: str,
+) -> PruneResult:
+    """Compute the Algorithm 2 survivor mask for per-shard distances ``d``.
+
+    ``d`` has shape ``(B, L)`` where ``L`` is the static local buffer size
+    (the paper's "exactly l points per machine after sentinel padding");
+    ``+inf`` entries are the paper's fake sentinel points.  ``l`` is the
+    runtime neighbor count, ``l <= L`` (typically ``l == L``).
+
+    Must run inside a shard_map context binding ``axis_name``.
+    """
+    B, L = d.shape
+    s = sample_count(L)
+    r_idx = radius_index(L)
+
+    # Step 3: independent uniform samples *with replacement* from the local
+    # buffer (sentinels included, exactly as the paper states — the analysis
+    # relies on every machine contributing the same sample count).
+    shard_key = jax.random.fold_in(key, lax.axis_index(axis_name))
+    idx = jax.random.randint(shard_key, (B, s), 0, L)
+    local_samples = jnp.take_along_axis(d, idx, axis=-1)          # (B, s)
+
+    # Step 4: one gather round — s scalars per shard on the wire.
+    gathered = lax.all_gather(local_samples, axis_name)           # (k, B, s)
+    k = gathered.shape[0]
+    pool = jnp.moveaxis(gathered, 0, 1).reshape(B, k * s)
+
+    # Step 5: replicated sort (local compute — free in the k-machine model),
+    # radius = element at (1-based) index 21 log l, clamped to the pool.
+    pool_sorted = jnp.sort(pool, axis=-1)
+    r = pool_sorted[:, min(r_idx, k * s) - 1]                     # (B,)
+
+    # Step 7: survivors are finite points within radius r.
+    finite = jnp.isfinite(d)
+    pruned = finite & (d <= r[..., None])
+
+    # Verification psum (our Las Vegas hardening): the prune may only be
+    # applied if at least l elements survive globally, otherwise the true
+    # l-NN set could have been cut.
+    l_arr = jnp.broadcast_to(jnp.asarray(l, jnp.int32), (B,))
+    local_cnts = jnp.stack(
+        [jnp.sum(pruned.astype(jnp.int32), axis=-1),
+         jnp.sum(finite.astype(jnp.int32), axis=-1)], axis=-1)
+    cnts = lax.psum(local_cnts, axis_name)                        # (B, 2)
+    cnt, finite_cnt = cnts[..., 0], cnts[..., 1]
+    ok = cnt >= l_arr
+
+    valid = jnp.where(ok[..., None], pruned, finite)
+    survivors = jnp.where(ok, cnt, finite_cnt)
+    from repro.parallel.collectives import replicate
+    radius = replicate(jnp.where(ok, r, jnp.inf), axis_name)
+    return PruneResult(valid=valid, radius=radius, survivors=survivors,
+                       applied=ok)

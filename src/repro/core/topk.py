@@ -1,0 +1,139 @@
+"""Distributed top-k over a model-sharded axis — the LM-serving face of the paper.
+
+At decode time the vocabulary logits live sharded over the `model` mesh axis
+(up to 256206 / 16 per shard for the assigned architectures).  Top-k sampling
+classically all-gathers the vocab row; that is exactly the paper's "simple
+method" and costs O(V) bytes per token.  This module instead runs the paper's
+pipeline on negated logits:
+
+  local lax.top_k  ->  (optional sample-prune)  ->  Algorithm 1 selection
+  ->  pack the k winners with one O(k)-sized psum
+
+so the wire cost per token is O(k + log k x B) scalars instead of O(V).
+Both methods are exposed; `benchmarks/bench_topk.py` maps their crossover
+(gather wins at tiny k by collective-launch latency, selection wins as k or
+the candidate pool grows — the Fig. 2 story at the sampler level).
+
+All functions run inside shard_map over ``axis_name`` and assume the local
+logits block is the ``axis_index``-th contiguous chunk of the vocab.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import knn as knn_mod
+from repro.core.selection import select_l_smallest, selected_mask
+
+
+class TopKResult(NamedTuple):
+    values: jax.Array       # (B, k) replicated top-k logits, descending
+    indices: jax.Array      # (B, k) replicated global vocab ids
+    iterations: jax.Array   # () selection iterations (0 for gather method)
+
+
+def _global_ids(local_v: int, axis_name: str) -> jax.Array:
+    start = lax.axis_index(axis_name) * local_v
+    return (start + jnp.arange(local_v, dtype=jnp.int32))
+
+
+def distributed_topk(
+    logits: jax.Array,
+    k: int,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    method: str = "selection",
+    num_pivots: int = 1,
+) -> TopKResult:
+    """Top-k largest over the sharded last axis of ``logits`` (B, V_local).
+
+    method="selection": the paper's algorithm (negated logits are distances).
+    method="gather":    the simple-method baseline (all_gather k per shard).
+    Results are replicated and sorted descending by value.
+    """
+    B, v_local = logits.shape
+    gid = jnp.broadcast_to(_global_ids(v_local, axis_name)[None], (B, v_local))
+    neg = -logits.astype(jnp.float32)
+
+    # Step-2 analogue: only the local top-k can be global winners.
+    d, ids = knn_mod.local_top_l(neg, gid, k)
+
+    if method == "gather":
+        from repro.parallel.collectives import replicate
+        gd = lax.all_gather(d, axis_name)                    # (kk, B, k)
+        gi = lax.all_gather(ids, axis_name)
+        kk = gd.shape[0]
+        flat_d = jnp.moveaxis(gd, 0, 1).reshape(B, kk * k)
+        flat_i = jnp.moveaxis(gi, 0, 1).reshape(B, kk * k)
+        top_neg, idx = lax.top_k(-flat_d, k)
+        return TopKResult(
+            values=replicate(top_neg, axis_name),
+            indices=replicate(jnp.take_along_axis(flat_i, idx, axis=-1),
+                              axis_name),
+            iterations=jnp.zeros((), jnp.int32))
+
+    if method != "selection":
+        raise ValueError(f"unknown method {method!r}")
+
+    finite = jnp.isfinite(d)
+    sel = select_l_smallest(d, ids, k, key, axis_name=axis_name,
+                            valid=finite, num_pivots=num_pivots)
+    mask = selected_mask(d, ids, sel, valid=finite)
+    dists, out_ids = knn_mod.gather_selected(d, ids, mask, k,
+                                             axis_name=axis_name)
+    # Ascending negated-logit order == descending logit order after a local
+    # sort of the k replicated winners (k is small; local compute is free).
+    order = jnp.argsort(dists, axis=-1)
+    vals = -jnp.take_along_axis(dists, order, axis=-1)
+    out_ids = jnp.take_along_axis(out_ids, order, axis=-1)
+    return TopKResult(values=vals, indices=out_ids,
+                      iterations=sel.iterations)
+
+
+def topk_sample(
+    logits: jax.Array,
+    k: int,
+    temperature: float,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    method: str = "selection",
+    num_pivots: int = 1,
+) -> jax.Array:
+    """Top-k temperature sampling over sharded logits -> (B,) token ids.
+
+    The categorical draw happens on the replicated k winners with a shared
+    key, so every shard emits the identical token (SPMD-coherent sampling).
+    """
+    res = distributed_topk(logits, k, jax.random.fold_in(key, 0),
+                           axis_name=axis_name, method=method,
+                           num_pivots=num_pivots)
+    scaled = res.values / jnp.maximum(temperature, 1e-6)
+    choice = jax.random.categorical(jax.random.fold_in(key, 1), scaled,
+                                    axis=-1)
+    return jnp.take_along_axis(res.indices, choice[..., None], axis=-1)[..., 0]
+
+
+def greedy_sample(logits: jax.Array, *, axis_name: str) -> jax.Array:
+    """Argmax over the sharded vocab — one (value, id) psum-max pair.
+
+    Used as the k=1 fast path; costs a single 2-scalar collective.
+    """
+    B, v_local = logits.shape
+    gid = _global_ids(v_local, axis_name)
+    loc_v = jnp.max(logits, axis=-1)
+    loc_i = gid[jnp.argmax(logits, axis=-1)]
+    all_v = lax.all_gather(loc_v, axis_name)                 # (kk, B)
+    all_i = lax.all_gather(loc_i, axis_name)
+    # break value ties toward the smaller global id, matching lax.top_k on
+    # the gathered vector
+    best_v = jnp.max(all_v, axis=0)
+    tie = all_v == best_v[None]
+    best_i = jnp.min(jnp.where(tie, all_i, 2**31 - 1), axis=0)
+    from repro.parallel.collectives import replicate
+    return replicate(best_i, axis_name)

@@ -1,0 +1,63 @@
+"""Deterministic synthetic data: token streams (LM) and point clouds (kNN).
+
+The LM stream is a learnable order-2 Markov chain over the vocab (seeded,
+reproducible across restarts — resuming from a checkpoint at step s
+regenerates exactly the batches after s, which the fault-tolerance tests
+rely on).  The kNN point generator mirrors the paper's experiment
+(Section 3: uniform points in [0, 2^32)), generalized to d dimensions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class MarkovTokens:
+    """Order-2 Markov token stream: p(x_t | x_{t-1}, x_{t-2}) concentrated
+    on a few successors, so a small LM's loss falls quickly below the
+    uniform baseline (the train-smoke criterion)."""
+
+    def __init__(self, vocab: int, seed: int = 0, branch: int = 4,
+                 n_contexts: int = 61):
+        self.vocab = vocab
+        self.branch = branch
+        self.n_contexts = n_contexts
+        rng = np.random.default_rng(seed)
+        # successor table: for each (prev mixed hash) a few allowed tokens
+        self._succ = rng.integers(0, vocab, size=(n_contexts, branch),
+                                  dtype=np.int64)
+
+    def batch(self, step: int, batch: int, seq_len: int):
+        """Returns (tokens, labels) int32 of shape (batch, seq_len)."""
+        rng = np.random.default_rng((step << 20) + 17)
+        out = np.empty((batch, seq_len + 1), np.int64)
+        out[:, 0] = rng.integers(0, self.vocab, batch)
+        out[:, 1] = rng.integers(0, self.vocab, batch)
+        choices = rng.integers(0, self.branch, size=(batch, seq_len + 1))
+        for t in range(2, seq_len + 1):
+            h = (out[:, t - 1] * 31 + out[:, t - 2]) % self.n_contexts
+            out[:, t] = self._succ[h, choices[:, t]]
+        tokens = out[:, :-1].astype(np.int32)
+        labels = out[:, 1:].astype(np.int32)
+        return tokens, labels
+
+    @property
+    def entropy_floor(self) -> float:
+        """Ideal CE of the stream (log branch) — the learnability target."""
+        return float(np.log(self.branch))
+
+
+def uniform_points(n: int, dim: int, seed: int = 0,
+                   high: float = 2**32 - 1) -> np.ndarray:
+    """The paper's dataset: n points uniform in [0, high)^dim (f32)."""
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, dim)) * high).astype(np.float32)
+
+
+def gaussian_clusters(n: int, dim: int, num_classes: int, seed: int = 0):
+    """Labeled clusters for the kNN classification example."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(scale=8.0, size=(num_classes, dim))
+    labels = rng.integers(0, num_classes, n)
+    pts = centers[labels] + rng.normal(size=(n, dim))
+    return pts.astype(np.float32), labels.astype(np.int32)

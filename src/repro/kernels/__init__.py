@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the l-NN compute hot spots.
+
+Each kernel ships three artifacts (per the repo contract):
+  <name>.py -- pl.pallas_call + BlockSpec VMEM tiling (TPU target,
+               validated in interpret mode on CPU);
+  ops.py    -- jitted shape-general wrapper with padding + fallback routing;
+  ref.py    -- the pure-jnp oracle every kernel must match.
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

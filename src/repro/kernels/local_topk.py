@@ -1,0 +1,86 @@
+"""Standalone local top-l (smallest) — Pallas TPU kernel.
+
+The per-machine reduction of Algorithm 2, Step 2, for callers that already
+hold a distance/score matrix in HBM: (B, m) -> l smallest per row with
+indices.  Grid is (B/bb, m/bm) with the point axis iterated sequentially;
+the running (bb, l) top buffer lives in VMEM scratch and uses the same
+guarded l-step extraction merge as `distance_topk.py` (see there for the
+cost model — here the merge IS the kernel, so this pays off vs lax.top_k
+only through the guarded skip and the single HBM read).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.distance_topk import MAX_L, _INT_MAX, _merge_tile
+
+DEFAULT_BLOCK_B = 8
+DEFAULT_BLOCK_M = 512
+
+
+def _kernel(x_ref, out_v_ref, out_i_ref, top_v_ref, top_i_ref, *,
+            nj: int, l: int, block_m: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        top_v_ref[...] = jnp.full_like(top_v_ref, jnp.inf)
+        top_i_ref[...] = jnp.full_like(top_i_ref, _INT_MAX)
+
+    x = x_ref[...].astype(jnp.float32)
+    ids = j * block_m + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    kth = top_v_ref[:, l - 1]
+    worth = jnp.any(jnp.min(x, axis=1) < kth)
+
+    @pl.when(worth)
+    def _do_merge():
+        nv, ni = _merge_tile(x, ids, top_v_ref[...], top_i_ref[...], l)
+        top_v_ref[...] = nv
+        top_i_ref[...] = ni
+
+    @pl.when(j == nj - 1)
+    def _write():
+        out_v_ref[...] = top_v_ref[...]
+        out_i_ref[...] = top_i_ref[...]
+
+
+def local_topk(
+    values: jax.Array,
+    l: int,
+    *,
+    block_b: int = DEFAULT_BLOCK_B,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = False,
+):
+    """(B, m) -> ((B, l) ascending values, (B, l) indices), l smallest."""
+    B, m = values.shape
+    assert l <= MAX_L, l
+    assert B % block_b == 0 and m % block_m == 0
+    nb, nj = B // block_b, m // block_m
+
+    kern = functools.partial(_kernel, nj=nj, l=l, block_m=block_m)
+    return pl.pallas_call(
+        kern,
+        grid=(nb, nj),
+        in_specs=[pl.BlockSpec((block_b, block_m), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_b, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_b, l), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, l), jnp.float32),
+            jax.ShapeDtypeStruct((B, l), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, l), jnp.float32),
+            pltpu.VMEM((block_b, l), jnp.int32),
+        ],
+        interpret=interpret,
+    )(values)

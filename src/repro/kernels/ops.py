@@ -1,0 +1,128 @@
+"""Jitted, shape-general entry points for the Pallas kernels.
+
+Responsibilities:
+  * pad arbitrary shapes up to block multiples (+inf-padding points so padded
+    rows never win a top-l slot), slice results back;
+  * route to the jnp oracle when a shape is outside a kernel's
+    specialization envelope (l > MAX_L, VMEM budget exceeded) or when the
+    backend has no Mosaic support (this CPU container -> interpret mode for
+    tests, oracle for performance paths);
+  * expose one flag (`REPRO_KERNEL_MODE`) so the whole framework can be
+    flipped between kernel / oracle / interpret for A-B testing.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels import l2_distance as _l2
+from repro.kernels import distance_topk as _dtk
+from repro.kernels import local_topk as _ltk
+
+# kernel  : pl.pallas_call compiled for the backend (TPU target)
+# interpret: kernel body executed in Python (CPU-correctness mode)
+# oracle  : pure-jnp reference (fast on CPU, also the fallback)
+_MODE = os.environ.get("REPRO_KERNEL_MODE", "auto")
+
+# v5e VMEM is ~128 MiB/core but Mosaic's practical per-kernel budget is far
+# smaller; stay well under 16 MiB of live scratch + operands.
+_VMEM_BUDGET = 12 * 2**20
+
+
+def _mode() -> str:
+    if _MODE != "auto":
+        return _MODE
+    return "kernel" if jax.default_backend() == "tpu" else "oracle"
+
+
+def _pad_to(x, mult, axis, value):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_m", "block_k",
+                                              "interpret"))
+def _l2_padded(q, p, block_b, block_m, block_k, interpret):
+    B, m = q.shape[0], p.shape[0]
+    qp = _pad_to(_pad_to(q, block_b, 0, 0.0), block_k, 1, 0.0)
+    pp = _pad_to(_pad_to(p, block_m, 0, 0.0), block_k, 1, 0.0)
+    out = _l2.l2_distance(qp, pp, block_b=block_b, block_m=block_m,
+                          block_k=block_k, interpret=interpret)
+    return out[:B, :m]
+
+
+def l2_distance(queries, points, *, block_b=None, block_m=None, block_k=None):
+    """General-shape squared-L2 distance matrix (see kernels/l2_distance.py)."""
+    mode = _mode()
+    if mode == "oracle":
+        return ref.l2_distance_ref(queries, points)
+    bb = block_b or _l2.DEFAULT_BLOCK_B
+    bm = block_m or _l2.DEFAULT_BLOCK_M
+    bk = block_k or _l2.DEFAULT_BLOCK_K
+    return _l2_padded(queries, points, bb, bm, bk, mode == "interpret")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l", "block_b", "block_m", "block_k",
+                                    "interpret"))
+def _dtk_padded(q, p, l, block_b, block_m, block_k, interpret):
+    B, m = q.shape[0], p.shape[0]
+    qp = _pad_to(_pad_to(q, block_b, 0, 0.0), block_k, 1, 0.0)
+    # Padded point rows are zero-filled; the kernel itself excludes ids >= m
+    # from the top-l (a zero row's distance ||q||^2 can be competitive, so
+    # post-hoc masking would lose genuine winners).
+    pp = _pad_to(_pad_to(p, block_m, 0, 0.0), block_k, 1, 0.0)
+    v, i = _dtk.distance_topk(qp, pp, l, block_b=block_b, block_m=block_m,
+                              block_k=block_k, m_real=m, interpret=interpret)
+    i = jnp.where(jnp.isfinite(v), i, 2**31 - 1)
+    return v[:B], i[:B]
+
+
+def distance_topk(queries, points, l, *, block_b=None, block_m=None,
+                  block_k=None):
+    """General-shape fused distance+top-l (see kernels/distance_topk.py)."""
+    mode = _mode()
+    bb = block_b or _dtk.DEFAULT_BLOCK_B
+    bm = block_m or _dtk.DEFAULT_BLOCK_M
+    bk = block_k or 512
+    d = queries.shape[-1]
+    vmem = 4 * (bb * bk + bm * bk + bb * bm + 2 * bb * l) + 8 * bm
+    if mode == "oracle" or l > _dtk.MAX_L or vmem > _VMEM_BUDGET or d < 1:
+        return ref.distance_topk_ref(queries, points, l)
+    return _dtk_padded(queries, points, l, bb, bm, min(bk, _ceil_mult(d, 128)),
+                       mode == "interpret")
+
+
+def _ceil_mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l", "block_b", "block_m", "interpret"))
+def _ltk_padded(x, l, block_b, block_m, interpret):
+    B, m = x.shape
+    xp = _pad_to(_pad_to(x, block_b, 0, jnp.inf), block_m, 1, jnp.inf)
+    v, i = _ltk.local_topk(xp, l, block_b=block_b, block_m=block_m,
+                           interpret=interpret)
+    i = jnp.where(i < m, i, 2**31 - 1)
+    return v[:B], i[:B]
+
+
+def local_topk(values, l, *, block_b=None, block_m=None):
+    """General-shape l-smallest per row (see kernels/local_topk.py)."""
+    mode = _mode()
+    if mode == "oracle" or l > _dtk.MAX_L:
+        return ref.local_topk_ref(values, l)
+    bb = block_b or _ltk.DEFAULT_BLOCK_B
+    bm = block_m or _ltk.DEFAULT_BLOCK_M
+    return _ltk_padded(values, l, bb, bm, mode == "interpret")

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` is the semantic ground truth: the kernels must match these
+within dtype tolerance for every shape/dtype in the sweep
+(`tests/test_kernels.py`).  These are also the CPU fallbacks used by
+`ops.py` when a shape violates a kernel's specialization envelope.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def l2_distance_ref(queries: jax.Array, points: jax.Array) -> jax.Array:
+    """(B, d), (m, d) -> (B, m) squared L2 distances, f32 accumulation.
+
+    Matches the kernel's contraction order: d = |q|^2 - 2 q.p + |p|^2,
+    clamped at zero (the expansion can go epsilon-negative in finite
+    precision; distances are non-negative by definition).
+    """
+    q = queries.astype(jnp.float32)
+    p = points.astype(jnp.float32)
+    q2 = jnp.sum(q * q, axis=-1, keepdims=True)
+    p2 = jnp.sum(p * p, axis=-1)
+    qp = q @ p.T
+    return jnp.maximum(q2 - 2.0 * qp + p2[None, :], 0.0)
+
+
+def local_topk_ref(values: jax.Array, l: int):
+    """(B, m) -> ((B, l) ascending values, (B, l) indices): l smallest.
+
+    Ties broken toward the smaller index (lax.top_k's stable order on the
+    negated input).
+    """
+    neg_top, idx = lax.top_k(-values.astype(jnp.float32), l)
+    return -neg_top, idx.astype(jnp.int32)
+
+
+def distance_topk_ref(queries: jax.Array, points: jax.Array, l: int):
+    """Fused oracle: l smallest squared distances + point indices."""
+    d = l2_distance_ref(queries, points)
+    return local_topk_ref(d, l)

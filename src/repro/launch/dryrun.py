@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+THE proof of distribution coherence without hardware (deliverable e):
+for each assigned architecture and each of its input shapes, this script
+
+  1. builds the production mesh — (16,16) single pod and (2,16,16)
+     multi-pod — out of 512 placeholder host devices (the XLA_FLAGS line
+     above MUST precede every jax import, hence the module layout);
+  2. constructs ShapeDtypeStruct stand-ins for params / optimizer state /
+     caches / batch (creator.ShapeCreator — zero allocation even for the
+     398B-parameter jamba config);
+  3. jits the real step function (train_step with grad-accum scan, prefill,
+     or serve_step with the paper's distributed-selection sampler),
+     .lower()s and .compile()s it;
+  4. records compiled.memory_analysis() (fits-on-device proof),
+     cost_analysis() FLOPs/bytes, and the parsed collective wire bytes
+     (launch/hlo_analysis.py) into one JSON per cell for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --results-dir results/
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as configs
+from repro.launch import hlo_analysis, hlo_counter
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, shapes_for, skipped_shapes_for
+from repro.models.config import ALL_SHAPES
+from repro.models.sharding import Rules, use_rules
+from repro.optim import AdamW
+from repro.runtime import TrainConfig, make_train_step
+
+ARCHS = [
+    "qwen2.5-14b", "qwen1.5-4b", "qwen2-0.5b", "yi-6b",
+    "phi3.5-moe-42b-a6.6b", "granite-moe-3b-a800m", "jamba-1.5-large-398b",
+    "pixtral-12b", "seamless-m4t-large-v2", "xlstm-125m",
+]
+
+
+def rules_for_shape(shape, cfg=None, model_ways: int = 16):
+    """Per-shape sharding-rule overrides (DESIGN.md Section 5)."""
+    if shape.name == "long_500k":
+        # batch=1: unshardable; shard the KV/state sequence axis instead
+        # (sequence-parallel decode with flash-decode softmax combine).
+        return Rules(batch=None, kv_seq="data")
+    if shape.kind == "decode" and cfg is not None:
+        # flash-decode (EXPERIMENTS.md Section Perf, qwen2.5 iteration 1):
+        # when the KV heads cannot tile the model axis a head-sharded cache
+        # degenerates to fully replicated (26x the bytes at qwen2.5 scale);
+        # shard the cache SEQUENCE over `model` instead — each shard scores
+        # its slice and GSPMD combines the partial softmaxes.  Archs whose
+        # (physical) KV heads DO tile the axis (seamless 16, qwen1.5 padded
+        # to 32) keep classic head-parallel decode; so does the hybrid
+        # (jamba): its 1:7-minority attention doesn't repay trading the
+        # projections' head parallelism away (measured regression,
+        # EXPERIMENTS.md Section Perf).
+        flash = (cfg.n_kv_phys % model_ways != 0
+                 and cfg.family != "hybrid")
+        if flash:
+            return Rules(kv_seq="model", heads=None)
+    return Rules()
+
+
+def grad_accum_for(cfg, shape, mesh) -> int:
+    """Microbatch count: keep per-microbatch tokens bounded so activations
+    (and the vocab-sharded logits) fit; at least one sequence per data
+    shard."""
+    data_ways = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.shape:
+            data_ways *= mesh.shape[ax]
+    max_accum = max(1, shape.global_batch // data_ways)
+    target = 8 if cfg.d_model <= 6000 else 16
+    return min(target, max_accum)
+
+
+def build_cell(api, shape, mesh, *, sampler: str, num_pivots: int,
+               grad_accum: int | None = None):
+    """Returns (fn, example_args, donate) for the cell's step function."""
+    cfg = api.cfg
+    params = api.param_shapes(mesh, dtype=jnp.bfloat16)
+    inputs = api.input_specs(shape, mesh)
+
+    if shape.kind == "train":
+        # >100B-parameter configs only fit the pod with bf16 moments and a
+        # bf16 accumulation buffer (EXPERIMENTS.md Section Perf, jamba
+        # iteration 4); smaller models keep full f32 state.
+        big = cfg.param_count() > 100e9
+        optimizer = AdamW(moment_dtype=jnp.bfloat16 if big else jnp.float32)
+        ga = grad_accum or grad_accum_for(cfg, shape, mesh)
+        tcfg = TrainConfig(
+            grad_accum=ga, total_steps=10000,
+            accum_dtype=jnp.bfloat16 if big else jnp.float32)
+        step = make_train_step(api, tcfg, optimizer)
+        opt_state = (optimizer.state_shapes(params),
+                     None,
+                     jax.ShapeDtypeStruct((), jnp.int32))
+        fn = lambda p, o, b: step(p, o, b)
+        return fn, (params, opt_state, inputs), (0, 1)
+
+    if shape.kind == "prefill":
+        cache = api.cache_shapes(shape.global_batch, shape.seq_len,
+                                 mesh=mesh)
+        fn = lambda p, b, c: api.prefill(p, b, c)
+        return fn, (params, inputs, cache), (2,)
+
+    # decode: one new token against a seq_len-deep cache, sampled with the
+    # paper's distributed top-k over the vocab shards.
+    cache = api.cache_shapes(shape.global_batch, shape.seq_len, mesh=mesh)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    fn = lambda p, t, c, k: api.serve_step(
+        p, t, c, k, mesh=mesh, top_k=64, sampler=sampler,
+        num_pivots=num_pivots)
+    return fn, (params, inputs["token"], cache, key), (2,)
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch
+
+
+def run_cell(arch: str, shape, multi_pod: bool, *, sampler="selection",
+             num_pivots=1, grad_accum=None, results_dir=None) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cell_id = f"{arch}|{shape.name}|{mesh_name}"
+    cfg = configs.get(arch)
+    api = build_model(cfg)
+
+    if shape not in shapes_for(cfg):
+        rec = {"cell": cell_id, "status": "SKIP",
+               "reason": "full-attention arch: long_500k requires a "
+                         "sub-quadratic backbone (DESIGN.md Section 4)"}
+        _save(rec, results_dir, cell_id)
+        print(json.dumps(rec))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.perf_counter()
+    try:
+        model_ways = dict(mesh.shape).get("model", 1)
+        with jax.set_mesh(mesh), use_rules(
+                rules_for_shape(shape, cfg, model_ways=model_ways)):
+            fn, args, donate = build_cell(
+                api, shape, mesh, sampler=sampler, num_pivots=num_pivots,
+                grad_accum=grad_accum)
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            # trip-aware roofline (hlo_counter); cost_analysis kept as the
+            # body-once secondary signal.
+            roof = hlo_counter.roofline_from_text(
+                compiled.as_text(), chips,
+                model_flops=model_flops(cfg, shape))
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            rec = {
+                "cell": cell_id,
+                "status": "OK",
+                "chips": chips,
+                "lower_s": round(t_lower, 1),
+                "compile_s": round(t_compile, 1),
+                "memory": {
+                    "argument_bytes_per_device": getattr(
+                        mem, "argument_size_in_bytes", None),
+                    "output_bytes_per_device": getattr(
+                        mem, "output_size_in_bytes", None),
+                    "temp_bytes_per_device": getattr(
+                        mem, "temp_size_in_bytes", None),
+                    "peak_ok_16gb": _peak_ok(mem),
+                },
+                "roofline": roof.summary(),
+                "cost_analysis_body_once": {
+                    "flops": float(cost.get("flops", 0.0)),
+                    "bytes": float(cost.get("bytes accessed", 0.0)),
+                },
+            }
+    except Exception as e:  # a failing cell is a bug — record loudly
+        rec = {"cell": cell_id, "status": "FAIL",
+               "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    _save(rec, results_dir, cell_id)
+    print(json.dumps({k: v for k, v in rec.items() if k != "trace"}))
+    return rec
+
+
+def _peak_ok(mem) -> bool | None:
+    try:
+        tot = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+               + mem.temp_size_in_bytes)
+        return bool(tot < 16 * 2**30)
+    except Exception:
+        return None
+
+
+def _save(rec, results_dir, cell_id):
+    if results_dir:
+        os.makedirs(results_dir, exist_ok=True)
+        safe = cell_id.replace("|", "__").replace(".", "_")
+        with open(os.path.join(results_dir, f"{safe}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    choices=ARCHS + [None])
+    ap.add_argument("--shape", action="append", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sampler", default="selection",
+                    choices=["selection", "gather"])
+    ap.add_argument("--num-pivots", type=int, default=1)
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--results-dir", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = args.arch or (ARCHS if args.all else ["qwen2-0.5b"])
+    shape_names = args.shape or [s.name for s in ALL_SHAPES]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for s in ALL_SHAPES:
+            if s.name not in shape_names:
+                continue
+            for mp in meshes:
+                run_cell(arch, s, mp, sampler=args.sampler,
+                         num_pivots=args.num_pivots,
+                         grad_accum=args.grad_accum,
+                         results_dir=args.results_dir)
+
+
+if __name__ == "__main__":
+    main()

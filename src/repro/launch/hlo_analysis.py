@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch x shape x mesh) cell — EXPERIMENTS.md Section Roofline.
+CONVENTION (calibrated against a sharded matmul, see EXPERIMENTS.md
+Section Dry-run): compiled.cost_analysis() on an SPMD module reports
+**per-device** FLOPs (2 per MAC) and bytes.  All three terms are therefore
+per-device seconds — numerically identical to the prompt's
+global/(chips x rate) formulation since global = per-device x chips under
+SPMD:
+
+  compute    = HLO_FLOPs_per_dev / 197e12 bf16 FLOP/s          [v5e MXU]
+  memory     = HLO_bytes_per_dev / 819e9 B/s                   [v5e HBM]
+  collective = wire_bytes_per_dev / 50e9 B/s                   [v5e ICI]
+
+Collective wire bytes are NOT in cost_analysis: we parse the
+post-partitioning module text (per-device shapes) and apply ring-algorithm
+wire factors per op:
+
+  all-reduce       2 (n-1)/n x bytes   (reduce-scatter + all-gather phases)
+  all-gather       (n-1)/n x result
+  reduce-scatter   (n-1) x result      (operand = n x result)
+  all-to-all       (n-1)/n x bytes
+  collective-permute  1 x bytes
+
+Known limitation (recorded in EXPERIMENTS.md): collectives inside while
+loops (the selection sampler's data-dependent rounds) are counted once —
+the static per-iteration cost; the dynamic round count is measured by the
+round-complexity benchmarks instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip, TPU v5e
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per link (1 active link/chip assumed)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.I)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, kind: str, nbytes: float):
+        self.wire_bytes += nbytes
+        self.counts[kind] = self.counts.get(kind, 0) + 1
+
+
+def collective_wire_bytes(hlo_text: str) -> CollectiveStats:
+    """Parse a post-SPMD HLO module; returns fleet-global wire bytes."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(3).lower()
+        result_type = m.group(1) if m.group(1) else m.group(2)
+        nbytes = _shape_bytes(result_type)
+        if nbytes == 0:
+            continue
+        # group size n
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = max(1, len([x for x in g.group(1).split(",") if x.strip()]))
+        else:
+            g2 = _GROUPS_ALT_RE.search(line)
+            n = int(g2.group(2)) if g2 else 2
+        if n <= 1:
+            continue
+        factor = {
+            "all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "reduce-scatter": float(n - 1),  # operand = n x result
+            "all-to-all": (n - 1) / n,
+            "collective-permute": 1.0,
+        }[kind]
+        stats.add(kind, factor * nbytes)  # per-device wire bytes
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    chips: int
+    model_flops: float = 0.0
+    collective_counts: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS          # per-device numbers
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs, both per-device: > 1 means the compiled
+        program does *less* arithmetic than the 6ND estimate (e.g. GQA
+        decode), < 1 means remat/padding/dispatch overhead."""
+        if self.model_flops and self.flops:
+            return (self.model_flops / self.chips) / self.flops
+        return None
+
+    def summary(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           model_flops: float = 0.0) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    stats = collective_wire_bytes(text)
+    return Roofline(flops=flops, hbm_bytes=hbm, wire_bytes=stats.wire_bytes,
+                    chips=chips, model_flops=model_flops,
+                    collective_counts=stats.counts)

@@ -1,0 +1,304 @@
+"""Trip-aware HLO cost model.
+
+XLA's `compiled.cost_analysis()` counts every while-loop body ONCE
+(verified against a scan-vs-unroll control, EXPERIMENTS.md Section Dry-run)
+— useless for scan-over-layers programs where >95% of work sits inside
+nested loops (layer scan x grad-accum scan).  This module re-derives
+trip-weighted totals from the post-optimization HLO text:
+
+  1. split the module into computations;
+  2. per computation, count dot FLOPs (2 x result x contraction — the MXU
+     convention), top-level HBM bytes (operands + result of scheduled ops;
+     fusion bodies are register-resident), and collective wire bytes
+     (ring-algorithm factors, hlo_analysis.collective_wire_bytes);
+  3. build the call multigraph — while bodies weighted by their
+     `known_trip_count` annotation, fusions/calls/conditionals by 1 —
+     and propagate multipliers from ENTRY;
+  4. totals = sum_comp multiplier(comp) x local(comp).
+
+Shapes in a post-SPMD module are per-device, so all outputs are per-device
+quantities (matching the roofline convention in hlo_analysis.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+from repro.launch import hlo_analysis as ha
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_COMP_START2 = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_TYPE = re.compile(r"^(\([^)]*\)|[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*(.*)$")
+_OPNAME = re.compile(r"^([a-z][\w\-]*)\(")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+_CALLS = re.compile(r"(?:calls=|to_apply=|body=)%?([\w.\-]+)")
+_COND_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIPS = re.compile(r'known_trip_count[^\d]*(\d+)')
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMS = re.compile(r"\[([\d,]*)\]")
+
+
+def _dims_of(type_str: str):
+    m = _DIMS.search(type_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(1).split(",") if x]
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: float = 0.0
+    wire_counts: dict = dataclasses.field(default_factory=dict)
+    edges: list = dataclasses.field(default_factory=list)  # (callee, mult)
+    is_fusion_body: bool = False
+    root_op: str = ""
+    # fusion call sites: (callee, result_bytes, [operand_bytes]) — resolved
+    # after the whole module is parsed (the callee's root op decides the
+    # traffic model: a dus-rooted fusion only writes its update window).
+    fusion_sites: list = dataclasses.field(default_factory=list)
+
+
+def _parse(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    symbols: dict[str, str] = {}
+    entry: str | None = None
+    fusion_callees: list[str] = []
+
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if cur is None:
+            m = _COMP_START2.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group(2)
+                cur = comps.setdefault(name, _Comp(name))
+                symbols = {}
+                if m.group(1):
+                    entry = name
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        mi = _INSTR.match(line)
+        if not mi:
+            continue
+        res_name, rest = mi.group(1), mi.group(2)
+        mt = _TYPE.match(rest)
+        if not mt:
+            continue
+        type_str, op_rest = mt.group(1), mt.group(2)
+        symbols[res_name] = type_str
+        mo = _OPNAME.match(op_rest)
+        opname = mo.group(1) if mo else ""
+        if line.lstrip().startswith("ROOT"):
+            cur.root_op = opname
+
+        # --- call edges -------------------------------------------------
+        if opname == "while":
+            trips = 1
+            t = _TRIPS.search(line)
+            if t:
+                trips = int(t.group(1))
+            for what in ("body", "condition"):
+                mm = re.search(what + r"=%?([\w.\-]+)", line)
+                if mm:
+                    cur.edges.append((mm.group(1),
+                                      trips if what == "body" else trips + 1))
+        elif opname == "conditional":
+            mb = _COND_BRANCHES.search(line)
+            if mb:
+                for b in mb.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        cur.edges.append((b, 1))
+            for mm in re.finditer(r"(?:true|false)_computation=%?([\w.\-]+)",
+                                  line):
+                cur.edges.append((mm.group(1), 1))
+        else:
+            for mm in _CALLS.finditer(line):
+                callee = mm.group(1)
+                cur.edges.append((callee, 1))
+
+        # --- flops: dots anywhere --------------------------------------
+        if opname == "dot":
+            ops = _OPERANDS.search(op_rest)
+            contract = _CONTRACT.search(line)
+            out_elems = math.prod(_dims_of(type_str)) if _dims_of(
+                type_str) else 1
+            k = 1
+            if ops and contract is not None:
+                first = ops.group(1).split(",")[0].strip().lstrip("%")
+                lhs_type = symbols.get(first, "")
+                lhs_dims = _dims_of(lhs_type)
+                idxs = [int(x) for x in contract.group(1).split(",") if x]
+                for i in idxs:
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+            cur.flops += 2.0 * out_elems * k
+        elif opname in ("convolution",):
+            # not used by this model zoo; approximate by result size
+            cur.flops += 2.0 * math.prod(_dims_of(type_str) or [1])
+
+        # --- bytes: scheduled (non-fusion-body) top-level ops -------------
+        # Aliasing/windowed ops only touch their window, and control-flow
+        # ops' operands/results alias their bodies' buffers (the bodies are
+        # counted separately x trips) — charging them at full tensor size
+        # inflated jamba's memory term ~100x (EXPERIMENTS.md, Dry-run notes).
+        if opname in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "while", "conditional", "call"):
+            pass
+        elif opname in ("dynamic-slice", "slice", "gather"):
+            cur.bytes += 2 * ha._shape_bytes(type_str)   # read + write window
+        elif opname in ("dynamic-update-slice", "scatter"):
+            ops = _OPERANDS.search(op_rest)
+            upd_bytes = 0
+            if ops:
+                names = [o.strip().lstrip("%")
+                         for o in ops.group(1).split(",")]
+                idx = 1 if opname == "dynamic-update-slice" else 2
+                if len(names) > idx and names[idx] in symbols:
+                    upd_bytes = ha._shape_bytes(symbols[names[idx]])
+            cur.bytes += 2 * upd_bytes                   # RMW of the window
+        elif opname == "fusion":
+            ops = _OPERANDS.search(op_rest)
+            operand_bytes = []
+            if ops:
+                for o in ops.group(1).split(","):
+                    o = o.strip().lstrip("%")
+                    if o in symbols:
+                        operand_bytes.append(ha._shape_bytes(symbols[o]))
+            mm = _CALLS.search(line)
+            cur.fusion_sites.append((mm.group(1) if mm else "",
+                                     ha._shape_bytes(type_str),
+                                     operand_bytes))
+        else:
+            nbytes = ha._shape_bytes(type_str)
+            ops = _OPERANDS.search(op_rest)
+            if ops:
+                for o in ops.group(1).split(","):
+                    o = o.strip().lstrip("%")
+                    if o in symbols:
+                        nbytes += ha._shape_bytes(symbols[o])
+            cur.bytes += nbytes
+
+        # --- collectives --------------------------------------------------
+        mcoll = ha._COLLECTIVE_RE.search(line)
+        if mcoll:
+            kind = mcoll.group(3).lower()
+            result_type = mcoll.group(1) if mcoll.group(1) else mcoll.group(2)
+            nbytes = ha._shape_bytes(result_type)
+            g = ha._GROUPS_RE.search(line)
+            if g:
+                n = max(1, len([x for x in g.group(1).split(",")
+                                if x.strip()]))
+            else:
+                g2 = ha._GROUPS_ALT_RE.search(line)
+                n = int(g2.group(2)) if g2 else 2
+            if n > 1 and nbytes > 0:
+                factor = {
+                    "all-reduce": 2.0 * (n - 1) / n,
+                    "all-gather": (n - 1) / n,
+                    "reduce-scatter": float(n - 1),
+                    "all-to-all": (n - 1) / n,
+                    "collective-permute": 1.0,
+                }[kind]
+                cur.wire += factor * nbytes
+                cur.wire_counts[kind] = cur.wire_counts.get(kind, 0) + 1
+
+        # fusion bodies: bytes inside are register/VMEM traffic — remember
+        # the callee name and mark after the full module is parsed (the
+        # callee's definition usually appears later in the text).
+        if opname == "fusion":
+            mm = _CALLS.search(line)
+            if mm:
+                fusion_callees.append(mm.group(1))
+
+    # second pass: mark fusion bodies (and anything they call) register-only
+    stack = list(fusion_callees)
+    seen = set()
+    while stack:
+        n = stack.pop()
+        if n in seen or n not in comps:
+            continue
+        seen.add(n)
+        comps[n].is_fusion_body = True
+        stack.extend(c for c, _ in comps[n].edges)
+
+    # third pass: resolve fusion call-site traffic by the callee's root op.
+    for comp in comps.values():
+        for callee, result_bytes, operand_bytes in comp.fusion_sites:
+            root = comps[callee].root_op if callee in comps else ""
+            big = [b for b in operand_bytes if b > 64]
+            if root in ("dynamic-update-slice", "scatter"):
+                # writes only its update window; the accumulator operand
+                # aliases the result.  The update is the smallest non-
+                # scalar operand.
+                comp.bytes += 2 * (min(big) if big else result_bytes)
+            elif root in ("dynamic-slice", "slice", "gather"):
+                comp.bytes += 2 * result_bytes
+            else:
+                comp.bytes += result_bytes + sum(operand_bytes)
+
+    comps["__entry__"] = comps.get(entry, _Comp("__missing__"))
+    return comps
+
+
+def analyze(text: str) -> dict:
+    comps = _parse(text)
+    entry = comps.pop("__entry__")
+
+    # mark fusion bodies reachable only through fusion edges
+    fusion_callees = set()
+    for c in comps.values():
+        pass
+
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry.name] = 1.0
+    # propagate in topological-ish order: iterate until fixpoint (HLO
+    # computation graphs are DAGs; bounded passes)
+    for _ in range(64):
+        changed = False
+        snapshot = dict(mult)
+        mult = defaultdict(float)
+        mult[entry.name] = 1.0
+        for name, m in snapshot.items():
+            comp = comps.get(name)
+            if comp is None:
+                continue
+            for callee, k in comp.edges:
+                mult[callee] += m * k
+        mult[entry.name] = 1.0
+        if dict(mult) == snapshot:
+            break
+
+    flops = bytes_ = wire = 0.0
+    wire_counts: dict[str, float] = defaultdict(float)
+    for name, m in mult.items():
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        flops += m * comp.flops
+        wire += m * comp.wire
+        for k, v in comp.wire_counts.items():
+            wire_counts[k] += m * v
+        if not comp.is_fusion_body:
+            bytes_ += m * comp.bytes
+    return {"flops": flops, "hbm_bytes": bytes_, "wire_bytes": wire,
+            "collective_counts": dict(wire_counts)}
+
+
+def roofline_from_text(text: str, chips: int, model_flops: float = 0.0):
+    res = analyze(text)
+    return ha.Roofline(flops=res["flops"], hbm_bytes=res["hbm_bytes"],
+                       wire_bytes=res["wire_bytes"], chips=chips,
+                       model_flops=model_flops,
+                       collective_counts=res["collective_counts"])

@@ -1,0 +1,126 @@
+"""Training driver.
+
+Single-process launcher (multi-host initialization is a
+jax.distributed.initialize call away — see README "Scaling out"):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 200 --batch 8 --seq 64 --reduced --ckpt-dir /tmp/ckpt
+
+Wires together: config registry -> ModelApi -> sharded params (debug mesh
+optional) -> synthetic Markov pipeline with prefetch -> microbatched
+train_step -> fault-tolerant loop with async checkpoints.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.checkpoint import CheckpointManager
+from repro.data import MarkovTokens, Prefetcher
+from repro.models import build_model
+from repro.models import sharding as shd
+from repro.optim import AdamW
+from repro.runtime import (MetricLogger, TrainConfig, init_opt_state,
+                           train_loop)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="family-preserving tiny config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default=None,
+                    help="e.g. '4x2' to train on a data x model debug mesh")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    api = build_model(cfg)
+
+    mesh = None
+    if args.mesh:
+        d, m = (int(x) for x in args.mesh.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def build_state():
+        params = api.init_params(jax.random.PRNGKey(args.seed))
+        if mesh is not None:
+            from jax.sharding import NamedSharding
+            specs = api.param_specs()
+            params = jax.tree.map(
+                lambda x, s: jax.device_put(
+                    x, NamedSharding(mesh, shd.divisible(s, x.shape, mesh))),
+                params, specs)
+        return params
+
+    tcfg = TrainConfig(grad_accum=args.grad_accum, peak_lr=args.lr,
+                       warmup_steps=max(args.steps // 20, 5),
+                       total_steps=args.steps,
+                       compress_grads=args.compress_grads)
+    optimizer = AdamW()
+
+    data = MarkovTokens(cfg.vocab, seed=args.seed, branch=2, n_contexts=13)
+    rng = np.random.default_rng(args.seed)
+
+    def make_batch(step):
+        t, l = data.batch(step, args.batch, args.seq)
+        b = {"tokens": t, "labels": l}
+        if cfg.family == "vlm":
+            b["prefix_embeds"] = rng.normal(
+                size=(args.batch, cfg.num_prefix_embeds, cfg.d_model)
+            ).astype(np.float32)
+        if cfg.is_encdec:
+            b["frames"] = rng.normal(
+                size=(args.batch, cfg.frontend_frames, cfg.d_model)
+            ).astype(np.float32)
+        return b
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    logger = MetricLogger()
+
+    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
+    with ctx:
+        params = build_state()
+        opt_state = init_opt_state(api, tcfg, optimizer, params)
+        start = 0
+        if mgr is not None and mgr.latest_step() is not None:
+            start, state = mgr.restore_latest(
+                {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            logger.log(start, event="resumed from checkpoint")
+        params, opt_state, step = train_loop(
+            api=api, tcfg=tcfg, optimizer=optimizer, params=params,
+            opt_state=opt_state, make_batch=make_batch,
+            num_steps=args.steps, ckpt_manager=mgr,
+            ckpt_every=args.ckpt_every, start_step=start, logger=logger)
+    losses = [r["loss"] for r in logger.history if "loss" in r]
+    print(f"done: steps={step} first_loss={losses[0]:.4f} "
+          f"last_loss={losses[-1]:.4f}")
+
+
+class _nullcontext:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model stack: configs, layers, families, unified ModelApi."""
+
+from repro.models.config import (ModelConfig, InputShape, ALL_SHAPES,
+                                 TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                 LONG_500K, shapes_for, skipped_shapes_for)
+from repro.models.model import ModelApi, build_model
+
+__all__ = [
+    "ModelConfig", "InputShape", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "shapes_for", "skipped_shapes_for",
+    "ModelApi", "build_model",
+]

@@ -1,0 +1,311 @@
+"""GQA attention: chunked-causal train/prefill, cached decode, cross-attn.
+
+Memory discipline (DESIGN.md Section 5): the (S, S) score matrix is never
+materialized — queries are processed in chunks of `q_chunk` via lax.scan
+(Rabe & Staats style), bounding live attention memory at
+(B, H, q_chunk, S).  Heads are model-sharded; the KV cache's sequence axis
+is shardable via the `kv_seq` logical rule (the long_500k cells set it to
+"data": sequence-parallel decode, with GSPMD inserting the partial-softmax
+combine — the flash-decode pattern).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rope
+from repro.models.sharding import constrain
+
+DEFAULT_Q_CHUNK = 512
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, S_max, KV, hd)
+    v: jax.Array        # (B, S_max, KV, hd)
+    length: jax.Array   # () int32 — tokens currently valid
+
+
+def make_head_mask(cfg):
+    """(H_phys,) 0/1 mask of real query heads, kv-major layout.
+
+    Padded configs (head_pad_to / kv_head_pad_to) carry dummy heads so the
+    head dim tiles the model mesh axis; the mask hard-zeros their attention
+    output before the output projection, which both preserves the real
+    model's function and blocks every gradient path into the dummy
+    parameters.  Returns None when no padding is configured.
+    """
+    if cfg.n_heads_phys == cfg.n_heads and cfg.n_kv_phys == cfg.n_kv_heads:
+        return None
+    g_phys = cfg.n_heads_phys // cfg.n_kv_phys
+    h = jnp.arange(cfg.n_heads_phys)
+    kv, j = h // g_phys, h % g_phys
+    real = (kv < cfg.n_kv_heads) & (j < cfg.head_group)
+    return real.astype(jnp.float32)
+
+
+def attention_params(create, d_model: int, n_heads: int, n_kv: int,
+                     head_dim: int, qkv_bias: bool):
+    p = {
+        "wq": create("wq", (d_model, n_heads * head_dim), ("embed", "qkv")),
+        "wk": create("wk", (d_model, n_kv * head_dim), ("embed", "qkv")),
+        "wv": create("wv", (d_model, n_kv * head_dim), ("embed", "qkv")),
+        "wo": create("wo", (n_heads * head_dim, d_model), ("qkv", "embed")),
+    }
+    if qkv_bias:
+        p["bq"] = create("bq", (n_heads * head_dim,), ("qkv",), init="zeros")
+        p["bk"] = create("bk", (n_kv * head_dim,), ("qkv",), init="zeros")
+        p["bv"] = create("bv", (n_kv * head_dim,), ("qkv",), init="zeros")
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim):
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, n_heads, head_dim)
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    return (constrain(q, "batch", "seq", "heads", None),
+            constrain(k, "batch", "seq", "heads", None),
+            constrain(v, "batch", "seq", "heads", None))
+
+
+def _mask_heads(o, head_mask, n_heads, head_dim):
+    """Zero dummy-head outputs; o is (..., H, hd) or (..., H*hd)."""
+    if head_mask is None:
+        return o
+    if o.shape[-1] == n_heads * head_dim:
+        o = o.reshape(*o.shape[:-1], n_heads, head_dim)
+        return (o * head_mask[..., None]).reshape(
+            *o.shape[:-2], n_heads * head_dim)
+    return o * head_mask[..., None]
+
+
+def _repeat_kv(kv, n_heads):
+    """(B, S, KV, hd) -> (B, S, H, hd) by group broadcast.
+
+    Keeping the einsums 4-D with the full H dim model-sharded avoids the
+    (KV, group) split-dim shardings that force GSPMD into involuntary
+    full-rematerialization copies (caught by the trip-aware roofline; see
+    EXPERIMENTS.md Section Perf, iteration 0).  XLA fuses the broadcast
+    into the consuming dot, so no materialized g-fold copy remains.
+    """
+    B, S, KV, hd = kv.shape
+    g = n_heads // KV
+    if g == 1:
+        return kv
+    return jnp.repeat(kv, g, axis=2)
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, hd), k: (B, Sk, KV, hd) -> (B, H, Sq, Sk), f32."""
+    H = q.shape[2]
+    hd = q.shape[-1]
+    kf = _repeat_kv(k, H)
+    s = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                   kf.astype(jnp.float32))
+    return s / math.sqrt(hd)
+
+
+def _gqa_mix(probs, v):
+    """probs: (B, H, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    H = probs.shape[1]
+    vf = _repeat_kv(v, H)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, vf.astype(jnp.float32))
+
+
+def _gqa_scores_grouped(q, k):
+    """Decode-path scores without the KV->H repeat.
+
+    PERF (qwen2.5 iteration 2): with decode heads unsharded, repeating the
+    cache to H heads in f32 reads H/KV x 2 more bytes than the cache holds
+    (5.4 GB/layer at qwen2.5 decode).  The grouped einsum contracts
+    directly against the (B, S, KV, hd) cache in bf16 with f32
+    accumulation.  q: (B, 1, H, hd) -> (B, H, 1, S).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, H, Sq, k.shape[1]) / math.sqrt(hd)
+
+
+def _gqa_mix_grouped(probs, v):
+    """probs: (B, H, Sq, Sk) f32, v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, H, Sq, Sk = probs.shape
+    KV = v.shape[2]
+    g = H // KV
+    pg = probs.reshape(B, KV, g, Sq, Sk).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", pg, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def _chunked_softmax_attend(q, k, v, positions, *, q_chunk, causal,
+                            n_heads, head_dim):
+    """Chunked-query attention core; returns (B, S, H*hd) in f32->input dtype."""
+    B, S = q.shape[0], q.shape[1]
+    c = min(q_chunk, S)
+    if S % c != 0:  # static shapes: fall back to one chunk
+        c = S
+    n_chunks = S // c
+    qs = q.reshape(B, n_chunks, c, n_heads, head_dim)
+    pos_q = positions.reshape(B, n_chunks, c)
+
+    # PERF: remat the chunk body — otherwise every chunk's (B, H, c, S)
+    # score/prob tensors are stacked across chunks as scan residuals for
+    # the backward pass, i.e. the full S^2 attention matrix lands in HBM
+    # anyway.  Recompute-in-backward keeps S^2 tensors transient (the
+    # flash-attention memory discipline at the XLA level).
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        qc, pq = inp                       # (B, c, H, hd), (B, c)
+        s = _gqa_scores(qc, k)             # (B, H, c, S)
+        if causal:
+            mask = pq[:, None, :, None] >= positions[:, None, None, :]
+            s = jnp.where(mask, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = _gqa_mix(p, v)                 # (B, c, H, hd)
+        return carry, o
+
+    _, outs = lax.scan(one_chunk, None,
+                       (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(pos_q, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, n_heads * head_dim)
+
+
+def causal_attention(params, x, positions, *, n_heads, n_kv, head_dim,
+                     rope_theta, q_chunk: int = DEFAULT_Q_CHUNK,
+                     causal: bool = True, head_mask=None):
+    """Train/prefill attention over the full sequence, chunked over queries.
+
+    x: (B, S, D); positions: (B, S) absolute positions (for RoPE + mask).
+    """
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    # PERF (granite iteration 4): repeat KV->H once per layer, OUTSIDE the
+    # chunk scan.  Inside the (remat'd) chunk body the repeat's backward is
+    # a per-chunk group-reduction across the model-sharded head axis —
+    # a collective-permute storm; hoisted, it happens once per layer.
+    k = constrain(_repeat_kv(k, n_heads), "batch", "seq", "heads", None)
+    v = constrain(_repeat_kv(v, n_heads), "batch", "seq", "heads", None)
+    out = _chunked_softmax_attend(q, k, v, positions, q_chunk=q_chunk,
+                                  causal=causal, n_heads=n_heads,
+                                  head_dim=head_dim)
+    out = _mask_heads(out, head_mask, n_heads, head_dim)
+    out = out.astype(x.dtype) @ params["wo"]
+    return constrain(out, "batch", "seq", None)
+
+
+def init_cache(create, batch: int, s_max: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16):
+    """KV cache buffers through a creator (real zeros or ShapeDtypeStruct)."""
+    return KVCache(
+        k=create("cache_k", (batch, s_max, n_kv, head_dim),
+                 ("batch", "kv_seq", "heads", None), init="zeros",
+                 dtype=dtype),
+        v=create("cache_v", (batch, s_max, n_kv, head_dim),
+                 ("batch", "kv_seq", "heads", None), init="zeros",
+                 dtype=dtype),
+        length=create("cache_len", (), (), init="zeros", dtype=jnp.int32),
+    )
+
+
+def prefill_into_cache(params, x, positions, cache: KVCache, *, n_heads,
+                       n_kv, head_dim, rope_theta,
+                       q_chunk: int = DEFAULT_Q_CHUNK, head_mask=None):
+    """Run causal attention AND write k/v into the cache (prompt phase)."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    q = rope(q, positions, rope_theta)
+    k = rope(k, positions, rope_theta)
+    kf = constrain(_repeat_kv(k, n_heads), "batch", "seq", "heads", None)
+    vf = constrain(_repeat_kv(v, n_heads), "batch", "seq", "heads", None)
+    out = _chunked_softmax_attend(q, kf, vf, positions, q_chunk=q_chunk,
+                                  causal=True, n_heads=n_heads,
+                                  head_dim=head_dim)
+    out = _mask_heads(out, head_mask, n_heads, head_dim)
+    out = constrain(out.astype(x.dtype) @ params["wo"], "batch", "seq", None)
+    new_k = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                     (0, 0, 0, 0))
+    new_v = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                     (0, 0, 0, 0))
+    return out, KVCache(k=constrain(new_k, "batch", "kv_seq", "heads", None),
+                        v=constrain(new_v, "batch", "kv_seq", "heads", None),
+                        length=jnp.int32(S))
+
+
+def decode_attention(params, x, cache: KVCache, *, n_heads, n_kv, head_dim,
+                     rope_theta, head_mask=None):
+    """One-token decode: x (B, 1, D) attends to the cache.
+
+    The new k/v are written at `cache.length`; attention spans the whole
+    (static-size) buffer with a validity mask — when the cache's sequence
+    axis is sharded ("kv_seq": "data"), the softmax reductions become the
+    sequence-parallel flash-decode combine.
+    """
+    B, one, D = x.shape
+    pos = jnp.full((B, 1), cache.length, jnp.int32)
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim)
+    q = rope(q, pos, rope_theta)
+    k = rope(k, pos, rope_theta)
+
+    new_k = lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+    new_v = lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+    new_k = constrain(new_k, "batch", "kv_seq", "heads", None)
+    new_v = constrain(new_v, "batch", "kv_seq", "heads", None)
+
+    s = _gqa_scores_grouped(q.astype(new_k.dtype), new_k)  # (B, H, 1, S)
+    # under the decode rules the score's sequence axis is model-sharded;
+    # the softmax reductions become the flash-decode partial combine
+    s = constrain(s, "batch", "heads", None, "kv_seq")
+    s_pos = jnp.arange(new_k.shape[1])
+    mask = (s_pos <= cache.length)[None, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _mask_heads(_gqa_mix_grouped(p, new_v), head_mask, n_heads,
+                    head_dim)
+    o = o.reshape(B, 1, n_heads * head_dim)
+    out = o.astype(x.dtype) @ params["wo"]
+    return out, KVCache(k=new_k, v=new_v, length=cache.length + 1)
+
+
+# ---- cross attention (encoder-decoder) --------------------------------------
+
+def cross_attention_params(create, d_model: int, n_heads: int, n_kv: int,
+                           head_dim: int):
+    return attention_params(create, d_model, n_heads, n_kv, head_dim,
+                            qkv_bias=False)
+
+
+def cross_attention(params, x, enc_kv, *, n_heads, n_kv, head_dim,
+                    head_mask=None):
+    """x: (B, Sq, D) queries over precomputed encoder states (B, Se, D).
+
+    No positional rotation (positions live in the encoder states); no mask
+    (full visibility of the encoder output).
+    """
+    B, Sq, D = x.shape
+    q = (x @ params["wq"]).reshape(B, Sq, n_heads, head_dim)
+    Se = enc_kv.shape[1]
+    k = (enc_kv @ params["wk"]).reshape(B, Se, n_kv, head_dim)
+    v = (enc_kv @ params["wv"]).reshape(B, Se, n_kv, head_dim)
+    s = _gqa_scores(q, k)
+    p = jax.nn.softmax(s, axis=-1)
+    o = _mask_heads(_gqa_mix(p, v), head_mask, n_heads, head_dim)
+    o = o.reshape(B, Sq, n_heads * head_dim)
+    return constrain(o.astype(x.dtype) @ params["wo"], "batch", "seq", None)

@@ -1,0 +1,77 @@
+"""Shared layers: norms, embeddings, RoPE, and the sharded-vocab CE loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+# ---- norms ----------------------------------------------------------------
+
+def rmsnorm_params(create, d: int):
+    return {"scale": create("scale", (d,), (None,), init="ones",
+                            dtype=jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+# ---- embedding / unembedding -----------------------------------------------
+
+def embedding_params(create, vocab: int, d: int):
+    return {"table": create("table", (vocab, d), ("vocab", "embed"),
+                            init="normal")}
+
+
+def embed(params, tokens):
+    out = jnp.take(params["table"], tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def unembed(params, x, *, table=None):
+    """Project to vocab logits; `table` overrides for tied embeddings."""
+    t = table if table is not None else params["table"]
+    logits = jnp.einsum("bsd,vd->bsv", x, t)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+# ---- rotary position embedding ---------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                          # (...,S,1,half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---- loss -------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over valid tokens.  `logits` (B, S, V) stays vocab-sharded:
+    the log-sum-exp and label gather partition cleanly over the vocab axis
+    (GSPMD inserts the two small all-reduces), so the full unsharded logits
+    tensor never exists on any device."""
+    logits = logits.astype(jnp.float32)
+    m = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1)[..., 0]
+    nll = m - label_logit
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,191 @@
+"""Mamba (S6) block — selective state-space layer for the hybrid family.
+
+TPU adaptation (DESIGN.md hardware-adaptation): the CUDA selective-scan
+kernel streams the (d_inner, d_state) state through SRAM token by token.
+The TPU-native equivalent is a *chunked associative scan*: the sequence is
+cut into chunks of `chunk` tokens processed by `lax.associative_scan`
+(log-depth, VPU-friendly), with the inter-chunk recurrence carried by a
+`lax.scan`.  Live memory is (B, chunk, d_inner_local, d_state) — with
+d_inner model-sharded this stays in the tens of MB at jamba scale, the
+VMEM/HBM analogue of the SRAM streaming trick.
+
+Decode is the exact one-step recurrence on a (B, d_inner, d_state) cache —
+O(1) per token, which is what qualifies jamba for the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.sharding import constrain
+
+DEFAULT_CHUNK = 16  # bounds in-chunk decay so the log-space scan's exp
+                    # clip stays inactive (see _chunked_ssm, iteration 3)
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, d_conv - 1, d_inner) — depthwise conv tail
+    ssm: jax.Array    # (B, d_inner, d_state) — recurrent state, f32
+
+
+def mamba_params(create, d_model: int, *, expand: int, d_state: int,
+                 d_conv: int):
+    d_inner = expand * d_model
+    dt_rank = max(16, d_model // 16)
+    return {
+        "in_proj": create("in_proj", (d_model, 2 * d_inner),
+                          ("embed", "mlp")),
+        "conv_w": create("conv_w", (d_conv, d_inner), (None, "mlp")),
+        "conv_b": create("conv_b", (d_inner,), ("mlp",), init="zeros"),
+        "x_proj": create("x_proj", (d_inner, dt_rank + 2 * d_state),
+                         ("mlp", None)),
+        "dt_proj": create("dt_proj", (dt_rank, d_inner), (None, "mlp")),
+        "dt_bias": create("dt_bias", (d_inner,), ("mlp",), init="dt_bias"),
+        "a_log": create("a_log", (d_inner, d_state), ("mlp", None),
+                        init="mamba_a", dtype=jnp.float32),
+        "d_skip": create("d_skip", (d_inner,), ("mlp",), init="ones",
+                         dtype=jnp.float32),
+        "out_proj": create("out_proj", (d_inner, d_model),
+                           ("mlp", "embed")),
+    }
+
+
+def _ssm_inputs(params, xs, *, d_state: int, log_space: bool = False):
+    """xs: (..., d_inner) post-conv activations -> (dA | logdA, dBx, C)."""
+    dt_rank = params["dt_proj"].shape[0]
+    proj = xs @ params["x_proj"]                       # (..., r + 2*ds)
+    dt = proj[..., :dt_rank] @ params["dt_proj"] + params["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))       # (..., d_inner)
+    Bm = proj[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + d_state:].astype(jnp.float32)
+    A = -jnp.exp(params["a_log"])                      # (d_inner, d_state)
+    logdA = dt[..., None] * A                          # (..., d_inner, ds)
+    dBx = (dt * xs.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    if log_space:
+        return logdA, dBx, Cm
+    return jnp.exp(logdA), dBx, Cm
+
+
+def _conv1d(params, x, tail=None):
+    """Depthwise causal conv over (B, S, d_inner); `tail` is the cached
+    (B, d_conv-1, d_inner) prefix for decode continuity."""
+    d_conv = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], d_conv - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * params["conv_w"][i]
+              for i in range(d_conv))
+    return out + params["conv_b"], xp[:, -(d_conv - 1):, :]
+
+
+def _chunked_ssm(params, xs, *, d_state: int, chunk: int):
+    """Selective scan over (B, S, d_inner) post-conv activations.
+
+    PERF (EXPERIMENTS.md Section Perf, jamba iteration 1): the (dA, dBx)
+    terms have shape (B, S, d_inner, d_state) — 16x the activation size.
+    Computing them for the full sequence before the chunk loop materializes
+    multi-TB of HBM traffic per step at jamba scale; instead the chunk scan
+    receives raw xs chunks and derives its (B, chunk, d_inner, d_state)
+    terms *inside* the loop body, so they never exist at full length.
+    Returns (y (B, S, d_inner) f32, final state (B, d_inner, d_state)).
+    """
+    B, S, d_inner = xs.shape
+    c = chunk if S % chunk == 0 else S
+    n_chunks = S // c
+
+    # PERF iteration 2: rematerialize the chunk body.  Without this the
+    # backward pass keeps every chunk's (B, c, dI, dS) cumulative-product
+    # tensors stacked across all chunks (the scan's saved residuals) —
+    # ~270 MB x 5 tensors per mamba layer at jamba scale, blowing the
+    # 16 GB HBM budget and dominating HBM traffic.  Recomputing the chunk
+    # body in backward keeps only the (B, dI, dS) carries.
+    #
+    # PERF iteration 3: the log-depth associative scan expands into ~100
+    # fused passes over the (c, dI, dS) working set (fwd + transpose).
+    # The in-chunk scan is instead computed in LOG SPACE with two cumsums:
+    #     L_t   = cumsum(log dA)                (log decay from chunk start)
+    #     h_t   = exp(L_t) * (h0 + cumsum(exp(-L_s) dBx_s))
+    # ~8 passes over the working set.  exp(-L) is clipped at e^CLIP; with
+    # chunk <= 16 the accumulated in-chunk decay stays within the clip
+    # range for any plausible dt, so the clip is inactive in practice
+    # (validated against the associative-scan oracle in tests).
+    CLIP = 35.0
+
+    @jax.checkpoint
+    def scan_chunk(h, cxs):
+        logdA, cdBx, cC = _ssm_inputs(params, cxs, d_state=d_state,
+                                      log_space=True)
+        L = jnp.cumsum(logdA, axis=1)                  # (B, c, dI, ds) <= 0
+        w = jnp.exp(jnp.minimum(-L, CLIP)) * cdBx
+        hs = jnp.exp(L) * (h[:, None] + jnp.cumsum(w, axis=1))
+        y = jnp.einsum("bcds,bcs->bcd", hs, cC)
+        return hs[:, -1], y
+
+    xs_c = jnp.moveaxis(xs.reshape(B, n_chunks, c, d_inner), 1, 0)
+    h0 = jnp.zeros((B, d_inner, d_state), jnp.float32)
+    h_fin, ys = lax.scan(scan_chunk, h0, xs_c)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, S, d_inner), h_fin
+
+
+def mamba_block(params, x, *, d_state: int, chunk: int = DEFAULT_CHUNK):
+    """Train/prefill forward: x (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                  # (B, S, d_inner)
+    xs = constrain(xs, "batch", "seq", "mlp")
+    xs, _ = _conv1d(params, xs)
+    xs = jax.nn.silu(xs)
+
+    y, _ = _chunked_ssm(params, xs, d_state=d_state, chunk=chunk)
+    y = y + params["d_skip"] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, "batch", "seq", "mlp")
+    return constrain(y @ params["out_proj"], "batch", "seq", None)
+
+
+def init_mamba_cache(create, batch: int, d_model: int, *, expand: int,
+                     d_state: int, d_conv: int, dtype=jnp.bfloat16):
+    d_inner = expand * d_model
+    return MambaCache(
+        conv=create("cache_conv", (batch, d_conv - 1, d_inner),
+                    ("batch", None, "mlp"), init="zeros", dtype=dtype),
+        ssm=create("cache_ssm", (batch, d_inner, d_state),
+                   ("batch", "mlp", None), init="zeros", dtype=jnp.float32),
+    )
+
+
+def mamba_decode_step(params, x, cache: MambaCache, *, d_state: int):
+    """x: (B, 1, D) one token; exact recurrence update."""
+    B, one, D = x.shape
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_tail = _conv1d(params, xs, tail=cache.conv)
+    xs = jax.nn.silu(xs)
+
+    dA, dBx, Cm = _ssm_inputs(params, xs, d_state=d_state)  # (B,1,dI,ds)
+    h = dA[:, 0] * cache.ssm + dBx[:, 0]                    # (B, dI, ds)
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None, :]
+    y = y + params["d_skip"] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, MambaCache(conv=new_tail.astype(cache.conv.dtype), ssm=h)
+
+
+def mamba_prefill(params, x, cache: MambaCache, *, d_state: int,
+                  chunk: int = DEFAULT_CHUNK):
+    """Prefill: full forward + final state into the cache."""
+    B, S, D = x.shape
+    xz = x @ params["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, tail = _conv1d(params, xs)
+    xs = jax.nn.silu(xs)
+
+    y, h_fin = _chunked_ssm(params, xs, d_state=d_state, chunk=chunk)
+    y = y + params["d_skip"] * xs.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    return out, MambaCache(conv=tail.astype(cache.conv.dtype), ssm=h_fin)

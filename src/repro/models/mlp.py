@@ -1,0 +1,22 @@
+"""SwiGLU feed-forward (llama/qwen family)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.sharding import constrain
+
+
+def mlp_params(create, d_model: int, d_ff: int):
+    return {
+        "w_gate": create("w_gate", (d_model, d_ff), ("embed", "mlp")),
+        "w_up": create("w_up", (d_model, d_ff), ("embed", "mlp")),
+        "w_down": create("w_down", (d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x):
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = constrain(h, "batch", "seq", "mlp")
+    return constrain(h @ params["w_down"], "batch", "seq", None)

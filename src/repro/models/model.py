@@ -1,0 +1,180 @@
+"""Unified model API: one object per architecture, family-dispatched.
+
+`serve_step` is where the paper's technique is first-class in the LM stack:
+the decode logits stay vocab-sharded over the `model` mesh axis and the
+next token comes from `core.topk.topk_sample` — the distributed-selection
+sampler (DESIGN.md Section 3).  The dry-run lowers exactly this graph, so
+the roofline's collective term includes the paper's O(log k)-scalar rounds
+instead of a vocab-sized all-gather.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import topk as topk_mod
+from repro.models import encdec, transformer
+from repro.models.config import InputShape, ModelConfig
+from repro.models.creator import InitCreator, ShapeCreator, SpecCreator
+from repro.models import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+
+    # ---- parameters -------------------------------------------------------
+    def init_params(self, key, dtype=jnp.float32):
+        return self._init(InitCreator(key, dtype=dtype))
+
+    def param_specs(self):
+        return self._init(SpecCreator())
+
+    def param_shapes(self, mesh=None, dtype=jnp.bfloat16):
+        return self._init(ShapeCreator(dtype=dtype, mesh=mesh))
+
+    def _init(self, create):
+        if self.cfg.is_encdec:
+            return encdec.init_params(create, self.cfg)
+        return transformer.init_params(create, self.cfg)
+
+    # ---- steps ------------------------------------------------------------
+    def loss_fn(self, params, batch, remat: bool = True):
+        if self.cfg.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch, remat=remat)
+        return transformer.loss_fn(params, self.cfg, batch, remat=remat)
+
+    def forward(self, params, batch):
+        if self.cfg.is_encdec:
+            return encdec.forward(params, self.cfg, batch["tokens"],
+                                  batch["frames"])
+        return transformer.forward(params, self.cfg, batch["tokens"],
+                                   batch.get("prefix_embeds"))
+
+    def prefill(self, params, batch, cache):
+        if self.cfg.is_encdec:
+            return encdec.prefill(params, self.cfg, batch["tokens"],
+                                  batch["frames"], cache)
+        return transformer.prefill(params, self.cfg, batch["tokens"], cache,
+                                   batch.get("prefix_embeds"))
+
+    def decode_step(self, params, token, cache):
+        if self.cfg.is_encdec:
+            return encdec.decode_step(params, self.cfg, token, cache)
+        return transformer.decode_step(params, self.cfg, token, cache)
+
+    def serve_step(self, params, token, cache, key, *, mesh=None,
+                   top_k: int = 50, temperature: float = 0.8,
+                   sampler: str = "selection", num_pivots: int = 1):
+        """decode_step + the paper's distributed top-k sampler.
+
+        Under a mesh, the (B, V) logits stay model-sharded and the sampler
+        runs the distributed-selection pipeline over the vocab shards; on a
+        single device it degrades to plain top-k sampling.
+        """
+        logits, new_cache = self.decode_step(params, token, cache)
+        if mesh is None or "model" not in mesh.axis_names:
+            scaled, idx = jax.lax.top_k(logits, top_k)
+            choice = jax.random.categorical(
+                key, scaled / jnp.maximum(temperature, 1e-6), axis=-1)
+            nxt = jnp.take_along_axis(idx, choice[..., None], -1)[..., 0]
+            return nxt.astype(jnp.int32), new_cache
+
+        # batch axes: follow the current sharding rules, keep only mesh axes
+        # that evenly divide the batch (decode batches can be as small as 1).
+        rule = shd.current_rules().batch
+        rule = rule if isinstance(rule, tuple) else (rule,)
+        B, V = logits.shape
+        kept, prod = [], 1
+        for a in rule:
+            n = dict(mesh.shape).get(a, 0)
+            if n and B % (prod * n) == 0:
+                kept.append(a)
+                prod *= n
+        bspec = tuple(kept) if kept else None
+
+        # vocab must tile the model axis inside shard_map (no GSPMD padding
+        # there): pad with -inf logits, which can never win a top-k slot
+        # (49155- and 256206-sized vocabs are not 16-divisible).
+        mdl = dict(mesh.shape)["model"]
+        pad = (-V) % mdl
+        if pad:
+            logits = jnp.pad(logits, ((0, 0), (0, pad)),
+                             constant_values=-jnp.inf)
+        fn = functools.partial(
+            topk_mod.topk_sample, k=top_k, temperature=temperature,
+            axis_name="model", method=sampler, num_pivots=num_pivots)
+
+        sampled = jax.shard_map(
+            lambda lg, kk: fn(lg, key=kk),
+            mesh=mesh,
+            in_specs=(P(bspec, "model"), P()),
+            out_specs=P(bspec),
+            check_vma=False,
+        )(logits, key)
+        return sampled.astype(jnp.int32), new_cache
+
+    # ---- caches -----------------------------------------------------------
+    def init_cache(self, key, batch: int, s_max: int, dtype=jnp.bfloat16):
+        return self._cache(InitCreator(key, dtype=dtype), batch, s_max,
+                           dtype)
+
+    def cache_specs(self, batch: int, s_max: int):
+        return self._cache(SpecCreator(), batch, s_max, jnp.bfloat16)
+
+    def cache_shapes(self, batch: int, s_max: int, mesh=None,
+                     dtype=jnp.bfloat16):
+        return self._cache(ShapeCreator(dtype=dtype, mesh=mesh), batch,
+                           s_max, dtype)
+
+    def _cache(self, create, batch, s_max, dtype):
+        if self.cfg.is_encdec:
+            return encdec.init_cache(create, self.cfg, batch, s_max, dtype)
+        return transformer.init_cache(create, self.cfg, batch, s_max, dtype)
+
+    # ---- input specs (ShapeDtypeStructs for the dry-run) --------------------
+    def input_specs(self, shape: InputShape, mesh=None,
+                    dtype=jnp.bfloat16) -> dict[str, Any]:
+        """Stand-ins for every model input of the given (arch x shape) cell.
+
+        Weak-type-correct, shardable, no device allocation.  Modality
+        frontends are stubs: precomputed frame/patch embeddings appear here
+        directly (the assignment's input_specs contract).
+        """
+        cfg = self.cfg
+        gb, S = shape.global_batch, shape.seq_len
+
+        def arr(shp, dt, *axes):
+            if mesh is not None:
+                ps = shd.divisible(shd.spec(*axes), shp, mesh)
+                ns = jax.sharding.NamedSharding(mesh, ps)
+                return jax.ShapeDtypeStruct(shp, dt, sharding=ns)
+            return jax.ShapeDtypeStruct(shp, dt)
+
+        if shape.kind == "decode":
+            return {"token": arr((gb,), jnp.int32, "batch")}
+
+        specs: dict[str, Any] = {}
+        s_text = S
+        if cfg.family == "vlm":
+            s_text = S - cfg.num_prefix_embeds
+            specs["prefix_embeds"] = arr(
+                (gb, cfg.num_prefix_embeds, cfg.d_model), dtype,
+                "batch", None, None)
+        if cfg.is_encdec:
+            specs["frames"] = arr((gb, cfg.frontend_frames, cfg.d_model),
+                                  dtype, "batch", None, None)
+        specs["tokens"] = arr((gb, s_text), jnp.int32, "batch", None)
+        if shape.kind == "train":
+            specs["labels"] = arr((gb, s_text), jnp.int32, "batch", None)
+        return specs
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    return ModelApi(cfg=cfg)

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing, capacity-bounded,
+gather-based dispatch, expert-parallel over the `model` mesh axis.
+
+Dispatch strategy (DESIGN.md Section 5): the classic GShard dense dispatch
+tensor (tokens, experts, capacity) is O(N*E*C) — terabytes at our shapes.
+Instead we build an (E, C) *token-index table* (O(E*C) int32) and dispatch
+with a gather:
+
+  1. router logits -> softmax -> top-k gate weights per token
+     (renormalized over the selected k, mixtral-style);
+  2. position-in-expert via a token-major cumulative count; tokens beyond
+     an expert's capacity C are dropped (standard capacity-factor policy,
+     the residual path carries them — dropped tokens simply pass through);
+  3. token ids scattered into the (E, C) table, gathered into the
+     (E, C, D) expert batch — sharded ("experts" -> model) so each mesh
+     slice computes only its experts (EP);
+  4. expert SwiGLU via einsum with the E batch dim;
+  5. weighted scatter-add back to (N, D).
+
+Note the selection connection (DESIGN.md Section 3): top-k routing over
+E <= 48 experts is the paper's selection problem at trivial scale; the
+candidate set is local and tiny, so `lax.top_k` is the right tool — the
+distributed machinery pays off on vocab/datastore-sized candidate sets.
+
+MoE top-k routing uses an auxiliary load-balancing loss (Switch/GShard) —
+returned alongside so the trainer can weight it in.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+from repro.models.sharding import constrain
+
+
+def moe_params(create, d_model: int, d_ff: int, n_experts: int,
+               n_experts_phys: int | None = None):
+    ep = n_experts_phys or n_experts
+    return {
+        "router": create("router", (d_model, n_experts), ("embed", None)),
+        "w_gate": create("w_gate", (ep, d_model, d_ff),
+                         ("experts", "embed", None)),
+        "w_up": create("w_up", (ep, d_model, d_ff),
+                       ("experts", "embed", None)),
+        "w_down": create("w_down", (ep, d_ff, d_model),
+                         ("experts", None, "embed")),
+    }
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             capacity_factor: float) -> int:
+    c = int(math.ceil(n_tokens * top_k * capacity_factor / n_experts))
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for layout friendliness
+
+
+def moe_ffn(params, x, *, n_experts: int, top_k: int,
+            capacity_factor: float = 1.25,
+            n_experts_phys: int | None = None):
+    """x: (B, S, D) -> (y (B, S, D), aux_loss scalar).
+
+    PERF (EXPERIMENTS.md Section Perf, granite iteration 1): tokens are
+    first reshaped into G = batch_shards() *groups* (the GShard/MaxText
+    group trick).  Routing, the position-in-expert cumsum, and the
+    dispatch gather are then all group-local — shard-local under the mesh,
+    no cross-shard cumsum (which GSPMD lowers to collective-permute
+    chains) and no global gather of activations.  The ONLY cross-shard
+    movement is the (G, E, Cg, D) expert batch's group->expert resharding:
+    one all-to-all each way, the canonical MoE schedule.
+    """
+    B, S, D = x.shape
+    N = B * S
+    # dummy experts beyond n_experts are never routed to (the router only
+    # produces n_experts logits); they exist so the expert tensor dim
+    # tiles the mesh's model axis.
+    ep = n_experts_phys or n_experts
+
+    G = sharding.batch_shards()
+    while N % G:
+        G //= 2
+    if N // max(G, 1) < 64:
+        # decode-sized batches: per-group capacity rounding dominates and
+        # the group<->expert resharding overhead outweighs dispatch
+        # locality (measured on jamba decode_32k) — single group instead.
+        G = 1
+    Ng = N // G
+    gax = "batch" if G > 1 else None  # never shard a size-1 group dim
+    xt = constrain(x.reshape(G, Ng, D), gax, None, None)
+
+    logits = (xt @ params["router"]).astype(jnp.float32)      # (G, Ng, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)       # (G, Ng, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Load-balance auxiliary loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    assign = jax.nn.one_hot(expert_idx[..., 0], n_experts)    # top-1 fraction
+    ce = jnp.mean(assign, axis=(0, 1))
+    aux = n_experts * jnp.sum(me * ce)
+
+    C = capacity(Ng, n_experts, top_k, capacity_factor)
+
+    # position of each (token, k) assignment within its expert — cumsum is
+    # over the group-local token axis only.
+    onehot = jax.nn.one_hot(expert_idx, ep, dtype=jnp.int32)
+    flat = onehot.reshape(G, Ng * top_k, ep)
+    pos = jnp.cumsum(flat, axis=1) - flat                     # (G, Ng*K, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, Ng, top_k)
+    keep = pos < C
+
+    e_flat = expert_idx.reshape(G, -1)
+    p_flat = jnp.where(keep, pos, C).reshape(G, -1)           # C => dropped
+    tok_flat = jnp.broadcast_to(jnp.arange(Ng)[:, None],
+                                (Ng, top_k)).reshape(1, -1)
+    tok_flat = jnp.broadcast_to(tok_flat, (G, Ng * top_k))
+    g_flat = jnp.where(keep, gate_vals, 0.0).reshape(G, -1)
+
+    # (G, E, C) token table and gate table; slot C is the drop bucket.
+    grows = jnp.broadcast_to(jnp.arange(G)[:, None], e_flat.shape)
+    table = jnp.full((G, ep, C + 1), Ng, jnp.int32)
+    table = table.at[grows, e_flat, p_flat].set(tok_flat, mode="drop")
+    gates = jnp.zeros((G, ep, C + 1), jnp.float32)
+    gates = gates.at[grows, e_flat, p_flat].set(g_flat, mode="drop")
+    table, gates = table[..., :C], gates[..., :C]
+
+    # group-local dispatch gather, then the group->expert all-to-all.
+    # PERF (granite iteration 5): gather/scatter must see group-local
+    # layouts on BOTH operands — if the updates arrive expert-sharded,
+    # GSPMD materializes the scatter as partial results + a full-size
+    # all-reduce of the (G, Ng, D) token buffer (2 x 805 MB per layer at
+    # granite scale).  The expert<->group resharding is therefore staged
+    # explicitly, outside the gather/scatter.
+    xpad = jnp.concatenate(
+        [xt, jnp.zeros((G, 1, D), xt.dtype)], axis=1)         # (G, Ng+1, D)
+    ex_in = jnp.take_along_axis(
+        xpad, table.reshape(G, ep * C)[..., None], axis=1
+    ).reshape(G, ep, C, D)
+    ex_in = constrain(ex_in, gax, None, None, None)           # local gather
+    ex_in = constrain(ex_in, gax, "experts", "expert_cap", None)      # a2a
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, params["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", ex_in, params["w_up"])
+    ex_out = jnp.einsum("gecf,efd->gecd", h, params["w_down"])
+    ex_out = constrain(ex_out, gax, "experts", "expert_cap", None)
+    ex_out = constrain(ex_out, gax, None, None, None)         # a2a back
+
+    # combine: group-local weighted scatter-add back to tokens
+    w = (ex_out * gates[..., None].astype(ex_out.dtype)).reshape(
+        G, ep * C, D)
+    y = jnp.zeros((G, Ng + 1, D), ex_out.dtype)
+    y = y.at[grows[:, :1].repeat(ep * C, 1),
+             table.reshape(G, ep * C)].add(w, mode="drop")
+    y = constrain(y[:, :Ng].reshape(B, S, D), "batch", "seq", None)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,5 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.optim import compress
+
+__all__ = ["AdamW", "AdamWState", "global_norm", "warmup_cosine", "compress"]

@@ -1,0 +1,91 @@
+"""AdamW from scratch (optax is not available in this container).
+
+Functional API: `init(params) -> state`, `update(grads, state, params, lr)
+-> (params, state)`.  Moments are fp32 regardless of parameter dtype (bf16
+training keeps master-quality statistics); global-norm clipping included.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: object       # pytree like params, f32
+    v: object       # pytree like params, f32
+
+
+class AdamW(NamedTuple):
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # bf16 moments halve optimizer residency — the difference between
+    # jamba-398B fitting a 256-chip pod or not (EXPERIMENTS.md Section
+    # Perf, jamba iteration 4).  Moment *arithmetic* stays f32.
+    moment_dtype: object = jnp.float32
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.moment_dtype), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params, lr):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.clip_norm > 0:
+            gn = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        count = state.count + 1
+        b1c = 1.0 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** count.astype(jnp.float32)
+
+        dt = self.moment_dtype
+        new_m = jax.tree.map(
+            lambda m, g: (self.b1 * m.astype(jnp.float32)
+                          + (1 - self.b1) * g).astype(dt), state.m, grads)
+        new_v = jax.tree.map(
+            lambda v, g: (self.b2 * v.astype(jnp.float32)
+                          + (1 - self.b2) * g * g).astype(dt),
+            state.v, grads)
+
+        def upd(p, m, v):
+            m = m.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            step = (m / b1c) / (jnp.sqrt(v / b2c) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, AdamWState(count=count, m=new_m, v=new_v)
+
+    def state_specs(self, param_specs):
+        """PartitionSpecs for the optimizer state mirroring the params
+        (ZeRO: moments shard exactly like their parameters)."""
+        from jax.sharding import PartitionSpec as P
+        return AdamWState(count=P(), m=param_specs,
+                          v=jax.tree.map(lambda s: s, param_specs))
+
+    def state_shapes(self, param_shapes, mesh=None):
+        """ShapeDtypeStruct state (dry-run: no allocation)."""
+        def mom(p):
+            sh = getattr(p, "sharding", None)
+            if sh is not None:
+                return jax.ShapeDtypeStruct(p.shape, self.moment_dtype,
+                                            sharding=sh)
+            return jax.ShapeDtypeStruct(p.shape, self.moment_dtype)
+        zeros = jax.tree.map(mom, param_shapes)
+        return AdamWState(count=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=zeros, v=jax.tree.map(lambda x: x, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))

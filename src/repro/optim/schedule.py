@@ -1,0 +1,18 @@
+"""Learning-rate schedules (warmup + cosine decay)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    # (step + 1): step 0 must already train (a zero first-step lr freezes
+    # smoke tests and wastes the first global batch at scale)
+    warm = peak_lr * (step + 1) / jnp.maximum(warmup_steps, 1)
+    prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = peak_lr * (final_frac + (1 - final_frac)
+                     * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,5 @@
+"""Mesh/collective helpers shared by the core algorithms and the model stack."""
+
+from repro.parallel.collectives import replicate
+
+__all__ = ["replicate"]

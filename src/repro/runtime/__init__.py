@@ -1,0 +1,9 @@
+from repro.runtime.trainer import (TrainConfig, make_train_step,
+                                   init_opt_state, train_loop,
+                                   SimulatedNodeFailure)
+from repro.runtime.server import Server, ServeConfig
+from repro.runtime.metrics import MetricLogger, StepWatchdog
+
+__all__ = ["TrainConfig", "make_train_step", "init_opt_state", "train_loop",
+           "SimulatedNodeFailure", "Server", "ServeConfig", "MetricLogger",
+           "StepWatchdog"]

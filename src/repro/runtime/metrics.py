@@ -1,0 +1,46 @@
+"""Step telemetry: metric logging + straggler watchdog."""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from typing import Optional, TextIO
+
+
+class MetricLogger:
+    def __init__(self, stream: Optional[TextIO] = None, quiet: bool = False):
+        self.stream = stream or sys.stderr
+        self.quiet = quiet
+        self.history: list[dict] = []
+
+    def log(self, step: int, **kwargs):
+        rec = {"step": step, "t": time.time(), **kwargs}
+        self.history.append(rec)
+        if not self.quiet:
+            self.stream.write(json.dumps(rec) + "\n")
+
+
+class StepWatchdog:
+    """Flags steps slower than `factor` x the running p50 once warmed up.
+
+    At fleet scale this signal feeds the slow-host eviction controller; in
+    this repo it is logged and asserted on by the straggler test.
+    """
+
+    def __init__(self, factor: float = 3.0, warmup: int = 5):
+        self.factor = factor
+        self.warmup = warmup
+        self.times: list[float] = []
+        self.flagged: list[int] = []
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) <= self.warmup:
+            return False
+        hist = sorted(self.times[:-1])
+        p50 = hist[len(hist) // 2]
+        slow = dt > self.factor * p50
+        if slow:
+            self.flagged.append(len(self.times) - 1)
+        return slow

@@ -1,0 +1,76 @@
+"""Prefill + cached decode must reproduce the teacher-forced forward.
+
+Tight tolerance for continuous-path families (dense/ssm/encdec/vlm).  MoE
+families route discontinuously: a ~1e-7 numerical difference between the
+cached and uncached attention path can flip a router top-k near a tie and
+amplify through later layers (verified root cause: with top_k == n_experts
+the error collapses to ~4e-4).  Real serving systems live with this
+(train/serve dispatch divergence); we assert a loose bound and the
+continuous-routing control.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import build_model
+
+TIGHT = ["qwen2-0.5b", "xlstm-125m", "seamless-m4t-large-v2", "pixtral-12b"]
+LOOSE = ["phi3.5-moe-42b-a6.6b", "jamba-1.5-large-398b"]
+
+
+def _roundtrip(cfg, rng, B=2, S=16):
+    api = build_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = {"tokens": rng.integers(0, cfg.vocab, (B, S)).astype(np.int32)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = rng.normal(
+            size=(B, cfg.num_prefix_embeds, cfg.d_model)).astype(np.float32)
+    if cfg.is_encdec:
+        batch["frames"] = rng.normal(
+            size=(B, cfg.frontend_frames, cfg.d_model)).astype(np.float32)
+
+    s_max = S + 8 + (cfg.num_prefix_embeds if cfg.family == "vlm" else 0)
+    cache = api.init_cache(jax.random.PRNGKey(1), B, s_max,
+                           dtype=jnp.float32)
+    lg0, cache = jax.jit(lambda p, b, c: api.prefill(p, b, c))(
+        params, batch, cache)
+    nxt = jnp.argmax(lg0, -1).astype(jnp.int32)
+    lg1, cache = jax.jit(lambda p, t, c: api.decode_step(p, t, c))(
+        params, nxt, cache)
+
+    ext = dict(batch)
+    ext["tokens"] = jnp.concatenate([batch["tokens"], nxt[:, None]], axis=1)
+    full, _ = jax.jit(lambda p, b: api.forward(p, b))(params, ext)
+    return (float(jnp.max(jnp.abs(lg0 - full[:, -2]))),
+            float(jnp.max(jnp.abs(lg1 - full[:, -1]))))
+
+
+@pytest.mark.parametrize("arch", TIGHT)
+def test_decode_matches_teacher_forcing_tight(arch, rng):
+    cfg = configs.get(arch).reduced()
+    e0, e1 = _roundtrip(cfg, rng)
+    assert e0 < 5e-4, f"prefill mismatch {e0}"
+    assert e1 < 5e-3, f"decode mismatch {e1}"
+
+
+@pytest.mark.parametrize("arch", LOOSE)
+def test_decode_matches_teacher_forcing_moe(arch, rng):
+    cfg = dataclasses.replace(configs.get(arch).reduced(),
+                              capacity_factor=8.0)
+    e0, e1 = _roundtrip(cfg, rng)
+    assert e0 < 5e-3, f"prefill mismatch {e0}"
+    assert e1 < 0.2, f"decode mismatch beyond routing-flip scale: {e1}"
+
+
+def test_moe_decode_continuous_routing_control(rng):
+    """With top_k == n_experts routing is continuous: error collapses."""
+    cfg = configs.get("phi3.5-moe-42b-a6.6b").reduced()
+    cfg = dataclasses.replace(cfg, moe_top_k=cfg.n_experts,
+                              capacity_factor=8.0)
+    e0, e1 = _roundtrip(cfg, rng)
+    assert e1 < 5e-3, e1

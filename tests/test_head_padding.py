@@ -1,0 +1,64 @@
+"""Physical head/expert padding invariants (EXPERIMENTS.md Section Perf).
+
+Padding exists purely so tensor dims tile the mesh; it must be
+functionally inert: dummy heads contribute nothing to the output and
+receive zero gradient (so training can never 'grow into' them), and
+dummy experts are never routed to.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.models import build_model
+from repro.models.attention import make_head_mask
+
+
+def test_head_mask_layout():
+    cfg = configs.get("granite-moe-3b-a800m")   # 24 heads -> 32, kv 8
+    m = np.asarray(make_head_mask(cfg))
+    assert m.shape == (32,)
+    assert m.sum() == 24
+    # kv-major layout: per kv group of g_phys=4, first 3 real
+    assert (m.reshape(8, 4) == np.array([1, 1, 1, 0])).all()
+
+
+def test_dummy_heads_get_zero_gradient(rng):
+    cfg = configs.get("qwen2-0.5b").reduced()   # head_pad_to=16, real 4
+    assert cfg.n_heads_phys > cfg.n_heads
+    api = build_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = {"tokens": rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32),
+             "labels": rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)}
+    g = jax.jit(jax.grad(lambda p, b: api.loss_fn(p, b)[0]))(params, batch)
+
+    mask = np.asarray(make_head_mask(cfg))      # (H_phys,)
+    hd = cfg.head_dim
+    for name in ("wq", "wo"):
+        gw = np.asarray(g["blocks"]["sub0"]["attn"][name], np.float32)
+        if name == "wq":                        # (L, D, H*hd)
+            per_head = np.abs(gw).reshape(*gw.shape[:-1], -1, hd).sum(
+                axis=(0, 1, 3))
+        else:                                   # (L, H*hd, D)
+            per_head = np.abs(gw).reshape(gw.shape[0], -1, hd,
+                                          gw.shape[-1]).sum(axis=(0, 2, 3))
+        assert (per_head[mask == 0] == 0).all(), f"dummy {name} grads leak"
+        assert (per_head[mask == 1] > 0).all(), f"real {name} grads missing"
+
+
+def test_dummy_experts_never_routed(rng):
+    cfg = dataclasses.replace(
+        configs.get("granite-moe-3b-a800m").reduced(), expert_pad_to=6)
+    assert cfg.n_experts_phys == 6 and cfg.n_experts == 4
+    api = build_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    batch = {"tokens": rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32),
+             "labels": rng.integers(0, cfg.vocab, (2, 16)).astype(np.int32)}
+    g = jax.jit(jax.grad(lambda p, b: api.loss_fn(p, b)[0]))(params, batch)
+    gw = np.asarray(g["blocks"]["sub0"]["moe"]["w_gate"], np.float32)
+    per_expert = np.abs(gw).sum(axis=(0, 2, 3))       # (E_phys,)
+    assert (per_expert[cfg.n_experts:] == 0).all(), "dummy experts trained"
+    assert (per_expert[:cfg.n_experts] > 0).all()

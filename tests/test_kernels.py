@@ -1,0 +1,109 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles (interpret mode).
+
+Contract (repo deliverable c): for each Pallas kernel, sweep shapes and
+dtypes and assert_allclose against the pure-jnp oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.distance_topk import distance_topk as dtk_kernel
+from repro.kernels.l2_distance import l2_distance as l2_kernel
+from repro.kernels.local_topk import local_topk as ltk_kernel
+
+SHAPES = [  # (B, d, m)
+    (8, 128, 256),
+    (16, 256, 512),
+    (1, 512, 1024),
+    (13, 300, 777),     # padding path
+    (4, 64, 96),        # padding path
+]
+DTYPES = [np.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=1.0) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_l2_distance_sweep(rng, shape, dtype):
+    B, d, m = shape
+    q = rng.normal(size=(B, d)).astype(np.float32).astype(dtype)
+    p = rng.normal(size=(m, d)).astype(np.float32).astype(dtype)
+    out = ops.l2_distance(q, p)
+    want = ref.l2_distance_ref(q, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               **_tol(dtype))
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("l", [1, 16, 100])
+def test_distance_topk_sweep(rng, shape, dtype, l):
+    B, d, m = shape
+    l = min(l, m)
+    q = rng.normal(size=(B, d)).astype(np.float32).astype(dtype)
+    p = rng.normal(size=(m, d)).astype(np.float32).astype(dtype)
+    v, i = ops.distance_topk(q, p, l)
+    rv, ri = ref.distance_topk_ref(q, p, l)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), **_tol(dtype))
+    if dtype == np.float32:  # id sets only well-defined without bf16 ties
+        for b in range(B):
+            assert set(np.asarray(i)[b].tolist()) == set(
+                np.asarray(ri)[b].tolist()), b
+
+
+@pytest.mark.parametrize("shape", [(8, 512), (5, 1000), (16, 4096)])
+@pytest.mark.parametrize("l", [1, 7, 128])
+def test_local_topk_sweep(rng, shape, l):
+    B, m = shape
+    l = min(l, m)
+    x = rng.normal(size=(B, m)).astype(np.float32)
+    v, i = ops.local_topk(x, l)
+    rv, ri = ref.local_topk_ref(x, l)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-5)
+    assert (np.asarray(i) == np.asarray(ri)).all()
+
+
+def test_duplicate_values_stable(rng):
+    """Tie-break parity with lax.top_k (smaller index wins)."""
+    x = np.round(rng.normal(size=(4, 512)), 1).astype(np.float32)
+    v, i = ops.local_topk(x, 32)
+    rv, ri = ref.local_topk_ref(x, 32)
+    assert (np.asarray(i) == np.asarray(ri)).all()
+
+
+def test_direct_kernel_blocks(rng):
+    """Exercise non-default BlockSpec tilings on the raw kernels."""
+    q = rng.normal(size=(16, 256)).astype(np.float32)
+    p = rng.normal(size=(512, 256)).astype(np.float32)
+    for bb, bm, bk in [(8, 128, 128), (16, 256, 256), (8, 512, 128)]:
+        out = l2_kernel(q, p, block_b=bb, block_m=bm, block_k=bk,
+                        interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(ref.l2_distance_ref(q, p)),
+                                   rtol=1e-4, atol=1e-3)
+        v, i = dtk_kernel(q, p, 16, block_b=bb, block_m=bm, block_k=bk,
+                          interpret=True)
+        rv, _ = ref.distance_topk_ref(q, p, 16)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(rv),
+                                   rtol=1e-4, atol=1e-3)
+    x = rng.normal(size=(8, 1024)).astype(np.float32)
+    for bb, bm in [(8, 256), (4, 512)]:
+        v, i = ltk_kernel(x, 16, block_b=bb, block_m=bm, interpret=True)
+        rv, ri = ref.local_topk_ref(x, 16)
+        np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-5)
+
+
+def test_oracle_fallback_large_l(rng):
+    """l > MAX_L must route to the oracle transparently."""
+    q = rng.normal(size=(4, 64)).astype(np.float32)
+    p = rng.normal(size=(2048, 64)).astype(np.float32)
+    v, i = ops.distance_topk(q, p, 512)
+    rv, ri = ref.distance_topk_ref(q, p, 512)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
+                               atol=1e-3)

@@ -1,0 +1,143 @@
+"""Algorithm 2 (distributed l-NN) vs brute force, plus the simple-method
+baseline, the sample-prune lemma, and the distributed vote heads."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+import repro.core as core
+
+K = 8
+
+
+def _query(mesh, points, pids, queries, l, key=0, **kw):
+    def fn(p, i, q, k):
+        res = core.knn_query(p, i, q, l, k, axis_name="x", **kw)
+        return (res.dists, res.ids, res.selection.iterations,
+                res.prune.applied, res.prune.survivors)
+
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P("x"), P("x"), P(None), P(None)),
+        out_specs=(P(None), P(None), P(), P(None), P(None))))
+    return f(points, pids, queries, jax.random.PRNGKey(key))
+
+
+def _brute(points, queries, l):
+    d = ((queries[:, None, :] - points[None]) ** 2).sum(-1)
+    idx = np.argsort(d, axis=1, kind="stable")[:, :l]
+    return np.take_along_axis(d, idx, 1), idx
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(min_value=4, max_value=64),
+    dim=st.integers(min_value=1, max_value=8),
+    l=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=999),
+)
+def test_knn_property(mesh8, m, dim, l, seed):
+    l = min(l, K * m)
+    r = np.random.default_rng(seed)
+    pts = r.normal(size=(K * m, dim)).astype(np.float32)
+    q = r.normal(size=(2, dim)).astype(np.float32)
+    pids = np.arange(K * m, dtype=np.int32)
+    d, i, iters, applied, surv = _query(mesh8, pts, pids, q, l, key=seed)
+    bd, bi = _brute(pts, q, l)
+    for b in range(2):
+        np.testing.assert_allclose(np.sort(np.asarray(d)[b]), bd[b],
+                                   rtol=1e-4, atol=1e-4)
+        assert set(np.asarray(i)[b].tolist()) == set(bi[b].tolist())
+
+
+def test_knn_matches_simple_method(mesh8, rng):
+    """Algorithm 2 and the paper's gather baseline agree exactly."""
+    pts = rng.normal(size=(K * 128, 16)).astype(np.float32)
+    q = rng.normal(size=(4, 16)).astype(np.float32)
+    pids = np.arange(len(pts), dtype=np.int32)
+    l = 32
+
+    def fn(p, i, qq, k):
+        res = core.knn_query(p, i, qq, l, k, axis_name="x")
+        sd, si = core.knn_simple(p, i, qq, l, axis_name="x")
+        return res.dists, res.ids, sd, si
+
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh8, in_specs=(P("x"), P("x"), P(None), P(None)),
+        out_specs=(P(None),) * 4))
+    d, i, sd, si = f(pts, pids, q, jax.random.PRNGKey(1))
+    for b in range(4):
+        np.testing.assert_allclose(np.sort(np.asarray(d)[b]),
+                                   np.asarray(sd)[b], rtol=1e-5)
+        assert set(np.asarray(i)[b].tolist()) == set(
+            np.asarray(si)[b].tolist())
+
+
+def test_prune_lemma_2_3(mesh8, rng):
+    """Lemma 2.3: w.h.p. the prune keeps >= l and <= O(l) survivors."""
+    l = 128
+    pts = rng.normal(size=(K * 2048, 4)).astype(np.float32)
+    q = rng.normal(size=(3, 4)).astype(np.float32)
+    pids = np.arange(len(pts), dtype=np.int32)
+    d, i, iters, applied, surv = _query(mesh8, pts, pids, q, l)
+    surv = np.asarray(surv)
+    assert np.asarray(applied).all()          # prune accepted (w.h.p. event)
+    assert (surv >= l).all()                  # Las Vegas guarantee
+    assert (surv <= 11 * l).all()             # Lemma 2.3 bound
+
+
+def test_knn_no_sampling_path(mesh8, rng):
+    pts = rng.normal(size=(K * 64, 4)).astype(np.float32)
+    q = rng.normal(size=(2, 4)).astype(np.float32)
+    pids = np.arange(len(pts), dtype=np.int32)
+    d, i, *_ = _query(mesh8, pts, pids, q, 16, use_sampling=False)
+    bd, bi = _brute(pts, q, 16)
+    for b in range(2):
+        np.testing.assert_allclose(np.sort(np.asarray(d)[b]), bd[b],
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_knn_multi_pivot(mesh8, rng):
+    pts = rng.normal(size=(K * 256, 8)).astype(np.float32)
+    q = rng.normal(size=(2, 8)).astype(np.float32)
+    pids = np.arange(len(pts), dtype=np.int32)
+    d, i, iters, *_ = _query(mesh8, pts, pids, q, 64, num_pivots=K)
+    bd, bi = _brute(pts, q, 64)
+    for b in range(2):
+        assert set(np.asarray(i)[b].tolist()) == set(bi[b].tolist())
+
+
+def test_knn_classify_and_regress(mesh8, rng):
+    n, dim, l, C = K * 256, 8, 16, 5
+    from repro.data import gaussian_clusters
+    pts, labels = gaussian_clusters(n, dim, C, seed=1)
+    q = pts[:4] + 0.01  # queries near known points
+    pids = np.arange(n, dtype=np.int32)
+    vals = labels.astype(np.float32)
+
+    def fn(p, i, lab, v, qq, k):
+        res = core.knn_query(p, i, qq, l, k, axis_name="x",
+                             gather_results=False)
+        m = p.shape[0]
+        start = jax.lax.axis_index("x") * m
+        rows = jnp.clip(res.local_ids - start, 0, m - 1)
+        pred, hist = core.knn_classify(res.mask, lab[rows], C,
+                                       axis_name="x")
+        reg = core.knn_regress(res.mask, v[rows], axis_name="x")
+        return pred, reg
+
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh8,
+        in_specs=(P("x"), P("x"), P("x"), P("x"), P(None), P(None)),
+        out_specs=(P(None), P(None))))
+    pred, reg = f(pts, pids, labels, vals, q, jax.random.PRNGKey(2))
+    # oracle: brute-force vote
+    bd, bi = _brute(pts, q, l)
+    want = [np.bincount(labels[bi[b]], minlength=C).argmax()
+            for b in range(4)]
+    assert np.asarray(pred).tolist() == want
+    want_reg = [labels[bi[b]].astype(np.float32).mean() for b in range(4)]
+    np.testing.assert_allclose(np.asarray(reg), want_reg, rtol=1e-5)

@@ -1,0 +1,59 @@
+"""Algorithm 2's sample-prune step (Lemma 2.3) in isolation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import sampling
+
+K = 8
+
+
+def _prune(mesh, d, l, key=0):
+    def fn(dd, kk):
+        r = sampling.sample_prune(dd, kk, l, axis_name="x")
+        return r.valid, r.radius, r.survivors, r.applied
+
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
+        out_specs=(P(None, "x"), P(None), P(None), P(None)),
+        check_vma=False))
+    return f(d, jax.random.PRNGKey(key))
+
+
+def test_prune_never_loses_true_topl(mesh8, rng):
+    """Las Vegas property: whether or not the radius was accepted, the
+    survivor set contains the l smallest elements."""
+    L = 64
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        d = r.exponential(size=(2, K * L)).astype(np.float32)
+        valid, radius, surv, applied = _prune(mesh8, d, L, key=seed)
+        valid = np.asarray(valid)
+        for b in range(2):
+            top = np.argsort(d[b])[:L]
+            assert valid[b][top].all(), "prune cut a true neighbor"
+
+
+def test_prune_bounds(mesh8, rng):
+    L = 128
+    d = rng.exponential(size=(1, K * L)).astype(np.float32)
+    valid, radius, surv, applied = _prune(mesh8, d, L)
+    assert bool(np.asarray(applied).all())
+    s = int(np.asarray(surv)[0])
+    assert L <= s <= 11 * L          # Lemma 2.3 envelope
+
+
+def test_prune_with_sentinels(mesh8, rng):
+    """Sentinel +inf entries are 'fake data' and never survive (Step 7)."""
+    L = 32
+    d = rng.exponential(size=(1, K * L)).astype(np.float32)
+    d[:, ::3] = np.inf
+    valid, radius, surv, applied = _prune(mesh8, d, L)
+    assert not np.asarray(valid)[0][::3].any()
+
+
+def test_sample_counts_match_paper_constants():
+    assert sampling.sample_count(1024) == int(np.ceil(12 * np.log(1024)))
+    assert sampling.radius_index(1024) == int(np.ceil(21 * np.log(1024)))

@@ -1,0 +1,128 @@
+"""Algorithm 1 (distributed randomized selection) vs the numpy oracle.
+
+Property-based: for arbitrary inputs (duplicates, +inf sentinels, every
+rank l), the selected set must be exactly the l smallest under the
+composite (value, id) order — Definition 1.1.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.core.selection import (SelectionResult, select_l_smallest,
+                                  selected_mask)
+
+K = 8  # shards
+
+
+def _run(mesh, vals, ids, l, key=0, num_pivots=1, valid=None):
+    res_spec = SelectionResult(P(None), P(None), P(), P(None))
+    has_valid = valid is not None
+
+    def fn(v, i, l, key, valid=None):
+        res = select_l_smallest(v, i, l, key, axis_name="x",
+                                valid=valid, num_pivots=num_pivots)
+        return res, selected_mask(v, i, res, valid=valid)
+
+    in_specs = [P(None, "x"), P(None, "x"), P(None), P(None)]
+    args = [vals, ids, l, jax.random.PRNGKey(key)]
+    if has_valid:
+        in_specs.append(P(None, "x"))
+        args.append(valid)
+    f = jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(res_spec, P(None, "x"))))
+    return f(*args)
+
+
+def _oracle_check(vals, mask, l_arr, valid=None):
+    mask = np.asarray(mask)
+    for b in range(vals.shape[0]):
+        v = vals[b]
+        sel = np.flatnonzero(mask[b])
+        pool = np.arange(v.shape[0])
+        if valid is not None:
+            pool = pool[np.asarray(valid)[b]]
+        l = min(int(l_arr[b]), pool.size)
+        assert sel.size == l, (sel.size, l)
+        # composite order: value then index — lexsort
+        order = pool[np.lexsort((pool, v[pool]))][:l]
+        assert set(sel.tolist()) == set(order.tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=32),
+    l_frac=st.floats(min_value=0.0, max_value=1.0),
+    dup=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_selection_property(mesh8, m, l_frac, dup, seed):
+    n = K * m
+    r = np.random.default_rng(seed)
+    vals = r.normal(size=(1, n)).astype(np.float32)
+    if dup:
+        vals = np.round(vals, 1)  # force many ties
+    ids = np.arange(n, dtype=np.int32)[None].repeat(1, 0)
+    l = np.array([max(1, int(l_frac * n))], np.int32)
+    res, mask = _run(mesh8, vals, ids, l, key=seed)
+    assert bool(np.asarray(res.converged).all())
+    _oracle_check(vals, mask, l)
+
+
+@pytest.mark.parametrize("num_pivots", [1, K])
+@pytest.mark.parametrize("l", [1, 7, 64, 256])
+def test_selection_ranks(mesh8, rng, num_pivots, l):
+    n = 256
+    vals = rng.normal(size=(2, n)).astype(np.float32)
+    ids = np.broadcast_to(np.arange(n, dtype=np.int32), (2, n)).copy()
+    res, mask = _run(mesh8, vals, ids, np.array([l, l], np.int32),
+                     num_pivots=num_pivots)
+    _oracle_check(vals, mask, [l, l])
+
+
+def test_selection_multi_pivot_fewer_iterations(mesh8, rng):
+    n = 4096
+    vals = rng.normal(size=(1, n)).astype(np.float32)
+    ids = np.arange(n, dtype=np.int32)[None]
+    l = np.array([n // 3], np.int32)
+    r1, _ = _run(mesh8, vals, ids, l, key=3, num_pivots=1)
+    rk, _ = _run(mesh8, vals, ids, l, key=3, num_pivots=K)
+    # beyond-paper optimization: k pivots/iteration cuts rounds ~log k fold
+    assert int(rk.iterations) < int(r1.iterations)
+
+
+def test_selection_with_sentinels(mesh8, rng):
+    n = 128
+    vals = rng.normal(size=(1, n)).astype(np.float32)
+    vals[:, 50:] = np.inf
+    ids = np.arange(n, dtype=np.int32)[None]
+    for l in (1, 50, 128):
+        res, mask = _run(mesh8, vals, ids, np.array([l], np.int32))
+        assert int(np.asarray(mask).sum()) == l
+
+
+def test_selection_valid_mask(mesh8, rng):
+    n = 256
+    vals = rng.normal(size=(1, n)).astype(np.float32)
+    ids = np.arange(n, dtype=np.int32)[None]
+    valid = (rng.random((1, n)) < 0.5)
+    l = np.array([max(1, int(valid.sum()) // 2)], np.int32)
+    res, mask = _run(mesh8, vals, ids, l, valid=valid)
+    assert not np.any(np.asarray(mask) & ~valid)
+    _oracle_check(vals, mask, l, valid=valid)
+
+
+def test_selection_iterations_bound(mesh8, rng):
+    """Theorem 2.2: O(log n) rounds w.h.p. — generous constant check."""
+    n = 8192
+    vals = rng.normal(size=(1, n)).astype(np.float32)
+    ids = np.arange(n, dtype=np.int32)[None]
+    res, _ = _run(mesh8, vals, ids, np.array([n // 2], np.int32))
+    assert int(res.iterations) <= 8 * int(np.ceil(np.log2(n))) + 16
+    assert bool(np.asarray(res.converged).all())

@@ -1,0 +1,44 @@
+"""Logical-axis sharding rules and divisibility filtering."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models import sharding as shd
+
+
+def test_spec_resolution_default():
+    s = shd.spec("batch", None, "mlp")
+    assert s == P(("pod", "data"), None, "model")
+
+
+def test_spec_rule_override():
+    with shd.use_rules(shd.Rules(batch=None, kv_seq="data")):
+        assert shd.spec("batch", "kv_seq") == P(None, "data")
+    assert shd.spec("kv_seq") == P(None)  # default restored
+
+
+def test_spec_filters_missing_mesh_axes(mesh42):
+    with jax.set_mesh(mesh42):  # no "pod" axis
+        s = shd.spec("batch", "vocab")
+        assert s == P("data", "model")
+
+
+def test_divisible_drops_nondividing_axes(mesh42):
+    # (40, 30): 40 % 4 == 0 -> keep data; 30 % 2 == 0 -> keep model
+    assert shd.divisible(P("data", "model"), (40, 30), mesh42) \
+        == P("data", "model")
+    # 2 % 4 != 0 -> dropped
+    assert shd.divisible(P("data"), (2,), mesh42) == P(None)
+    # tuple axes: keep prefix that divides
+    got = shd.divisible(P(("data", "model")), (4,), mesh42)
+    assert got == P("data")
+    # batch 1 decodes to fully replicated
+    assert shd.divisible(P(("data", "model")), (1,), mesh42) == P(None)
+
+
+def test_constrain_noop_without_mesh():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    y = shd.constrain(x, "batch", None)
+    assert (y == x).all()
