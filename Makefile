@@ -1,0 +1,22 @@
+# Local fallback for the CI entrypoints (.github/workflows/ci.yml).
+PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test deps bench bench-serve examples
+
+deps:
+	pip install -r requirements-dev.txt
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PYTHONPATH_PREFIX) python -m pytest -x -q
+
+bench:
+	$(PYTHONPATH_PREFIX):. python -m benchmarks.run
+
+bench-serve:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py
+
+examples:
+	$(PYTHONPATH_PREFIX) python examples/quickstart.py
+	$(PYTHONPATH_PREFIX) python examples/knn_lm_serve.py

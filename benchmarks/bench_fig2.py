@@ -21,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 from benchmarks.common import kmachine_mesh, row, time_fn
 import repro.core as core
 from repro.core import sampling
+from repro.parallel.compat import shard_map
 
 
 def _bytes_simple(k: int, l: int) -> int:
@@ -54,10 +55,10 @@ def run(emit=print):
         def simple(p, i, qq):
             return core.knn_simple(p, i, qq, l, axis_name="x")
 
-        f2 = jax.jit(jax.shard_map(
+        f2 = jax.jit(shard_map(
             alg2, mesh=mesh, in_specs=(P("x"), P("x"), P(None), P(None)),
             out_specs=(P(None), P())))
-        fs = jax.jit(jax.shard_map(
+        fs = jax.jit(shard_map(
             simple, mesh=mesh, in_specs=(P("x"), P("x"), P(None)),
             out_specs=(P(None), P(None))))
 

@@ -17,6 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import kmachine_mesh, row
 import repro.core as core
+from repro.parallel.compat import shard_map
 
 
 def run(emit=print):
@@ -34,7 +35,7 @@ def run(emit=print):
                 r = core.knn_query(p, i, qq, l, key, axis_name="x")
                 return r.selection.iterations
 
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 fn, mesh=mesh,
                 in_specs=(P("x"), P("x"), P(None), P(None)),
                 out_specs=P()))

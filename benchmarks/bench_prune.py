@@ -13,6 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import kmachine_mesh, row
 from repro.core import sampling
+from repro.parallel.compat import shard_map
 
 
 def run(emit=print):
@@ -24,7 +25,7 @@ def run(emit=print):
             r = sampling.sample_prune(d, key, l, axis_name="x")
             return r.survivors, r.applied
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
             out_specs=(P(None), P(None)), check_vma=False))
         surv, acc, lost = [], 0, 0

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import kmachine_mesh, row
 from repro.core.selection import SelectionResult, select_l_smallest
+from repro.parallel.compat import shard_map
 
 
 def _iters(mesh, k, n, l, seed=0, num_pivots=1, repeats=5):
@@ -26,7 +27,7 @@ def _iters(mesh, k, n, l, seed=0, num_pivots=1, repeats=5):
                               num_pivots=num_pivots)
         return r.iterations
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(P(None, "x"), P(None, "x"), P(None)),
         out_specs=P()))
     rng = np.random.default_rng(seed)

@@ -1,0 +1,126 @@
+"""Micro-batched kNN service throughput/latency vs the gather baseline.
+
+Drives runtime/knn_server.py with a closed-loop offered load (bursts of
+requests with per-request l drawn from a fixed mix), for both
+``sampler="selection"`` (Algorithm 2, O(log l) rounds) and
+``sampler="gather"`` (the paper's simple method via knn_simple, O(k*l)
+values on the wire) — the paper's Figure 2 contrast restated as a serving
+benchmark.  Emits CSV rows like every other bench module plus
+``BENCH_serve.json`` with sustained queries/sec and p50/p99 request
+latency per sampler.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
+"""
+
+try:
+    from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
+except ImportError:  # run as a plain script: python benchmarks/bench_serve.py
+    import common
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.configs.knn_service import CONFIG
+
+
+# CPU-sized service shape: big enough that a datastore pass dominates the
+# python batching overhead, small enough that the bench stays in seconds.
+N_POINTS = common.K_MACHINES * 4096
+DIM = 32
+L_MAX = 32
+L_MIX = (1, 4, 8, 32)          # per-request l rotation
+BUCKETS = (1, 2, 4, 8, 16)
+BURSTS = 24                    # measured dispatch bursts per sampler
+WARM_BURSTS = 3
+
+
+def _build_server(sampler: str):
+    from repro.runtime import KnnServer
+    rng = np.random.default_rng(0)
+    pts = rng.normal(size=(N_POINTS, DIM)).astype(np.float32)
+    cfg = CONFIG.replace(
+        dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS, sampler=sampler)
+    srv = KnnServer(pts, cfg=cfg, mesh=common.kmachine_mesh(),
+                    axis_name="x")
+    srv.warmup()
+    return srv
+
+
+def _drive(srv, rng) -> dict:
+    """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
+    through the bucket spectrum so padding and bucket choice both get
+    exercised; latencies are per request (enqueue -> result)."""
+    burst_sizes = [1, 3, 8, 16, 5, 16, 2, 16]
+    lat, iters, rounds, msgs = [], [], [], []
+    n_queries = 0
+    t0 = None
+    for burst in range(WARM_BURSTS + BURSTS):
+        if burst == WARM_BURSTS:
+            t0 = time.perf_counter()
+            srv.stats = type(srv.stats)()    # drop warmup counters
+        bs = burst_sizes[burst % len(burst_sizes)]
+        qs = rng.normal(size=(bs, DIM)).astype(np.float32)
+        ls = [L_MIX[(burst + j) % len(L_MIX)] for j in range(bs)]
+        results = srv.query_batch(qs, ls)
+        if burst >= WARM_BURSTS:
+            n_queries += bs
+            for r in results:
+                lat.append(r.latency_s)
+                iters.append(r.iterations)
+                rounds.append(r.rounds)
+                msgs.append(r.messages)
+    wall = time.perf_counter() - t0
+    lat = np.asarray(lat)
+    return {
+        "queries": n_queries,
+        "wall_s": wall,
+        "qps": n_queries / wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "mean_iterations": float(np.mean(iters)),
+        "mean_rounds": float(np.mean(rounds)),
+        "mean_messages": float(np.mean(msgs)),
+        "batches": srv.stats.batches,
+        "padded_rows": srv.stats.padded_rows,
+        "bucket_counts": {str(k): v
+                          for k, v in sorted(srv.stats.bucket_counts.items())},
+    }
+
+
+def run(emit=print, out_path=None) -> dict:
+    rng = np.random.default_rng(7)
+    report = {
+        "n_points": N_POINTS, "dim": DIM, "l_max": L_MAX,
+        "l_mix": list(L_MIX), "buckets": list(BUCKETS),
+        "k_machines": common.K_MACHINES,
+    }
+    for sampler in ("selection", "gather"):
+        srv = _build_server(sampler)
+        report[sampler] = _drive(srv, rng)
+        report.setdefault("kernel_envelopes", {})[sampler] = srv.envelopes
+        r = report[sampler]
+        emit(common.row(
+            f"serve_{sampler}_qps", 1e6 / r["qps"],
+            f"qps={r['qps']:.1f} p50={r['p50_ms']:.2f}ms "
+            f"p99={r['p99_ms']:.2f}ms rounds={r['mean_rounds']:.1f}"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        emit(f"# wrote {out_path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(emit=print, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

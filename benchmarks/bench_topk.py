@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import kmachine_mesh, row, time_fn
 import repro.core as core
+from repro.parallel.compat import shard_map
 
 
 def run(emit=print):
@@ -32,7 +33,7 @@ def run(emit=print):
                                           method=method)
                 return r.values, r.iterations
 
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
                 out_specs=(P(None), P())))
             key = jax.random.PRNGKey(0)

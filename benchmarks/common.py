@@ -21,11 +21,11 @@ import time  # noqa: E402
 
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
+from repro.parallel.compat import make_mesh
 
 
 def kmachine_mesh(k: int = K_MACHINES):
-    return jax.make_mesh((k,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((k,), ("x",))
 
 
 def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:

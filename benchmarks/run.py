@@ -8,6 +8,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_prune     Lemma 2.3 (sample-prune survivor envelope)
   bench_topk      sampler-level selection-vs-gather crossover
   bench_kernels   fused distance+top-l traffic model vs oracle timing
+  bench_serve     micro-batched query service qps + p50/p99 latency
+                  (also standalone: emits BENCH_serve.json — see its header)
+
+Paste the CSV into the EXPERIMENTS.md "Benchmark results" table.
 """
 
 from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
@@ -15,10 +19,11 @@ from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
 
 def main() -> None:
     from benchmarks import (bench_fig2, bench_kernels, bench_messages,
-                            bench_prune, bench_rounds, bench_topk)
+                            bench_prune, bench_rounds, bench_serve,
+                            bench_topk)
     print("name,us_per_call,derived")
     for mod in (bench_rounds, bench_fig2, bench_messages, bench_prune,
-                bench_topk, bench_kernels):
+                bench_topk, bench_kernels, bench_serve):
         mod.run(emit=print)
 
 

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as core
+from repro.parallel.compat import make_mesh, shard_map
 
 K = 8
 V = K * 19008      # ~152k, qwen-sized
@@ -26,8 +27,7 @@ B = 16
 
 
 def main():
-    mesh = jax.make_mesh((K,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((K,), ("model",))
     rng = np.random.default_rng(0)
     logits = rng.normal(size=(B, V)).astype(np.float32)
 
@@ -42,7 +42,7 @@ def main():
                                           method=method)
                 return r.values, r.iterations
 
-            f = jax.jit(jax.shard_map(
+            f = jax.jit(shard_map(
                 fn, mesh=mesh, in_specs=(P(None, "model"), P(None)),
                 out_specs=(P(None), P())))
             key = jax.random.PRNGKey(0)

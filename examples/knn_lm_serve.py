@@ -1,13 +1,23 @@
-"""kNN-LM serving: a reduced LM decodes with Algorithm-2 retrieval mixed
-into its vocab distribution — the paper's l-NN as a production serving
-feature (DESIGN.md Section 3).
+"""kNN-LM serving through the micro-batched query service.
 
-The datastore is sharded over the mesh's model axis; each decode step:
+A reduced LM decodes while a KnnServer fronts the sharded (hidden-state
+key, next-token value) datastore (DESIGN.md Section 3).  Each decode step:
+
   1. LM decode_step produces vocab-sharded logits;
-  2. the last hidden state queries the datastore via Algorithm 2
-     (local top-l -> sample-prune -> distributed selection);
-  3. the sparse kNN mass is scattered into the sharded logits;
-  4. the token is drawn by the distributed-selection top-k sampler.
+  2. the per-sequence query states are *submitted* to the service, whose
+     micro-batcher coalesces them into one padded device batch and runs
+     Algorithm 2 (local top-l -> sample-prune -> distributed selection);
+  3. winners come back as (token value, distance) per request — values are
+     looked up host-side from the global ids, so only distances and ids
+     ever crossed the interconnect;
+  4. the sparse kNN mass is scattered into the sharded logits on device
+     (interp_logits) and the token is drawn by the distributed-selection
+     top-k sampler.
+
+This is the production decomposition: the LM mesh and the datastore mesh
+are independent services, coupled only by (query vector in, l winners out)
+— the datastore can scale, re-shard, or A/B its sampler (see
+configs/knn_service.py) without touching the LM.
 
   PYTHONPATH=src python examples/knn_lm_serve.py
 """
@@ -24,28 +34,39 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as configs
 import repro.core as core
+from repro.configs.knn_service import CONFIG as KNN_CONFIG
 from repro.models import build_model
 from repro.models import sharding as shd
 from repro.models.layers import embed
+from repro.parallel.compat import make_mesh, set_mesh, shard_map
+from repro.runtime import KnnServer
 
 L = 8          # neighbors per step
 LAM = 0.35     # kNN interpolation weight
+TEMP = 10.0    # kNN softmax temperature
 STEPS = 12
+B = 4          # decode batch = requests per service flush
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     cfg = configs.get("qwen2-0.5b").reduced()
     api = build_model(cfg)
     rng = np.random.default_rng(0)
 
-    # synthetic datastore: (hidden-state key, next-token value) pairs
+    # synthetic datastore: (hidden-state key, next-token value) pairs,
+    # sharded over all 8 host devices by the service's own 1-D mesh.
     N = 2 * 4096
     ds_keys = rng.normal(size=(N, cfg.d_model)).astype(np.float32)
     ds_vals = rng.integers(0, cfg.vocab, size=(N,)).astype(np.int32)
+    server = KnnServer(
+        ds_keys, ds_vals,
+        cfg=KNN_CONFIG.replace(dim=cfg.d_model, l=L, l_max=L,
+                               bucket_sizes=(1, 2, B)),
+        axis_name="store")
+    server.warmup()
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         params = api.init_params(jax.random.PRNGKey(0))
         specs = api.param_specs()
         params = jax.tree.map(
@@ -53,7 +74,6 @@ def main():
                 x, NamedSharding(mesh, shd.divisible(s, x.shape, mesh))),
             params, specs)
 
-        B = 4
         prompt = rng.integers(0, cfg.vocab, (B, 8)).astype(np.int32)
         cache = api.init_cache(jax.random.PRNGKey(1), B, 64,
                                dtype=jnp.float32)
@@ -62,42 +82,54 @@ def main():
                 params, {"tokens": prompt}, cache)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
 
-        def knn_mixed_step(params, tok, cache, dsk, dsv, key):
+        def decode_logits(params, tok, cache):
             lm_logits, cache = api.decode_step(params, tok, cache)
             # query = current token embedding (stand-in for the hidden
             # state; a production deployment taps the pre-unembed state)
             h = embed(params["embed"], tok[:, None])[:, 0]
+            return lm_logits, cache, h
 
-            def retrieve_and_mix(lml, kk, vv, hh, key):
-                store = core.datastore.build_local(kk, vv,
-                                                   axis_name="model")
-                ret = core.datastore.retrieve(store, hh, L, key,
-                                              axis_name="model")
-                mixed = core.datastore.interp_logits(lml, ret, LAM,
-                                                     axis_name="model")
-                nxt = core.topk_sample(mixed, 16, 0.8,
-                                       jax.random.fold_in(key, 1),
-                                       axis_name="model")
-                return nxt, ret.iterations
+        def mix_and_sample(lml, toks, wts, key):
+            ret = core.datastore.RetrievalResult(
+                tokens=toks, weights=wts, dists=jnp.zeros_like(wts),
+                iterations=jnp.int32(0))
+            mixed = core.datastore.interp_logits(lml, ret, LAM,
+                                                 axis_name="model")
+            return core.topk_sample(mixed, 16, 0.8, key, axis_name="model")
 
-            nxt, iters = jax.shard_map(
-                retrieve_and_mix, mesh=mesh,
-                in_specs=(P(None, "model"), P("model"), P("model"),
-                          P(None), P(None)),
-                out_specs=(P(None), P()), check_vma=False,
-            )(lm_logits, dsk, dsv, h, key)
-            return nxt.astype(jnp.int32), cache, iters
+        step_logits = jax.jit(decode_logits)
+        step_mix = jax.jit(shard_map(
+            mix_and_sample, mesh=mesh,
+            in_specs=(P(None, "model"), P(None), P(None), P(None)),
+            out_specs=P(None), check_vma=False))
 
-        step = jax.jit(knn_mixed_step)
         out = [np.asarray(tok)]
-        for i in range(STEPS):
-            tok, cache, iters = step(params, tok, cache, ds_keys, ds_vals,
-                                     jax.random.PRNGKey(100 + i))
-            out.append(np.asarray(tok))
+        iters = 0
+        with server.serving():
+            for i in range(STEPS):
+                lm_logits, cache, h = step_logits(params, tok, cache)
+                # one service request per sequence; the micro-batcher
+                # coalesces all B into one bucketed device batch
+                futs = [server.submit(np.asarray(h)[b], L)
+                        for b in range(B)]
+                res = [f.result(timeout=60) for f in futs]
+                iters = res[0].iterations
+                toks = np.stack([np.where(r.values < 0, 0, r.values)
+                                 for r in res]).astype(np.int32)
+                logit = np.where(np.isfinite([r.dists for r in res]),
+                                 -np.stack([r.dists for r in res]) / TEMP,
+                                 -np.inf).astype(np.float32)
+                wts = jax.nn.softmax(jnp.asarray(logit), axis=-1)
+                tok = step_mix(lm_logits, jnp.asarray(toks), wts,
+                               jax.random.PRNGKey(100 + i)).astype(jnp.int32)
+                out.append(np.asarray(tok))
         gen = np.stack(out, 1)
 
-    print(f"kNN-LM decode with lam={LAM}, l={L} over a {N}-key sharded "
-          f"datastore; last retrieval took {int(iters)} selection rounds")
+    print(f"kNN-LM decode with lam={LAM}, l={L} over a {N}-key datastore "
+          f"served by the micro-batched query service "
+          f"({server.stats.batches} batches for "
+          f"{server.stats.queries} retrievals; last retrieval took "
+          f"{iters} selection rounds)")
     print("generated token ids:")
     print(gen)
 

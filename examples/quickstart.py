@@ -1,8 +1,12 @@
-"""Quickstart: the paper's distributed l-NN over a sharded point set.
+"""Quickstart: the paper's distributed l-NN served through the query service.
 
-Runs Algorithm 2 end to end on simulated k machines (host devices), checks
-the answer against brute force, and prints the round/message telemetry the
-paper's theorems bound.
+Builds a KnnServer over a point set sharded across simulated k machines
+(host devices), submits a handful of requests — each with its *own*
+neighbor count l — lets the micro-batcher coalesce them into one padded
+device batch, and checks every answer against brute force.  The printed
+telemetry is the paper's theorem accounting: Algorithm 1 iterations
+(Theorem 2.4: O(log l), k-independent), k-machine rounds/messages, and the
+Lemma 2.3 post-prune survivor counts.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,53 +16,48 @@ import os
 os.environ.setdefault(
     "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-import repro.core as core
+from repro.configs.knn_service import CONFIG
+from repro.runtime import KnnServer
 
 K = 8          # machines
 N = K * 4096   # points
 DIM = 32
-L = 16         # neighbors
+L_MAX = 32     # shared static bound; requests pick any l <= L_MAX
 
 
 def main():
-    mesh = jax.make_mesh((K,), ("machines",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
     rng = np.random.default_rng(0)
     points = rng.normal(size=(N, DIM)).astype(np.float32)
-    point_ids = np.arange(N, dtype=np.int32)
-    queries = rng.normal(size=(4, DIM)).astype(np.float32)
 
-    def knn(points, ids, q, key):
-        res = core.knn_query(points, ids, q, L, key, axis_name="machines")
-        return res.dists, res.ids, res.selection.iterations, \
-            res.prune.survivors
+    cfg = CONFIG.replace(dim=DIM, l=16, l_max=L_MAX,
+                         bucket_sizes=(1, 2, 4, 8))
+    server = KnnServer(points, cfg=cfg, axis_name="machines")
+    server.warmup()
 
-    f = jax.jit(jax.shard_map(
-        knn, mesh=mesh,
-        in_specs=(P("machines"), P("machines"), P(None), P(None)),
-        out_specs=(P(None), P(None), P(), P(None))))
+    queries = rng.normal(size=(5, DIM)).astype(np.float32)
+    ls = [16, 1, 32, 7, 16]            # heterogeneous per-request l
+    results = server.query_batch(queries, ls)
 
-    dists, ids, iters, survivors = f(points, point_ids, queries,
-                                     jax.random.PRNGKey(0))
+    print(f"{N} points on {K} machines; {len(queries)} requests "
+          f"micro-batched into {server.stats.batches} device batch(es) "
+          f"(bucket counts {server.stats.bucket_counts}, "
+          f"{server.stats.padded_rows} padded rows)")
+    r0 = results[0]
+    print(f"selection iterations: {r0.iterations} "
+          f"(Theorem 2.4 bound ~ O(log l), l_max = {L_MAX})")
+    print(f"k-machine cost of the batch: {r0.rounds} rounds, "
+          f"{r0.messages} O(1)-word messages")
+    print(f"post-prune candidates: {[r.survivors for r in results]} "
+          f"(Lemma 2.3 bound {11 * L_MAX})")
 
-    print(f"{N} points on {K} machines, {L}-NN for {len(queries)} queries")
-    print(f"selection iterations: {int(iters)} "
-          f"(Theorem 2.4 bound ~ O(log l), l = {L})")
-    print(f"post-prune candidates: {np.asarray(survivors)} "
-          f"(Lemma 2.3 bound {11 * L})")
-
-    # verify against brute force
+    # verify every request against brute force
     full = ((queries[:, None, :] - points[None]) ** 2).sum(-1)
-    for b in range(len(queries)):
-        want = np.sort(full[b])[:L]
-        got = np.sort(np.asarray(dists)[b])
-        np.testing.assert_allclose(got, want, rtol=1e-4)
-    print("matches brute force on all queries — OK")
+    for r, row in zip(results, full):
+        want = np.sort(row)[:r.l]
+        np.testing.assert_allclose(np.sort(r.dists), want, rtol=1e-4)
+    print("all requests match brute force — OK")
 
 
 if __name__ == "__main__":

@@ -2,8 +2,12 @@
 
 Mirrors the paper's experimental setup (Section 3): synthetic points
 distributed over the mesh, scalar or d-dimensional, query broadcast,
-answer = l nearest.  Used by examples/quickstart.py and launch/serve.py
---arch knn-service.
+answer = l nearest.  Used by examples/quickstart.py, launch/serve.py
+--arch knn-service, and — via the ``service_*`` fields — the micro-batched
+query service in runtime/knn_server.py.  This dataclass is the single
+source of service tuning: bucket shapes, selection knobs, and the
+selection-vs-gather A/B switch all live here (benchmarks/bench_serve.py
+sweeps them; nothing else hard-codes a service parameter).
 """
 
 import dataclasses
@@ -18,6 +22,32 @@ class KnnServiceConfig:
     query_batch: int = 8
     num_classes: int = 16            # for the classification head
     value_range: float = 4294967295.0  # paper: U[0, 2^32 - 1]
+
+    # ---- micro-batched query service (runtime/knn_server.py) ------------
+    # Incoming requests are coalesced into one of these device batch shapes
+    # (ascending; each a static jit specialization).  A flush picks the
+    # smallest bucket >= pending count and pads the rest with l=0 rows.
+    bucket_sizes: tuple = (1, 2, 4, 8, 16, 32)
+    # Shared static upper bound on per-request l — the (B, l_max) buffer
+    # width every bucket compiles against; requests may ask for any l in
+    # [1, l_max] (per-row masking inside knn_query_batched).
+    l_max: int = 128
+    # Micro-batcher linger: how long the background batcher waits for more
+    # requests after the first one arrives before dispatching a partial
+    # bucket.
+    max_wait_ms: float = 2.0
+    # Algorithm knobs, passed straight through to Algorithm 2.
+    use_sampling: bool = True        # Lemma 2.3 sample-and-prune on/off
+    num_pivots: int = 1              # >1 = beyond-paper multi-pivot mode
+    # A/B switch: "selection" = Algorithm 2 (O(log l) rounds), "gather" =
+    # the paper's simple method (knn_simple; one O(k*l)-value all_gather).
+    sampler: str = "selection"
+    # Distance computation: "auto" routes through kernels/ops.py (Pallas
+    # kernel on TPU, jnp oracle elsewhere); "jnp" forces the pure-jnp path.
+    distance_impl: str = "auto"
+
+    def replace(self, **kw) -> "KnnServiceConfig":
+        return dataclasses.replace(self, **kw)
 
 
 CONFIG = KnnServiceConfig()

@@ -7,8 +7,9 @@ Public API re-exports.
 from repro.core.selection import (SelectionResult, select_l_smallest,
                                   selected_mask)
 from repro.core.sampling import PruneResult, sample_prune
-from repro.core.knn import (KnnResult, knn_query, knn_simple, knn_classify,
-                            knn_regress, squared_l2_distances, local_top_l,
+from repro.core.knn import (KnnResult, knn_query, knn_query_batched,
+                            knn_simple, knn_classify, knn_regress,
+                            squared_l2_distances, local_top_l,
                             gather_selected)
 from repro.core.topk import (TopKResult, distributed_topk, topk_sample,
                              greedy_sample)
@@ -17,7 +18,8 @@ from repro.core import datastore
 __all__ = [
     "SelectionResult", "select_l_smallest", "selected_mask",
     "PruneResult", "sample_prune",
-    "KnnResult", "knn_query", "knn_simple", "knn_classify", "knn_regress",
+    "KnnResult", "knn_query", "knn_query_batched", "knn_simple",
+    "knn_classify", "knn_regress",
     "squared_l2_distances", "local_top_l", "gather_selected",
     "TopKResult", "distributed_topk", "topk_sample", "greedy_sample",
     "datastore",

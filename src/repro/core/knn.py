@@ -121,6 +121,43 @@ def gather_selected(d, gid, mask, l: int, *, axis_name: str):
     return dists, ids
 
 
+def _knn_pipeline(
+    points, point_ids, queries, l_buf, l_run, key, *,
+    axis_name, distances_fn, use_sampling, num_pivots, gather_results,
+) -> KnnResult:
+    """Shared Algorithm 2 body.
+
+    ``l_buf`` is the static per-shard buffer width (the paper's "exactly l
+    points per machine"); ``l_run`` is the runtime selection rank — a scalar
+    (classic single-l path) or a (B,) int32 array (the service's per-request
+    l, bounded by ``l_buf``).  The selection threshold is per-row, so rows
+    with smaller l simply stop earlier in composite-key order; their unused
+    output slots come back as +inf sentinels from ``gather_selected``.
+    """
+    d_full = distances_fn(queries, points)                       # (B, m)
+    d, gid = local_top_l(d_full, point_ids, l_buf)               # (B, l_buf)
+
+    if use_sampling:
+        prune = sampling.sample_prune(d, key, l_run, axis_name=axis_name)
+    else:
+        finite = jnp.isfinite(d)
+        cnt = lax.psum(jnp.sum(finite.astype(jnp.int32), -1), axis_name)
+        prune = sampling.PruneResult(
+            valid=finite, radius=jnp.full(d.shape[:1], jnp.inf),
+            survivors=cnt, applied=jnp.zeros(d.shape[:1], bool))
+
+    sel = select_l_smallest(
+        d, gid, l_run, jax.random.fold_in(key, 1), axis_name=axis_name,
+        valid=prune.valid, num_pivots=num_pivots)
+    mask = selected_mask(d, gid, sel, valid=prune.valid)
+
+    dists = ids = None
+    if gather_results:
+        dists, ids = gather_selected(d, gid, mask, l_buf, axis_name=axis_name)
+    return KnnResult(mask=mask, local_dists=d, local_ids=gid, selection=sel,
+                     prune=prune, dists=dists, ids=ids)
+
+
 def knn_query(
     points: jax.Array,
     point_ids: jax.Array,
@@ -140,28 +177,49 @@ def knn_query(
     unique int32 ids; ``queries``: (B, dim) replicated query batch.
     ``num_pivots > 1`` enables the beyond-paper multi-pivot selection.
     """
-    d_full = distances_fn(queries, points)                       # (B, m)
-    d, gid = local_top_l(d_full, point_ids, l)                   # (B, l)
+    return _knn_pipeline(
+        points, point_ids, queries, l, l, key, axis_name=axis_name,
+        distances_fn=distances_fn, use_sampling=use_sampling,
+        num_pivots=num_pivots, gather_results=gather_results)
 
-    if use_sampling:
-        prune = sampling.sample_prune(d, key, l, axis_name=axis_name)
-    else:
-        finite = jnp.isfinite(d)
-        cnt = lax.psum(jnp.sum(finite.astype(jnp.int32), -1), axis_name)
-        prune = sampling.PruneResult(
-            valid=finite, radius=jnp.full(d.shape[:1], jnp.inf),
-            survivors=cnt, applied=jnp.zeros(d.shape[:1], bool))
 
-    sel = select_l_smallest(
-        d, gid, l, jax.random.fold_in(key, 1), axis_name=axis_name,
-        valid=prune.valid, num_pivots=num_pivots)
-    mask = selected_mask(d, gid, sel, valid=prune.valid)
+def knn_query_batched(
+    points: jax.Array,
+    point_ids: jax.Array,
+    queries: jax.Array,
+    l_max: int,
+    l: jax.Array,
+    key: jax.Array,
+    *,
+    axis_name: str,
+    distances_fn=squared_l2_distances,
+    use_sampling: bool = True,
+    num_pivots: int = 1,
+    gather_results: bool = True,
+) -> KnnResult:
+    """Algorithm 2 with a *per-request* neighbor count — the serving form.
 
-    dists = ids = None
-    if gather_results:
-        dists, ids = gather_selected(d, gid, mask, l, axis_name=axis_name)
-    return KnnResult(mask=mask, local_dists=d, local_ids=gid, selection=sel,
-                     prune=prune, dists=dists, ids=ids)
+    The micro-batched query service (runtime/knn_server.py) coalesces
+    requests with heterogeneous l into one device batch.  XLA needs static
+    shapes, so all buffers are sized by the shared upper bound ``l_max``
+    while the selection rank ``l`` is data: a (B,) int32 array, one entry
+    per request, ``0 <= l[b] <= l_max``.  All B selection problems run in
+    lockstep through the same Algorithm 1 while-loop (per-row ``done``
+    freezing — a row that found its rank-l threshold stops moving), so a
+    mixed-l batch costs the rounds of its *hardest* row, not the sum.
+
+    Rows with ``l[b] == 0`` (the micro-batcher's bucket padding) select
+    nothing and return all-+inf slots; their queries never influence other
+    rows (every step is row-independent except the shared iteration count).
+    Gathered outputs are (B, l_max): row b's first l[b] slots hold its
+    ascending-by-pack winners, the rest are +inf / INT32_MAX sentinels.
+    """
+    l = jnp.minimum(jnp.broadcast_to(jnp.asarray(l, jnp.int32),
+                                     queries.shape[:1]), l_max)
+    return _knn_pipeline(
+        points, point_ids, queries, l_max, l, key, axis_name=axis_name,
+        distances_fn=distances_fn, use_sampling=use_sampling,
+        num_pivots=num_pivots, gather_results=gather_results)
 
 
 def knn_simple(

@@ -263,7 +263,8 @@ def select_l_smallest(
         if valid is not None and valid.ndim == 1:
             valid = valid[None]
     B, m = v.shape
-    k = int(lax.axis_size(axis_name))
+    from repro.parallel.collectives import axis_size
+    k = axis_size(axis_name)
     n_global = m * k
     if max_iterations is None:
         # Theorem 2.2 w.h.p. bound with generous constant; the deterministic

@@ -88,6 +88,23 @@ def _dtk_padded(q, p, l, block_b, block_m, block_k, interpret):
     return v[:B], i[:B]
 
 
+def _fused_gate(l, dim, bb, bm, bk):
+    """The distance_topk routing gate: (vmem estimate, fallback reason).
+
+    Single source of truth shared by the dispatcher below and
+    :func:`service_envelope`, so the pre-flight report cannot drift from
+    the actual routing.
+    """
+    vmem = 4 * (bb * bk + bm * bk + bb * bm + 2 * bb * l) + 8 * bm
+    if l > _dtk.MAX_L:
+        return vmem, f"l={l} > MAX_L={_dtk.MAX_L}"
+    if vmem > _VMEM_BUDGET:
+        return vmem, f"vmem {vmem} > budget {_VMEM_BUDGET}"
+    if dim < 1:
+        return vmem, "dim < 1"
+    return vmem, None
+
+
 def distance_topk(queries, points, l, *, block_b=None, block_m=None,
                   block_k=None):
     """General-shape fused distance+top-l (see kernels/distance_topk.py)."""
@@ -96,8 +113,8 @@ def distance_topk(queries, points, l, *, block_b=None, block_m=None,
     bm = block_m or _dtk.DEFAULT_BLOCK_M
     bk = block_k or 512
     d = queries.shape[-1]
-    vmem = 4 * (bb * bk + bm * bk + bb * bm + 2 * bb * l) + 8 * bm
-    if mode == "oracle" or l > _dtk.MAX_L or vmem > _VMEM_BUDGET or d < 1:
+    _, reason = _fused_gate(l, d, bb, bm, bk)
+    if mode == "oracle" or reason is not None:
         return ref.distance_topk_ref(queries, points, l)
     return _dtk_padded(queries, points, l, bb, bm, min(bk, _ceil_mult(d, 128)),
                        mode == "interpret")
@@ -105,6 +122,39 @@ def distance_topk(queries, points, l, *, block_b=None, block_m=None,
 
 def _ceil_mult(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+def service_envelope(bucket_b: int, m_local: int, dim: int, l: int) -> dict:
+    """Pre-flight dispatch check for one service bucket shape — no tracing.
+
+    The micro-batched kNN service (runtime/knn_server.py) compiles one
+    executable per bucket (B, l_max) shape; this reports, per bucket and
+    *before* paying a compile, which path each kernel entry point routes
+    to for that shape:
+
+    * ``l2_path`` — :func:`l2_distance`, the distance step the service's
+      executables actually run today (mode flag only);
+    * ``path`` — :func:`distance_topk`, the fused distance+top-l hot
+      path, evaluated through the same ``_fused_gate`` the dispatcher
+      uses (default blocks, ``bk=512`` pre-clamp) so capacity planning
+      for a fused service deployment reads true.
+
+    ``fallback_reason`` explains a fused-path oracle fallback (if any).
+    """
+    mode = _mode()
+    bb = _dtk.DEFAULT_BLOCK_B
+    bm = _dtk.DEFAULT_BLOCK_M
+    bk = 512                       # distance_topk gates on the pre-clamp bk
+    vmem, reason = _fused_gate(l, dim, bb, bm, bk)
+    path = mode if reason is None else "oracle"
+    return {
+        "bucket_b": bucket_b, "m_local": m_local, "dim": dim, "l": l,
+        "path": path, "l2_path": mode, "vmem_bytes": vmem,
+        "fallback_reason": reason,
+        # padded shape the fused kernel would actually run (grid-aligned)
+        "padded_b": _ceil_mult(max(bucket_b, 1), bb),
+        "padded_m": _ceil_mult(max(m_local, 1), bm),
+    }
 
 
 @functools.partial(jax.jit,

@@ -42,6 +42,7 @@ from repro.models.config import ALL_SHAPES
 from repro.models.sharding import Rules, use_rules
 from repro.optim import AdamW
 from repro.runtime import TrainConfig, make_train_step
+from repro.parallel.compat import set_mesh
 
 ARCHS = [
     "qwen2.5-14b", "qwen1.5-4b", "qwen2-0.5b", "yi-6b",
@@ -156,7 +157,7 @@ def run_cell(arch: str, shape, multi_pod: bool, *, sampler="selection",
     t0 = time.perf_counter()
     try:
         model_ways = dict(mesh.shape).get("model", 1)
-        with jax.set_mesh(mesh), use_rules(
+        with set_mesh(mesh), use_rules(
                 rules_for_shape(shape, cfg, model_ways=model_ways)):
             fn, args, donate = build_cell(
                 api, shape, mesh, sampler=sampler, num_pivots=num_pivots,

@@ -42,6 +42,19 @@ _CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 _DIMS = re.compile(r"\[([\d,]*)\]")
 
 
+def _operand_names(operand_str: str):
+    """Instruction names referenced in an HLO operand list.
+
+    Old-jax HLO prints operands with type prefixes
+    (``dot(f32[128,128]{1,0} %gte.5, ...)``), modern HLO prints bare names;
+    %-prefixed tokens disambiguate, with a plain comma split as fallback.
+    """
+    names = re.findall(r"%([\w.\-]+)", operand_str)
+    if names:
+        return names
+    return [o.strip() for o in operand_str.split(",")]
+
+
 def _dims_of(type_str: str):
     m = _DIMS.search(type_str)
     if not m:
@@ -135,7 +148,7 @@ def _parse(text: str) -> dict[str, _Comp]:
                 type_str) else 1
             k = 1
             if ops and contract is not None:
-                first = ops.group(1).split(",")[0].strip().lstrip("%")
+                first = _operand_names(ops.group(1))[0]
                 lhs_type = symbols.get(first, "")
                 lhs_dims = _dims_of(lhs_type)
                 idxs = [int(x) for x in contract.group(1).split(",") if x]
@@ -162,8 +175,7 @@ def _parse(text: str) -> dict[str, _Comp]:
             ops = _OPERANDS.search(op_rest)
             upd_bytes = 0
             if ops:
-                names = [o.strip().lstrip("%")
-                         for o in ops.group(1).split(",")]
+                names = _operand_names(ops.group(1))
                 idx = 1 if opname == "dynamic-update-slice" else 2
                 if len(names) > idx and names[idx] in symbols:
                     upd_bytes = ha._shape_bytes(symbols[names[idx]])
@@ -172,8 +184,7 @@ def _parse(text: str) -> dict[str, _Comp]:
             ops = _OPERANDS.search(op_rest)
             operand_bytes = []
             if ops:
-                for o in ops.group(1).split(","):
-                    o = o.strip().lstrip("%")
+                for o in _operand_names(ops.group(1)):
                     if o in symbols:
                         operand_bytes.append(ha._shape_bytes(symbols[o]))
             mm = _CALLS.search(line)
@@ -184,8 +195,7 @@ def _parse(text: str) -> dict[str, _Comp]:
             nbytes = ha._shape_bytes(type_str)
             ops = _OPERANDS.search(op_rest)
             if ops:
-                for o in ops.group(1).split(","):
-                    o = o.strip().lstrip("%")
+                for o in _operand_names(ops.group(1)):
                     if o in symbols:
                         nbytes += ha._shape_bytes(symbols[o])
             cur.bytes += nbytes

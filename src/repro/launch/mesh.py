@@ -8,6 +8,7 @@ jax device query).
 from __future__ import annotations
 
 import jax
+from repro.parallel.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,13 +16,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     across two pods — 256 / 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 4, model: int = 2):
     """Small host-device mesh for tests (needs
     XLA_FLAGS=--xla_force_host_platform_device_count >= data*model)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

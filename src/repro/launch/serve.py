@@ -26,6 +26,7 @@ from repro.data import gaussian_clusters
 from repro.models import build_model
 from repro.models import sharding as shd
 from repro.runtime import ServeConfig, Server
+from repro.parallel.compat import make_mesh, set_mesh, shard_map
 
 
 def serve_lm(args):
@@ -37,8 +38,7 @@ def serve_lm(args):
     mesh = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((d, m), ("data", "model"))
 
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": rng.integers(0, cfg.vocab,
@@ -57,7 +57,7 @@ def serve_lm(args):
                        top_k=args.top_k, sampler=args.sampler,
                        num_pivots=args.num_pivots)
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _null()
+    ctx = set_mesh(mesh) if mesh is not None else _null()
     with ctx:
         params = api.init_params(jax.random.PRNGKey(args.seed))
         if mesh is not None:
@@ -79,8 +79,7 @@ def serve_knn(args):
     """The paper's own service: l-NN queries against a sharded point set."""
     kcfg = configs.get("knn-service")
     n_dev = jax.device_count()
-    mesh = jax.make_mesh((n_dev,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((n_dev,), ("model",))
     n = min(kcfg.n_points, args.knn_points)
     n -= n % n_dev
     pts, labels = gaussian_clusters(n, kcfg.dim, kcfg.num_classes,
@@ -92,7 +91,6 @@ def serve_knn(args):
         res = core.knn_query(points, pids, q, l, key, axis_name="model",
                              num_pivots=args.num_pivots,
                              gather_results=True)
-        lab = jnp.broadcast_to(plabels[None], res.local_ids.shape)
         # labels aligned with the local top-l buffer via local row mapping
         m = points.shape[0]
         start = jax.lax.axis_index("model") * m
@@ -102,7 +100,7 @@ def serve_knn(args):
                                        axis_name="model")
         return res.dists, res.ids, pred, res.selection.iterations
 
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         query, mesh=mesh,
         in_specs=(P("model"), P("model"), P("model"), P(None), P(None)),
         out_specs=(P(None), P(None), P(None), P()),

@@ -25,6 +25,7 @@ from repro.data import MarkovTokens, Prefetcher
 from repro.models import build_model
 from repro.models import sharding as shd
 from repro.optim import AdamW
+from repro.parallel.compat import make_mesh, set_mesh
 from repro.runtime import (MetricLogger, TrainConfig, init_opt_state,
                            train_loop)
 
@@ -55,8 +56,7 @@ def main():
     mesh = None
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((d, m), ("data", "model"))
 
     def build_state():
         params = api.init_params(jax.random.PRNGKey(args.seed))
@@ -94,7 +94,7 @@ def main():
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
     logger = MetricLogger()
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
+    ctx = set_mesh(mesh) if mesh is not None else _nullcontext()
     with ctx:
         params = build_state()
         opt_state = init_opt_state(api, tcfg, optimizer, params)

@@ -23,6 +23,7 @@ from repro.models import encdec, transformer
 from repro.models.config import InputShape, ModelConfig
 from repro.models.creator import InitCreator, ShapeCreator, SpecCreator
 from repro.models import sharding as shd
+from repro.parallel.compat import shard_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,7 +112,7 @@ class ModelApi:
             topk_mod.topk_sample, k=top_k, temperature=temperature,
             axis_name="model", method=sampler, num_pivots=num_pivots)
 
-        sampled = jax.shard_map(
+        sampled = shard_map(
             lambda lg, kk: fn(lg, key=kk),
             mesh=mesh,
             in_specs=(P(bspec, "model"), P()),

@@ -59,13 +59,8 @@ def use_rules(rules: Rules):
 
 
 def _mesh_axis_names():
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is not None and not mesh.empty:
-            return set(mesh.axis_names)
-    except Exception:
-        pass
-    return None
+    from repro.parallel.compat import ambient_mesh_axis_names
+    return ambient_mesh_axis_names()
 
 
 def spec(*logical_axes: Optional[str]) -> P:
@@ -83,6 +78,10 @@ def spec(*logical_axes: Optional[str]) -> P:
         if names is not None and resolved is not None:
             if isinstance(resolved, tuple):
                 resolved = tuple(a for a in resolved if a in names) or None
+                if resolved is not None and len(resolved) == 1:
+                    # 1-tuples and bare names are distinct to old-jax
+                    # PartitionSpec equality; normalize to the bare name.
+                    resolved = resolved[0]
             elif resolved not in names:
                 resolved = None
         out.append(resolved)
@@ -125,10 +124,9 @@ def batch_shards() -> int:
     names = _mesh_axis_names()
     if not names:
         return 1
-    try:
-        mesh = jax.sharding.get_abstract_mesh()
-        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
-    except Exception:
+    from repro.parallel.compat import ambient_mesh_axis_sizes
+    sizes = ambient_mesh_axis_sizes()
+    if sizes is None:
         return 1
     rule = _CURRENT.batch
     axes = rule if isinstance(rule, tuple) else (rule,)

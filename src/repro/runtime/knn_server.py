@@ -1,0 +1,395 @@
+"""Micro-batched distributed kNN query service — Algorithm 2 as a server.
+
+The paper answers one replicated query batch per call; serving "heavy
+traffic from millions of users" (ROADMAP) means coalescing many independent
+requests — each with its own neighbor count l — into full device batches
+against the sharded point set, the way PANDA-style distributed kNN systems
+amortize every datastore pass over a query block.  Pipeline:
+
+  submit(q, l) -> [request queue] -> micro-batcher (linger max_wait_ms,
+      pad-to-bucket) -> persistent shard_map executable for that bucket
+      (B, l_max) shape -> per-request QueryResult (dists / ids / values
+      + round/message accounting from SelectionResult)
+
+Static shapes for jit: requests are padded to the smallest configured
+bucket size (padding rows carry l=0, which Algorithm 2 resolves to "select
+nothing" without touching real rows), and every per-request l shares the
+static buffer bound l_max with per-row masking inside
+``core.knn.knn_query_batched``.  Each bucket shape therefore compiles
+exactly once (``warmup()`` pre-pays all of them) and every subsequent
+flush is a cached-executable call.
+
+All tuning — bucket shapes, l_max, linger, sampling, num_pivots, and the
+selection-vs-gather A/B — comes from ``configs.knn_service.KnnServiceConfig``;
+the server adds no knobs of its own.  benchmarks/bench_serve.py measures
+sustained queries/sec and p50/p99 latency for both sampler settings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.knn_service import CONFIG, KnnServiceConfig
+from repro.core import knn as knn_mod
+from repro.kernels import ops as kops
+from repro.parallel.compat import make_mesh, shard_map
+
+_ID_SENTINEL = 2**31 - 1
+
+
+class QueryResult(NamedTuple):
+    """Answer for one request.
+
+    ``dists``/``ids`` have the request's own length l, sorted ascending by
+    distance (+inf / INT32_MAX sentinel slots last, when fewer than l
+    finite points exist).  ``values`` maps ids through the server's
+    optional value table (kNN-LM token ids), -1 where absent.
+
+    Round/message accounting follows the k-machine model conventions used
+    throughout the repo (see selection.py): the selection path costs 2
+    rounds per Algorithm 1 iteration (pivot all_gather + count psum) plus a
+    constant number of pipeline rounds (sample-prune and result gather),
+    with k-1 leader-tree messages of O(1) scalars per round.  The gather
+    baseline is one collective round whose payload is l scalars from each
+    of k-1 peers — its ``messages`` entry counts those O(1)-word units, so
+    the O(k*l) vs O(k*log l) contrast is directly visible.
+    """
+
+    dists: np.ndarray
+    ids: np.ndarray
+    values: Optional[np.ndarray]
+    l: int
+    iterations: int        # Algorithm 1 iterations of the carrying batch
+    rounds: int            # k-machine rounds of the carrying batch
+    messages: int          # O(1)-word messages of the carrying batch
+    survivors: int         # Lemma 2.3 post-prune candidate count (this row)
+    bucket: int            # device batch shape the request rode in
+    queued_s: float        # enqueue -> dispatch
+    latency_s: float       # enqueue -> result
+
+
+@dataclasses.dataclass
+class ServerStats:
+    queries: int = 0
+    batches: int = 0
+    padded_rows: int = 0
+    bucket_counts: dict = dataclasses.field(default_factory=dict)
+
+    def observe(self, bucket: int, n_real: int):
+        self.queries += n_real
+        self.batches += 1
+        self.padded_rows += bucket - n_real
+        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+
+
+@dataclasses.dataclass
+class _Pending:
+    query: np.ndarray
+    l: int
+    t_enqueue: float
+    future: Future
+
+
+class KnnServer:
+    """Serve l-NN queries against a mesh-sharded point set.
+
+    ``points``: (n, dim) host array, sharded over ``axis_name`` at
+    construction (n must divide the mesh axis size).  ``values``: optional
+    (n,) int32 per-point payload (e.g. kNN-LM next-token ids), looked up
+    host-side for winners — values never cross the device interconnect,
+    preserving the paper's only-distances-and-ids-on-the-wire property.
+
+    Synchronous use: ``submit(...)`` then ``flush()`` (or ``query_batch``).
+    Server use: ``with server.serving(): ...`` runs the micro-batcher
+    thread, which lingers ``cfg.max_wait_ms`` after the first pending
+    request to fill a bucket before dispatching.
+    """
+
+    def __init__(self, points, values=None, *,
+                 cfg: KnnServiceConfig = CONFIG, mesh=None,
+                 axis_name: str = "knn", seed: int = 0):
+        self.cfg = cfg
+        self.axis_name = axis_name
+        self.mesh = mesh if mesh is not None else make_mesh(
+            (jax.device_count(),), (axis_name,))
+        # k machines = the size of the service axis only; on a multi-axis
+        # mesh the other axes replicate the store and the collectives.
+        self.k = int(dict(self.mesh.shape)[axis_name])
+
+        points = np.asarray(points, np.float32)
+        n, dim = points.shape
+        if n % self.k:
+            raise ValueError(
+                f"n_points={n} must divide the mesh axis size {self.k}")
+        if not cfg.bucket_sizes or list(cfg.bucket_sizes) != sorted(
+                set(cfg.bucket_sizes)):
+            raise ValueError(f"bucket_sizes must be ascending and unique, "
+                             f"got {cfg.bucket_sizes}")
+        self.dim = dim
+        self.m_local = n // self.k
+        sharded = NamedSharding(self.mesh, P(axis_name))
+        self._points = jax.device_put(points, sharded)
+        self._ids = jax.device_put(np.arange(n, dtype=np.int32), sharded)
+        self._values = None if values is None else np.asarray(values,
+                                                              np.int32)
+
+        # Pre-flight kernel-dispatch report, one row per bucket shape:
+        # the routing (Pallas kernel / interpret / jnp oracle) of the
+        # l2_distance step these executables run, plus fused
+        # distance_topk eligibility for capacity planning
+        # (kernels/ops.py service_envelope).
+        self.envelopes = [
+            kops.service_envelope(b, self.m_local, dim, cfg.l_max)
+            for b in cfg.bucket_sizes]
+
+        self._fn = self._build_executable()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._batch_counter = 0
+
+        self._cv = threading.Condition()
+        self._pending: list[_Pending] = []
+        self._thread: Optional[threading.Thread] = None
+        self._running = False
+        self.stats = ServerStats()
+
+    # ---- compiled dispatch ---------------------------------------------
+
+    def _distances_fn(self):
+        if self.cfg.distance_impl == "auto":
+            return lambda q, p: kops.l2_distance(q, p)
+        return knn_mod.squared_l2_distances
+
+    def _build_executable(self):
+        cfg = self.cfg
+        axis = self.axis_name
+        l_max = cfg.l_max
+        distances_fn = self._distances_fn()
+
+        if cfg.sampler == "selection":
+            def fn(pts, pids, q, l_arr, key):
+                res = knn_mod.knn_query_batched(
+                    pts, pids, q, l_max, l_arr, key, axis_name=axis,
+                    distances_fn=distances_fn,
+                    use_sampling=cfg.use_sampling,
+                    num_pivots=cfg.num_pivots)
+                return (res.dists, res.ids, res.selection.iterations,
+                        res.prune.survivors)
+        elif cfg.sampler == "gather":
+            def fn(pts, pids, q, l_arr, key):
+                sd, si = knn_mod.knn_simple(
+                    pts, pids, q, l_max, axis_name=axis,
+                    distances_fn=distances_fn)
+                # per-request l: slots at rank >= l[b] are masked to the
+                # sentinel (knn_simple returns ascending order).
+                keep = jnp.arange(l_max)[None, :] < l_arr[:, None]
+                sd = jnp.where(keep, sd, jnp.inf)
+                si = jnp.where(keep, si, _ID_SENTINEL)
+                zeros = jnp.zeros(q.shape[:1], jnp.int32)
+                return sd, si, jnp.int32(0), zeros
+        else:
+            raise ValueError(f"unknown sampler {cfg.sampler!r}")
+
+        return jax.jit(shard_map(
+            fn, mesh=self.mesh,
+            in_specs=(P(axis), P(axis), P(None), P(None), P(None)),
+            out_specs=(P(None), P(None), P(), P(None)),
+            check_vma=False))
+
+    def warmup(self):
+        """Compile every bucket shape up front (one trace per bucket)."""
+        for b in self.cfg.bucket_sizes:
+            q = np.zeros((b, self.dim), np.float32)
+            l_arr = np.zeros(b, np.int32)
+            out = self._fn(self._points, self._ids, q, l_arr,
+                           self._base_key)
+            jax.block_until_ready(out)
+
+    # ---- request path ---------------------------------------------------
+
+    def submit(self, query, l: Optional[int] = None) -> Future:
+        """Enqueue one query; the Future resolves to a QueryResult."""
+        l = self.cfg.l if l is None else int(l)
+        if not 1 <= l <= self.cfg.l_max:
+            raise ValueError(f"l={l} outside [1, l_max={self.cfg.l_max}]")
+        query = np.asarray(query, np.float32)
+        if query.shape != (self.dim,):
+            raise ValueError(f"query shape {query.shape} != ({self.dim},)")
+        rec = _Pending(query, l, time.perf_counter(), Future())
+        with self._cv:
+            self._pending.append(rec)
+            self._cv.notify()
+        return rec.future
+
+    def query_batch(self, queries, ls=None) -> list[QueryResult]:
+        """Synchronous convenience: submit all, flush, collect."""
+        queries = np.asarray(queries, np.float32)
+        if ls is None:
+            ls = [None] * len(queries)
+        futs = [self.submit(q, l) for q, l in zip(queries, ls)]
+        self.flush()
+        return [f.result() for f in futs]
+
+    def flush(self):
+        """Drain the queue now, bucket by bucket (synchronous path)."""
+        while True:
+            with self._cv:
+                if not self._pending:
+                    return
+                chunk = self._take_chunk_locked()
+            self._dispatch(chunk)
+
+    def _take_chunk_locked(self) -> list[_Pending]:
+        n = min(len(self._pending), self.cfg.bucket_sizes[-1])
+        chunk, self._pending = self._pending[:n], self._pending[n:]
+        return chunk
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.cfg.bucket_sizes:
+            if b >= n:
+                return b
+        return self.cfg.bucket_sizes[-1]
+
+    def _accounting(self, iterations: int) -> tuple[int, int]:
+        """k-machine (rounds, messages) for one dispatched batch."""
+        k = self.k
+        if self.cfg.sampler == "gather":
+            # one all-gather whose per-peer payload is l_max scalars
+            return 1, (k - 1) * self.cfg.l_max
+        rounds = 2 * iterations            # pivot all_gather + count psum
+        rounds += 2 if self.cfg.use_sampling else 0   # sample + verify
+        rounds += 2                        # result gather: count + pack
+        return rounds, (k - 1) * rounds
+
+    def _dispatch(self, chunk: list[_Pending]):
+        n = len(chunk)
+        bucket = self._bucket_for(n)
+        q = np.zeros((bucket, self.dim), np.float32)
+        l_arr = np.zeros(bucket, np.int32)      # padding rows keep l=0
+        for row, rec in enumerate(chunk):
+            q[row] = rec.query
+            l_arr[row] = rec.l
+
+        # _dispatch may run concurrently from the micro-batcher thread and
+        # a caller's flush(); counter and stats updates go under the lock.
+        with self._cv:
+            batch_id = self._batch_counter
+            self._batch_counter += 1
+        key = jax.random.fold_in(self._base_key, batch_id)
+        t_dispatch = time.perf_counter()
+        try:
+            d, i, iters, surv = self._fn(self._points, self._ids, q,
+                                         l_arr, key)
+            d = np.asarray(d)
+            i = np.asarray(i)
+            surv = np.asarray(surv)
+            iters = int(iters)
+        except Exception as exc:
+            # A failed dispatch must never strand its futures (the chunk
+            # already left the queue) or kill the micro-batcher thread.
+            for rec in chunk:
+                _resolve(rec.future, error=exc)
+            return
+        t_done = time.perf_counter()
+
+        rounds, messages = self._accounting(iters)
+        with self._cv:
+            self.stats.observe(bucket, n)
+        for row, rec in enumerate(chunk):
+            # ascending by distance (gather_selected packs by shard rank,
+            # not by distance; l is small, so sort host-side — this also
+            # keeps the selection and gather A/B paths byte-identical in
+            # ordering)
+            order = np.argsort(d[row, :rec.l], kind="stable")
+            dists = d[row, order]
+            ids = i[row, order]
+            values = None
+            if self._values is not None:
+                # sentinel slots (fewer than l finite points) map to -1;
+                # clip both ends — np.where evaluates the lookup branch
+                # for sentinel ids too.
+                safe = np.clip(ids, 0, len(self._values) - 1)
+                values = np.where(ids == _ID_SENTINEL, -1,
+                                  self._values[safe])
+            _resolve(rec.future, result=QueryResult(
+                dists=dists, ids=ids, values=values, l=rec.l,
+                iterations=iters, rounds=rounds, messages=messages,
+                survivors=int(surv[row]), bucket=bucket,
+                queued_s=t_dispatch - rec.t_enqueue,
+                latency_s=t_done - rec.t_enqueue))
+
+    # ---- background micro-batcher ---------------------------------------
+
+    def start(self):
+        """Run the micro-batcher thread (linger-then-dispatch loop)."""
+        if self._running:
+            return
+        self._running = True
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="knn-microbatcher",
+                                        daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        with self._cv:
+            self._running = False
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.flush()          # leave no request stranded
+
+    def serving(self):
+        return _Serving(self)
+
+    def _serve_loop(self):
+        linger = self.cfg.max_wait_ms / 1e3
+        full = self.cfg.bucket_sizes[-1]
+        while True:
+            with self._cv:
+                while self._running and not self._pending:
+                    self._cv.wait(timeout=0.1)
+                if not self._running:
+                    return
+                # Linger: give the batch a chance to fill before paying a
+                # datastore pass for a mostly-padded bucket.
+                deadline = self._pending[0].t_enqueue + linger
+                while (self._running and len(self._pending) < full
+                       and time.perf_counter() < deadline):
+                    self._cv.wait(timeout=max(
+                        deadline - time.perf_counter(), 1e-4))
+                chunk = self._take_chunk_locked()
+            if chunk:
+                self._dispatch(chunk)
+
+
+def _resolve(future: Future, result=None, error=None):
+    """Resolve a future, tolerating client-side cancellation."""
+    try:
+        if error is not None:
+            future.set_exception(error)
+        else:
+            future.set_result(result)
+    except Exception:
+        pass      # already cancelled/resolved by the client — nothing owed
+
+
+class _Serving:
+    def __init__(self, server: KnnServer):
+        self._server = server
+
+    def __enter__(self):
+        self._server.start()
+        return self._server
+
+    def __exit__(self, *exc):
+        self._server.stop()
+        return False

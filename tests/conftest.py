@@ -15,21 +15,21 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
                                + os.environ.get("XLA_FLAGS", ""))
 os.environ.setdefault("REPRO_KERNEL_MODE", "interpret")
 
-import jax  # noqa: E402
+import jax  # noqa: E402,F401  (import order: flags first)
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+from repro.parallel.compat import make_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((8,), ("x",))
 
 
 @pytest.fixture(scope="session")
 def mesh42():
-    return jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((4, 2), ("data", "model"))
 
 
 @pytest.fixture()

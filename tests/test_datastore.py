@@ -6,6 +6,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 import repro.core as core
+from repro.parallel.compat import shard_map
 
 K = 8
 
@@ -25,7 +26,7 @@ def test_retrieve_and_interp(mesh8, rng):
         out = core.datastore.interp_logits(lml, ret, lam, axis_name="x")
         return ret.tokens, ret.weights, ret.dists, out
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh8,
         in_specs=(P("x"), P("x"), P(None), P(None, "x"), P(None)),
         out_specs=(P(None), P(None), P(None), P(None, "x"))))
@@ -65,7 +66,7 @@ def test_retrieved_distribution_prefers_near_tokens(mesh8, rng):
                                       temperature=1.0)
         return ret.tokens, ret.weights
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh8,
         in_specs=(P("x"), P("x"), P(None), P(None)),
         out_specs=(P(None), P(None))))

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.launch import hlo_counter
+from repro.parallel.compat import shard_map
 
 
 def test_nested_scan_flops_exact():
@@ -52,7 +53,7 @@ def test_collective_counting(mesh8):
     def f(x):
         return jax.lax.psum(x, "x")
 
-    txt = jax.jit(jax.shard_map(
+    txt = jax.jit(shard_map(
         f, mesh=mesh8, in_specs=P("x"), out_specs=P(None))).lower(
         jax.ShapeDtypeStruct((8, 1024), jnp.float32)).compile().as_text()
     res = hlo_counter.analyze(txt)

@@ -6,6 +6,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import sampling
+from repro.parallel.compat import shard_map
 
 K = 8
 
@@ -15,7 +16,7 @@ def _prune(mesh, d, l, key=0):
         r = sampling.sample_prune(dd, kk, l, axis_name="x")
         return r.valid, r.radius, r.survivors, r.applied
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
         out_specs=(P(None, "x"), P(None), P(None), P(None)),
         check_vma=False))

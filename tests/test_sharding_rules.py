@@ -5,6 +5,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.models import sharding as shd
+from repro.parallel.compat import set_mesh
 
 
 def test_spec_resolution_default():
@@ -19,7 +20,7 @@ def test_spec_rule_override():
 
 
 def test_spec_filters_missing_mesh_axes(mesh42):
-    with jax.set_mesh(mesh42):  # no "pod" axis
+    with set_mesh(mesh42):  # no "pod" axis
         s = shd.spec("batch", "vocab")
         assert s == P("data", "model")
 

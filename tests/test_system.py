@@ -19,6 +19,7 @@ import repro.core as core
 from repro.models import build_model
 from repro.models import sharding as shd
 from repro.runtime import ServeConfig, Server
+from repro.parallel.compat import set_mesh, shard_map
 
 
 def test_knn_lm_end_to_end(mesh8, rng):
@@ -38,7 +39,7 @@ def test_knn_lm_end_to_end(mesh8, rng):
                                axis_name="x")
         return mixed, tok
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         step, mesh=mesh8,
         in_specs=(P("x"), P("x"), P(None), P(None, "x"), P(None)),
         out_specs=(P(None, "x"), P(None)), check_vma=False))
@@ -52,7 +53,7 @@ def test_knn_lm_end_to_end(mesh8, rng):
 def test_lm_generation_with_selection_sampler(mesh42, rng):
     cfg = configs.get("qwen2-0.5b").reduced()
     api = build_model(cfg)
-    with jax.set_mesh(mesh42):
+    with set_mesh(mesh42):
         params = api.init_params(jax.random.PRNGKey(0))
         specs = api.param_specs()
         params = jax.tree.map(
@@ -93,7 +94,7 @@ def test_knn_service_path(mesh8, rng):
         pred, _ = core.knn_classify(res.mask, lab[rows], C, axis_name="x")
         return pred
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh8,
         in_specs=(P("x"), P("x"), P("x"), P(None), P(None)),
         out_specs=P(None)))

@@ -7,6 +7,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 import repro.core as core
+from repro.parallel.compat import shard_map
 
 K = 8
 
@@ -17,7 +18,7 @@ def _run_topk(mesh, logits, k, method, key=0, num_pivots=1):
                                   num_pivots=num_pivots)
         return r.values, r.indices, r.iterations
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(P(None, "x"), P(None)),
         out_specs=(P(None), P(None), P())))
     return f(logits, jax.random.PRNGKey(key))
@@ -57,7 +58,7 @@ def test_topk_sample_spmd_coherent(mesh8, rng):
         # gather from all shards to verify identity
         return jax.lax.all_gather(t, "x")
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh8, in_specs=(P(None, "x"), P(None)),
         out_specs=P(None, "x") if False else P("x"), check_vma=False))
     all_t = np.asarray(f(logits, jax.random.PRNGKey(5)))
@@ -72,7 +73,7 @@ def test_topk_sample_within_topk(mesh8, rng):
     def fn(lg, kk):
         return core.topk_sample(lg, 8, 1.0, kk, axis_name="x")
 
-    f = jax.jit(jax.shard_map(
+    f = jax.jit(shard_map(
         fn, mesh=mesh8, in_specs=(P(None, "x"), P(None)),
         out_specs=P(None), check_vma=False))
     for s in range(5):
@@ -89,7 +90,7 @@ def test_greedy_sample(mesh8, rng):
     def fn(lg):
         return core.greedy_sample(lg, axis_name="x")
 
-    f = jax.jit(jax.shard_map(fn, mesh=mesh8, in_specs=P(None, "x"),
+    f = jax.jit(shard_map(fn, mesh=mesh8, in_specs=P(None, "x"),
                               out_specs=P(None)))
     got = np.asarray(f(logits))
     assert (got == np.argmax(logits, -1)).all()
