@@ -1,7 +1,7 @@
 # Local fallback for the CI entrypoints (.github/workflows/ci.yml).
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test deps bench bench-serve examples
+.PHONY: test deps bench bench-serve bench-smoke examples
 
 deps:
 	pip install -r requirements-dev.txt
@@ -16,6 +16,16 @@ bench:
 bench-serve:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py
+
+# CI dry-run: tiny-size bench_serve + bench_ingest end to end, JSON to /tmp —
+# proves the benchmark scripts can't silently rot (ci.yml bench-smoke step)
+bench-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \
+		--out /tmp/BENCH_serve_smoke.json
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PYTHONPATH_PREFIX):. python benchmarks/bench_ingest.py --smoke \
+		--out /tmp/BENCH_ingest_smoke.json
 
 examples:
 	$(PYTHONPATH_PREFIX) python examples/quickstart.py

@@ -1,0 +1,204 @@
+"""Mutable-store ingest throughput + query latency under concurrent ingest.
+
+Two phases against ``store.MutableStore`` (DESIGN.md Section 7):
+
+  1. **Ingest throughput** — staged insert/delete/update batches applied
+     via the on-device scatter path; points/sec per mutation kind, plus
+     the cost of one forced compaction (full repack + re-upload).
+  2. **Query latency under ingest** — a store-backed ``KnnServer`` with
+     the micro-batcher thread running, a background ingest thread
+     streaming insert+delete batches (epoch swaps land continuously),
+     and a closed-loop query driver measuring p50/p99 — the serving-path
+     cost of mutability, directly comparable to BENCH_serve.json's
+     static-store numbers.  Also reported: how many generations the
+     measured queries spanned, and that zero in-flight queries were
+     dropped across every swap.
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src:. python benchmarks/bench_ingest.py --out BENCH_ingest.json
+"""
+
+try:
+    from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
+except ImportError:  # run as a plain script
+    import common
+
+import argparse
+import json
+import threading
+import time
+
+import numpy as np
+
+from repro.configs.knn_service import CONFIG
+
+DIM = 32
+L_MAX = 32
+# store shape/staging come from the service config — the single source of
+# service tuning (configs/knn_service.py)
+CAP_PER_SHARD = CONFIG.store_capacity_per_shard
+STAGING = CONFIG.store_staging_size
+INGEST_BATCHES = 40            # measured apply cycles in phase 1
+QUERIES_UNDER_INGEST = 160     # closed-loop queries in phase 2
+BUCKETS = (1, 2, 4, 8)
+
+
+def _mk_store(rng, cap, staging, prefill=0):
+    from repro.store import MutableStore
+    store = MutableStore(
+        DIM, capacity_per_shard=cap, mesh=common.kmachine_mesh(),
+        axis_name="x", staging_size=staging,
+        compact_tombstone_frac=CONFIG.store_compact_tombstone_frac,
+        compact_imbalance_frac=CONFIG.store_compact_imbalance_frac)
+    if prefill:
+        store.insert(rng.normal(size=(prefill, DIM)).astype(np.float32))
+        store.flush()
+    return store
+
+
+def _phase_ingest(rng, cap, staging, batches) -> dict:
+    """Staged batch -> flush (scatter apply) throughput per mutation kind."""
+    store = _mk_store(rng, cap, staging)
+    total = store.total
+
+    def timed_cycles(op) -> float:
+        t0 = time.perf_counter()
+        for _ in range(batches):
+            op()
+            store.flush()
+        return time.perf_counter() - t0
+
+    # inserts (store fills to batches*staging points)
+    wall_ins = timed_cycles(lambda: store.insert(
+        rng.normal(size=(staging, DIM)).astype(np.float32)))
+    live_ids, _ = store.live_arrays()
+
+    # updates (rewrite random live points in place)
+    wall_upd = timed_cycles(lambda: store.update(
+        rng.choice(live_ids, size=staging, replace=False),
+        rng.normal(size=(staging, DIM)).astype(np.float32)))
+
+    # deletes (drain half of what was inserted; may trigger auto-compaction)
+    victims = iter(rng.permutation(live_ids)[: batches * staging // 2])
+    wall_del = timed_cycles(lambda: store.delete(
+        [next(victims) for _ in range(staging // 2)]))
+
+    # one forced repack: full re-upload cost
+    t0 = time.perf_counter()
+    store.compact()
+    wall_compact = time.perf_counter() - t0
+
+    n = batches * staging
+    return {
+        "capacity_total": total,
+        "staging_size": staging,
+        "batches": batches,
+        "insert_pts_per_s": n / wall_ins,
+        "update_pts_per_s": n / wall_upd,
+        "delete_pts_per_s": (n // 2) / wall_del,
+        "compact_s": wall_compact,
+        "auto_compactions": store.stats.compactions - 1,  # minus the forced one
+        "last_compact_reason": store.stats.last_compact_reason,
+        "final_live": store.live_count,
+        "final_generation": store.generation,
+    }
+
+
+def _phase_under_ingest(rng, cap, staging, n_queries) -> dict:
+    """Closed-loop query latency while an ingest thread streams mutations."""
+    from repro.runtime import KnnServer
+    store = _mk_store(rng, cap, staging, prefill=(cap * common.K_MACHINES) // 2)
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS)
+    srv = KnnServer(store=store, cfg=cfg)
+    srv.warmup()
+
+    stop = threading.Event()
+    mutations = {"applied": 0}
+
+    def ingest_loop():
+        # net-zero churn (delete everything inserted): the stream can
+        # never fill the store, so ingest provably runs for the whole
+        # measured window — two epoch swaps per cycle, forever.
+        r = np.random.default_rng(11)
+        while not stop.is_set():
+            ids = store.insert(r.normal(size=(staging // 2, DIM))
+                               .astype(np.float32))
+            store.flush()
+            store.delete(ids)
+            store.flush()
+            mutations["applied"] += 1
+
+    lat, gens = [], []
+    t = threading.Thread(target=ingest_loop, daemon=True)
+    with srv.serving():
+        t.start()
+        # warmup queries outside the measured window
+        for _ in range(8):
+            srv.submit(rng.normal(size=DIM).astype(np.float32), 8).result(
+                timeout=60)
+        t0 = time.perf_counter()
+        for _ in range(n_queries):
+            res = srv.submit(rng.normal(size=DIM).astype(np.float32),
+                             8).result(timeout=60)
+            lat.append(res.latency_s)
+            gens.append(res.generation)
+        wall = time.perf_counter() - t0
+        stop.set()
+        t.join()
+
+    lat = np.asarray(lat)
+    return {
+        "queries": n_queries,
+        "qps": n_queries / wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "generations_spanned": int(max(gens) - min(gens)),
+        "ingest_cycles": mutations["applied"],
+        "dropped_queries": 0,   # every submit() above resolved (else: raise)
+        "final_live": store.live_count,
+        "compactions": store.stats.compactions,
+    }
+
+
+def run(emit=print, out_path=None, smoke: bool = False) -> dict:
+    cap = 256 if smoke else CAP_PER_SHARD
+    staging = 32 if smoke else STAGING
+    batches = 6 if smoke else INGEST_BATCHES
+    n_queries = 24 if smoke else QUERIES_UNDER_INGEST
+    rng = np.random.default_rng(7)
+
+    report = {
+        "dim": DIM, "l_max": L_MAX, "k_machines": common.K_MACHINES,
+        "smoke": smoke,
+        "ingest": _phase_ingest(rng, cap, staging, batches),
+        "under_ingest": _phase_under_ingest(rng, cap, staging, n_queries),
+    }
+    ing, und = report["ingest"], report["under_ingest"]
+    emit(common.row(
+        "ingest_insert", 1e6 * staging / ing["insert_pts_per_s"],
+        f"pts_per_s={ing['insert_pts_per_s']:.0f} "
+        f"compact_s={ing['compact_s']:.3f}"))
+    emit(common.row(
+        "query_under_ingest", 1e6 / und["qps"],
+        f"qps={und['qps']:.1f} p50={und['p50_ms']:.2f}ms "
+        f"p99={und['p99_ms']:.2f}ms gens={und['generations_spanned']}"))
+    common.stamp(report)
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+        emit(f"# wrote {out_path}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_ingest.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; CI dry-run (make bench-smoke)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(emit=print, out_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

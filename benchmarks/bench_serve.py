@@ -38,10 +38,10 @@ BURSTS = 24                    # measured dispatch bursts per sampler
 WARM_BURSTS = 3
 
 
-def _build_server(sampler: str):
+def _build_server(sampler: str, n_points: int):
     from repro.runtime import KnnServer
     rng = np.random.default_rng(0)
-    pts = rng.normal(size=(N_POINTS, DIM)).astype(np.float32)
+    pts = rng.normal(size=(n_points, DIM)).astype(np.float32)
     cfg = CONFIG.replace(
         dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS, sampler=sampler)
     srv = KnnServer(pts, cfg=cfg, mesh=common.kmachine_mesh(),
@@ -50,7 +50,7 @@ def _build_server(sampler: str):
     return srv
 
 
-def _drive(srv, rng) -> dict:
+def _drive(srv, rng, bursts: int) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
     exercised; latencies are per request (enqueue -> result)."""
@@ -58,7 +58,7 @@ def _drive(srv, rng) -> dict:
     lat, iters, rounds, msgs = [], [], [], []
     n_queries = 0
     t0 = None
-    for burst in range(WARM_BURSTS + BURSTS):
+    for burst in range(WARM_BURSTS + bursts):
         if burst == WARM_BURSTS:
             t0 = time.perf_counter()
             srv.stats = type(srv.stats)()    # drop warmup counters
@@ -91,22 +91,27 @@ def _drive(srv, rng) -> dict:
     }
 
 
-def run(emit=print, out_path=None) -> dict:
+def run(emit=print, out_path=None, smoke: bool = False) -> dict:
+    """``smoke=True`` is the CI dry-run: tiny store, few bursts — proves
+    the script end-to-end (build, warmup, drive, JSON emit) in seconds."""
+    n_points = common.K_MACHINES * 256 if smoke else N_POINTS
+    bursts = 4 if smoke else BURSTS
     rng = np.random.default_rng(7)
     report = {
-        "n_points": N_POINTS, "dim": DIM, "l_max": L_MAX,
+        "n_points": n_points, "dim": DIM, "l_max": L_MAX,
         "l_mix": list(L_MIX), "buckets": list(BUCKETS),
-        "k_machines": common.K_MACHINES,
+        "k_machines": common.K_MACHINES, "smoke": smoke,
     }
     for sampler in ("selection", "gather"):
-        srv = _build_server(sampler)
-        report[sampler] = _drive(srv, rng)
+        srv = _build_server(sampler, n_points)
+        report[sampler] = _drive(srv, rng, bursts)
         report.setdefault("kernel_envelopes", {})[sampler] = srv.envelopes
         r = report[sampler]
         emit(common.row(
             f"serve_{sampler}_qps", 1e6 / r["qps"],
             f"qps={r['qps']:.1f} p50={r['p50_ms']:.2f}ms "
             f"p99={r['p99_ms']:.2f}ms rounds={r['mean_rounds']:.1f}"))
+    common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:
             json.dump(report, f, indent=2)
@@ -117,9 +122,11 @@ def run(emit=print, out_path=None) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; CI dry-run (make bench-smoke)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(emit=print, out_path=args.out)
+    run(emit=print, out_path=args.out, smoke=args.smoke)
 
 
 if __name__ == "__main__":

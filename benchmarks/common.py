@@ -17,6 +17,8 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
         f"--xla_force_host_platform_device_count={K_MACHINES} "
         + os.environ.get("XLA_FLAGS", ""))
 
+import datetime  # noqa: E402
+import subprocess  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
@@ -26,6 +28,28 @@ from repro.parallel.compat import make_mesh
 
 def kmachine_mesh(k: int = K_MACHINES):
     return make_mesh((k,), ("x",))
+
+
+def stamp(report: dict) -> dict:
+    """Attach provenance metadata to a BENCH_*.json report (in place).
+
+    Every emitted report carries ``meta.git_commit`` / ``meta.timestamp``
+    / ``meta.jax_version`` so the benchmark trajectory across PRs is
+    reconstructable from the JSON artifacts alone.
+    """
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        commit = ""
+    report["meta"] = {
+        "git_commit": commit or "unknown",
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "jax_version": jax.__version__,
+    }
+    return report
 
 
 def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_kernels   fused distance+top-l traffic model vs oracle timing
   bench_serve     micro-batched query service qps + p50/p99 latency
                   (also standalone: emits BENCH_serve.json — see its header)
+  bench_ingest    mutable-store ingest throughput + latency under ingest
+                  (also standalone: emits BENCH_ingest.json — see its header)
 
 Paste the CSV into the EXPERIMENTS.md "Benchmark results" table.
 """
@@ -18,12 +20,12 @@ from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
 
 
 def main() -> None:
-    from benchmarks import (bench_fig2, bench_kernels, bench_messages,
-                            bench_prune, bench_rounds, bench_serve,
-                            bench_topk)
+    from benchmarks import (bench_fig2, bench_ingest, bench_kernels,
+                            bench_messages, bench_prune, bench_rounds,
+                            bench_serve, bench_topk)
     print("name,us_per_call,derived")
     for mod in (bench_rounds, bench_fig2, bench_messages, bench_prune,
-                bench_topk, bench_kernels, bench_serve):
+                bench_topk, bench_kernels, bench_serve, bench_ingest):
         mod.run(emit=print)
 
 

@@ -46,6 +46,19 @@ class KnnServiceConfig:
     # kernel on TPU, jnp oracle elsewhere); "jnp" forces the pure-jnp path.
     distance_impl: str = "auto"
 
+    # ---- mutable sharded store (store/mutable.py) -----------------------
+    # Slots per shard of the capacity-padded buffers; fixes every compiled
+    # shape, so the store can mutate forever without recompilation.
+    store_capacity_per_shard: int = 2048
+    # Write-ahead staging: pending mutations auto-flush (one scatter + one
+    # epoch swap) once this many ops are queued.
+    store_staging_size: int = 128
+    # Compaction triggers (store/compaction.py): repack when dead slots
+    # exceed this fraction of occupied slots...
+    store_compact_tombstone_frac: float = 0.35
+    # ...or when (max_live - min_live) / capacity exceeds this skew.
+    store_compact_imbalance_frac: float = 0.5
+
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)
 

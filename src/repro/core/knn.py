@@ -121,9 +121,27 @@ def gather_selected(d, gid, mask, l: int, *, axis_name: str):
     return dists, ids
 
 
+def _masked_distances(distances_fn, queries, points, point_valid):
+    """Distance matrix with tombstoned rows at +inf.
+
+    ``distances_fn`` implementations that can push the mask down into
+    their own top-l machinery (kernels/ops.py) advertise it with a
+    ``supports_valid`` attribute and receive ``valid=`` directly;
+    otherwise the mask is applied here, before the local top-l — either
+    way an invalid point competes as the paper's +inf fake point.
+    """
+    if point_valid is None:
+        return distances_fn(queries, points)
+    if getattr(distances_fn, "supports_valid", False):
+        return distances_fn(queries, points, valid=point_valid)
+    d = distances_fn(queries, points)
+    return jnp.where(point_valid[None, :].astype(jnp.bool_), d, jnp.inf)
+
+
 def _knn_pipeline(
     points, point_ids, queries, l_buf, l_run, key, *,
     axis_name, distances_fn, use_sampling, num_pivots, gather_results,
+    point_valid=None,
 ) -> KnnResult:
     """Shared Algorithm 2 body.
 
@@ -133,8 +151,13 @@ def _knn_pipeline(
     l, bounded by ``l_buf``).  The selection threshold is per-row, so rows
     with smaller l simply stop earlier in composite-key order; their unused
     output slots come back as +inf sentinels from ``gather_selected``.
+
+    ``point_valid`` ((m,) bool, optional) is the mutable store's live-slot
+    mask: invalid slots enter the pipeline at +inf, making them
+    indistinguishable from the paper's fake sentinel points — they are
+    never sampled as survivors, never selected, never gathered.
     """
-    d_full = distances_fn(queries, points)                       # (B, m)
+    d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l_buf)               # (B, l_buf)
 
     if use_sampling:
@@ -170,17 +193,21 @@ def knn_query(
     use_sampling: bool = True,
     num_pivots: int = 1,
     gather_results: bool = True,
+    point_valid: jax.Array | None = None,
 ) -> KnnResult:
     """Full Algorithm 2 inside a shard_map context.
 
     ``points``: (m, dim) this shard's points; ``point_ids``: (m,) globally
     unique int32 ids; ``queries``: (B, dim) replicated query batch.
     ``num_pivots > 1`` enables the beyond-paper multi-pivot selection.
+    ``point_valid`` ((m,) bool, optional): live-slot mask for mutable
+    stores — invalid slots are treated as the paper's +inf fake points.
     """
     return _knn_pipeline(
         points, point_ids, queries, l, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
-        num_pivots=num_pivots, gather_results=gather_results)
+        num_pivots=num_pivots, gather_results=gather_results,
+        point_valid=point_valid)
 
 
 def knn_query_batched(
@@ -196,6 +223,7 @@ def knn_query_batched(
     use_sampling: bool = True,
     num_pivots: int = 1,
     gather_results: bool = True,
+    point_valid: jax.Array | None = None,
 ) -> KnnResult:
     """Algorithm 2 with a *per-request* neighbor count — the serving form.
 
@@ -219,7 +247,8 @@ def knn_query_batched(
     return _knn_pipeline(
         points, point_ids, queries, l_max, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
-        num_pivots=num_pivots, gather_results=gather_results)
+        num_pivots=num_pivots, gather_results=gather_results,
+        point_valid=point_valid)
 
 
 def knn_simple(
@@ -230,15 +259,17 @@ def knn_simple(
     *,
     axis_name: str,
     distances_fn=squared_l2_distances,
+    point_valid: jax.Array | None = None,
 ):
     """The paper's baseline "simple method" (Section 3).
 
     Local top-l, then gather all k*l candidates and reduce.  O(l) rounds in
     the k-machine model (k*l values over the leader's links); one
     all_gather of l values per shard here.  Returns replicated ascending
-    (dists, ids) of shape (B, l).
+    (dists, ids) of shape (B, l); +inf slots (fewer than l live points)
+    carry the INT32_MAX sentinel id.
     """
-    d_full = distances_fn(queries, points)
+    d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l)
     gd = lax.all_gather(d, axis_name)                            # (k, B, l)
     gi = lax.all_gather(gid, axis_name)
@@ -247,9 +278,13 @@ def knn_simple(
     flat_d = jnp.moveaxis(gd, 0, 1).reshape(B, k * l)
     flat_i = jnp.moveaxis(gi, 0, 1).reshape(B, k * l)
     neg_top, idx = lax.top_k(-flat_d, l)
+    dists = -neg_top
+    ids = jnp.take_along_axis(flat_i, idx, axis=-1)
+    # +inf slots may still carry a real (masked-out or padded) point's id
+    # from the local buffer; a dead point's id must never surface.
+    ids = jnp.where(jnp.isfinite(dists), ids, 2**31 - 1)
     from repro.parallel.collectives import replicate
-    return (replicate(-neg_top, axis_name),
-            replicate(jnp.take_along_axis(flat_i, idx, axis=-1), axis_name))
+    return (replicate(dists, axis_name), replicate(ids, axis_name))
 
 
 def knn_classify(mask, labels, num_classes: int, *, axis_name: str):

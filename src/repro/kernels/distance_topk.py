@@ -79,9 +79,18 @@ def _merge_tile(vals, ids, top_v, top_i, l: int):
     return out_v, out_i
 
 
-def _kernel(q_ref, p_ref, out_v_ref, out_i_ref, acc_ref, q2_ref, p2_ref,
-            top_v_ref, top_i_ref, *, nj: int, nk: int, l: int,
-            block_m: int, m_real: int):
+def _kernel(q_ref, p_ref, *refs, nj: int, nk: int, l: int,
+            block_m: int, m_real: int, has_valid: bool):
+    # Operand order follows in_specs: an optional (1, block_m) validity tile
+    # (the mutable store's live-slot mask) rides between the inputs and the
+    # outputs when present.
+    if has_valid:
+        (valid_ref, out_v_ref, out_i_ref, acc_ref, q2_ref, p2_ref,
+         top_v_ref, top_i_ref) = refs
+    else:
+        valid_ref = None
+        (out_v_ref, out_i_ref, acc_ref, q2_ref, p2_ref,
+         top_v_ref, top_i_ref) = refs
     j = pl.program_id(1)
     k = pl.program_id(2)
 
@@ -112,7 +121,15 @@ def _kernel(q_ref, p_ref, out_v_ref, out_i_ref, acc_ref, q2_ref, p2_ref,
         # Rows beyond the caller's true point count are layout padding: they
         # must never win a top-l slot (their zero-filled coordinates land at
         # distance ||q||^2, which CAN be competitive).
-        dist = jnp.where(ids < m_real, dist, jnp.inf)
+        keep = ids < m_real
+        if valid_ref is not None:
+            # Masked-distance path: tombstoned store slots go to +inf (and
+            # the sentinel id) *before* the running top-l merge, so a
+            # deleted point can neither win a slot nor leak its id through
+            # an inf-valued one.
+            keep = keep & (valid_ref[...] > 0.0)
+        dist = jnp.where(keep, dist, jnp.inf)
+        ids = jnp.where(keep, ids, _INT_MAX)
 
         # Guarded merge: the running l-th best (max of an ascending buffer
         # is its last column) vs the tile's best candidate.
@@ -141,6 +158,7 @@ def distance_topk(
     block_m: int = DEFAULT_BLOCK_M,
     block_k: int = 512,
     m_real: int | None = None,
+    valid: jax.Array | None = None,
     interpret: bool = False,
 ):
     """(B, d) x (m, d) -> ((B, l) ascending sq-distances, (B, l) point ids).
@@ -148,7 +166,9 @@ def distance_topk(
     Shapes must divide blocks and l <= MAX_L; `ops.distance_topk` is the
     padded general entry point with the oracle fallback.  ``m_real`` marks
     how many leading point rows are genuine (padding rows are excluded from
-    the top-l inside the kernel).
+    the top-l inside the kernel).  ``valid`` (optional, shape (1, m)
+    float32, 1.0 = live) is the mutable store's slot mask: zero entries are
+    forced to +inf / sentinel id before the running top-l merge.
     """
     B, d = queries.shape
     m, d2 = points.shape
@@ -158,16 +178,24 @@ def distance_topk(
     nb, nj, nk = B // block_b, m // block_m, d // block_k
     if m_real is None:
         m_real = m
+    has_valid = valid is not None
+    if has_valid:
+        assert valid.shape == (1, m), valid.shape
 
     kern = functools.partial(_kernel, nj=nj, nk=nk, l=l, block_m=block_m,
-                             m_real=m_real)
+                             m_real=m_real, has_valid=has_valid)
+    in_specs = [
+        pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
+        pl.BlockSpec((block_m, block_k), lambda i, j, k: (j, k)),
+    ]
+    operands = [queries, points]
+    if has_valid:
+        in_specs.append(pl.BlockSpec((1, block_m), lambda i, j, k: (0, j)))
+        operands.append(valid)
     return pl.pallas_call(
         kern,
         grid=(nb, nj, nk),
-        in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, k: (i, k)),
-            pl.BlockSpec((block_m, block_k), lambda i, j, k: (j, k)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_b, l), lambda i, j, k: (i, 0)),
             pl.BlockSpec((block_b, l), lambda i, j, k: (i, 0)),
@@ -184,4 +212,4 @@ def distance_topk(
             pltpu.VMEM((block_b, l), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, points)
+    )(*operands)

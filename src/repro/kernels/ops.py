@@ -61,15 +61,27 @@ def _l2_padded(q, p, block_b, block_m, block_k, interpret):
     return out[:B, :m]
 
 
-def l2_distance(queries, points, *, block_b=None, block_m=None, block_k=None):
-    """General-shape squared-L2 distance matrix (see kernels/l2_distance.py)."""
+def l2_distance(queries, points, *, valid=None, block_b=None, block_m=None,
+                block_k=None):
+    """General-shape squared-L2 distance matrix (see kernels/l2_distance.py).
+
+    ``valid`` (optional (m,) bool — the mutable store's live-slot mask)
+    forces masked columns to +inf.  The unfused kernel computes the full
+    matrix and masks after (the top-l reduction happens at the caller); the
+    fused :func:`distance_topk` masks *inside* its running merge.
+    """
     mode = _mode()
     if mode == "oracle":
+        if valid is not None:
+            return ref.masked_l2_distance_ref(queries, points, valid)
         return ref.l2_distance_ref(queries, points)
     bb = block_b or _l2.DEFAULT_BLOCK_B
     bm = block_m or _l2.DEFAULT_BLOCK_M
     bk = block_k or _l2.DEFAULT_BLOCK_K
-    return _l2_padded(queries, points, bb, bm, bk, mode == "interpret")
+    out = _l2_padded(queries, points, bb, bm, bk, mode == "interpret")
+    if valid is not None:
+        out = jnp.where(valid[None, :].astype(jnp.bool_), out, jnp.inf)
+    return out
 
 
 @functools.partial(jax.jit,
@@ -84,6 +96,22 @@ def _dtk_padded(q, p, l, block_b, block_m, block_k, interpret):
     pp = _pad_to(_pad_to(p, block_m, 0, 0.0), block_k, 1, 0.0)
     v, i = _dtk.distance_topk(qp, pp, l, block_b=block_b, block_m=block_m,
                               block_k=block_k, m_real=m, interpret=interpret)
+    i = jnp.where(jnp.isfinite(v), i, 2**31 - 1)
+    return v[:B], i[:B]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("l", "block_b", "block_m", "block_k",
+                                    "interpret"))
+def _dtk_padded_masked(q, p, valid, l, block_b, block_m, block_k, interpret):
+    B, m = q.shape[0], p.shape[0]
+    qp = _pad_to(_pad_to(q, block_b, 0, 0.0), block_k, 1, 0.0)
+    pp = _pad_to(_pad_to(p, block_m, 0, 0.0), block_k, 1, 0.0)
+    # Layout-padding slots are masked the same way tombstones are (0.0).
+    vp = _pad_to(valid.astype(jnp.float32)[None, :], block_m, 1, 0.0)
+    v, i = _dtk.distance_topk(qp, pp, l, block_b=block_b, block_m=block_m,
+                              block_k=block_k, m_real=m, valid=vp,
+                              interpret=interpret)
     i = jnp.where(jnp.isfinite(v), i, 2**31 - 1)
     return v[:B], i[:B]
 
@@ -105,9 +133,15 @@ def _fused_gate(l, dim, bb, bm, bk):
     return vmem, None
 
 
-def distance_topk(queries, points, l, *, block_b=None, block_m=None,
-                  block_k=None):
-    """General-shape fused distance+top-l (see kernels/distance_topk.py)."""
+def distance_topk(queries, points, l, *, valid=None, block_b=None,
+                  block_m=None, block_k=None):
+    """General-shape fused distance+top-l (see kernels/distance_topk.py).
+
+    ``valid`` (optional (m,) bool) excludes masked point rows from the
+    top-l — inside the kernel's running merge on the fused path, via the
+    masked oracle on fallbacks.  On the masked path, +inf slots always
+    report the INT32_MAX sentinel id (tombstoned ids never surface).
+    """
     mode = _mode()
     bb = block_b or _dtk.DEFAULT_BLOCK_B
     bm = block_m or _dtk.DEFAULT_BLOCK_M
@@ -115,9 +149,14 @@ def distance_topk(queries, points, l, *, block_b=None, block_m=None,
     d = queries.shape[-1]
     _, reason = _fused_gate(l, d, bb, bm, bk)
     if mode == "oracle" or reason is not None:
+        if valid is not None:
+            return ref.masked_distance_topk_ref(queries, points, valid, l)
         return ref.distance_topk_ref(queries, points, l)
-    return _dtk_padded(queries, points, l, bb, bm, min(bk, _ceil_mult(d, 128)),
-                       mode == "interpret")
+    bk = min(bk, _ceil_mult(d, 128))
+    if valid is not None:
+        return _dtk_padded_masked(queries, points, valid, l, bb, bm, bk,
+                                  mode == "interpret")
+    return _dtk_padded(queries, points, l, bb, bm, bk, mode == "interpret")
 
 
 def _ceil_mult(x: int, m: int) -> int:

@@ -42,3 +42,29 @@ def distance_topk_ref(queries: jax.Array, points: jax.Array, l: int):
     """Fused oracle: l smallest squared distances + point indices."""
     d = l2_distance_ref(queries, points)
     return local_topk_ref(d, l)
+
+
+def masked_l2_distance_ref(queries: jax.Array, points: jax.Array,
+                           valid: jax.Array) -> jax.Array:
+    """Masked distance oracle: invalid point rows come back as +inf.
+
+    ``valid``: (m,) bool — the mutable store's live-slot mask.  Masking
+    happens *before* any top-l reduction a caller runs downstream, so a
+    tombstoned slot can never win a neighbor slot (it competes as +inf,
+    the same sentinel the paper uses for fake padding points).
+    """
+    d = l2_distance_ref(queries, points)
+    return jnp.where(valid[None, :].astype(jnp.bool_), d, jnp.inf)
+
+
+def masked_distance_topk_ref(queries: jax.Array, points: jax.Array,
+                             valid: jax.Array, l: int):
+    """Masked fused oracle: top-l over live slots only.
+
+    Slots whose distance is +inf (masked or padding) report the
+    INT32_MAX sentinel id — a deleted point's id must never surface,
+    even attached to an infinite distance.
+    """
+    d = masked_l2_distance_ref(queries, points, valid)
+    v, i = local_topk_ref(d, l)
+    return v, jnp.where(jnp.isfinite(v), i, jnp.int32(2**31 - 1))

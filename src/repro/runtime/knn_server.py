@@ -23,6 +23,14 @@ All tuning — bucket shapes, l_max, linger, sampling, num_pivots, and the
 selection-vs-gather A/B — comes from ``configs.knn_service.KnnServiceConfig``;
 the server adds no knobs of its own.  benchmarks/bench_serve.py measures
 sustained queries/sec and p50/p99 latency for both sampler settings.
+
+The server can also be backed by a mutable store (``store=`` — a
+``repro.store.MutableStore``): each dispatch captures the store's current
+immutable snapshot, so in-flight micro-batches finish against the
+generation they started with while later submissions see the newly
+swapped epoch (DESIGN.md Section 7).  ``QueryResult.generation`` reports
+which epoch answered.  benchmarks/bench_ingest.py measures ingest
+throughput and query latency under concurrent ingest.
 """
 
 from __future__ import annotations
@@ -53,6 +61,10 @@ class QueryResult(NamedTuple):
     distance (+inf / INT32_MAX sentinel slots last, when fewer than l
     finite points exist).  ``values`` maps ids through the server's
     optional value table (kNN-LM token ids), -1 where absent.
+    ``generation`` is the store generation the answer was computed
+    against: 0 forever for a static-points server, the epoch number of
+    the :class:`~repro.store.MutableStore` snapshot captured at dispatch
+    for a store-backed one.
 
     Round/message accounting follows the k-machine model conventions used
     throughout the repo (see selection.py): the selection path costs 2
@@ -75,6 +87,7 @@ class QueryResult(NamedTuple):
     bucket: int            # device batch shape the request rode in
     queued_s: float        # enqueue -> dispatch
     latency_s: float       # enqueue -> result
+    generation: int = 0    # store epoch the answer was computed against
 
 
 @dataclasses.dataclass
@@ -102,11 +115,23 @@ class _Pending:
 class KnnServer:
     """Serve l-NN queries against a mesh-sharded point set.
 
-    ``points``: (n, dim) host array, sharded over ``axis_name`` at
-    construction (n must divide the mesh axis size).  ``values``: optional
-    (n,) int32 per-point payload (e.g. kNN-LM next-token ids), looked up
-    host-side for winners — values never cross the device interconnect,
-    preserving the paper's only-distances-and-ids-on-the-wire property.
+    Two backing modes:
+
+    * **Static** — ``points``: (n, dim) host array, sharded over
+      ``axis_name`` at construction (n must divide the mesh axis size).
+      ``values``: optional (n,) int32 per-point payload (e.g. kNN-LM
+      next-token ids), looked up host-side for winners — values never
+      cross the device interconnect, preserving the paper's
+      only-distances-and-ids-on-the-wire property.
+
+    * **Mutable** — ``store=``: a :class:`repro.store.MutableStore`.  The
+      server captures ``store.snapshot()`` at each dispatch: in-flight
+      micro-batches keep computing against the generation they captured
+      while newer generations land (epoch-swapped serving — snapshots are
+      immutable device arrays, so a swap can never tear or drop an
+      in-flight query), and every answer reports the generation it was
+      computed against.  Buffer shapes are fixed by the store's capacity,
+      so mutations never trigger recompilation.
 
     Synchronous use: ``submit(...)`` then ``flush()`` (or ``query_batch``).
     Server use: ``with server.serving(): ...`` runs the micro-batcher
@@ -114,33 +139,51 @@ class KnnServer:
     request to fill a bucket before dispatching.
     """
 
-    def __init__(self, points, values=None, *,
+    def __init__(self, points=None, values=None, *, store=None,
                  cfg: KnnServiceConfig = CONFIG, mesh=None,
                  axis_name: str = "knn", seed: int = 0):
         self.cfg = cfg
-        self.axis_name = axis_name
-        self.mesh = mesh if mesh is not None else make_mesh(
-            (jax.device_count(),), (axis_name,))
-        # k machines = the size of the service axis only; on a multi-axis
-        # mesh the other axes replicate the store and the collectives.
-        self.k = int(dict(self.mesh.shape)[axis_name])
-
-        points = np.asarray(points, np.float32)
-        n, dim = points.shape
-        if n % self.k:
-            raise ValueError(
-                f"n_points={n} must divide the mesh axis size {self.k}")
         if not cfg.bucket_sizes or list(cfg.bucket_sizes) != sorted(
                 set(cfg.bucket_sizes)):
             raise ValueError(f"bucket_sizes must be ascending and unique, "
                              f"got {cfg.bucket_sizes}")
-        self.dim = dim
-        self.m_local = n // self.k
-        sharded = NamedSharding(self.mesh, P(axis_name))
-        self._points = jax.device_put(points, sharded)
-        self._ids = jax.device_put(np.arange(n, dtype=np.int32), sharded)
-        self._values = None if values is None else np.asarray(values,
-                                                              np.int32)
+        self._store = store
+        if store is not None:
+            if points is not None or values is not None:
+                raise ValueError(
+                    "pass either points/values or store=, not both")
+            if mesh is not None and mesh != store.mesh:
+                raise ValueError("store-backed server uses the store's mesh")
+            self.axis_name = store.axis_name
+            self.mesh = store.mesh
+            self.k = store.k
+            self.dim = store.dim
+            self.m_local = store.cap
+            self._points = self._ids = None
+            self._values = None
+        else:
+            if points is None:
+                raise ValueError("points or store= required")
+            self.axis_name = axis_name
+            self.mesh = mesh if mesh is not None else make_mesh(
+                (jax.device_count(),), (axis_name,))
+            # k machines = the size of the service axis only; on a
+            # multi-axis mesh the other axes replicate the store and the
+            # collectives.
+            self.k = int(dict(self.mesh.shape)[axis_name])
+
+            points = np.asarray(points, np.float32)
+            n, dim = points.shape
+            if n % self.k:
+                raise ValueError(
+                    f"n_points={n} must divide the mesh axis size {self.k}")
+            self.dim = dim
+            self.m_local = n // self.k
+            sharded = NamedSharding(self.mesh, P(axis_name))
+            self._points = jax.device_put(points, sharded)
+            self._ids = jax.device_put(np.arange(n, dtype=np.int32), sharded)
+            self._values = None if values is None else np.asarray(values,
+                                                                  np.int32)
 
         # Pre-flight kernel-dispatch report, one row per bucket shape:
         # the routing (Pallas kernel / interpret / jnp oracle) of the
@@ -148,7 +191,7 @@ class KnnServer:
         # distance_topk eligibility for capacity planning
         # (kernels/ops.py service_envelope).
         self.envelopes = [
-            kops.service_envelope(b, self.m_local, dim, cfg.l_max)
+            kops.service_envelope(b, self.m_local, self.dim, cfg.l_max)
             for b in cfg.bucket_sizes]
 
         self._fn = self._build_executable()
@@ -165,7 +208,13 @@ class KnnServer:
 
     def _distances_fn(self):
         if self.cfg.distance_impl == "auto":
-            return lambda q, p: kops.l2_distance(q, p)
+            # masked-aware: pushes a store's valid mask down into the
+            # kernels layer (core/knn._masked_distances convention)
+            def fn(q, p, valid=None):
+                return kops.l2_distance(q, p, valid=valid)
+            fn.supports_valid = True
+            return fn
+        # plain jnp path: _masked_distances applies the mask when needed
         return knn_mod.squared_l2_distances
 
     def _build_executable(self):
@@ -173,21 +222,26 @@ class KnnServer:
         axis = self.axis_name
         l_max = cfg.l_max
         distances_fn = self._distances_fn()
+        # The valid-mask operand exists only for store-backed servers;
+        # static servers keep the unmasked executable (no per-query
+        # masking cost for a point set that can never change).
+        masked = self._store is not None
 
         if cfg.sampler == "selection":
-            def fn(pts, pids, q, l_arr, key):
+            def body(pts, pids, pvalid, q, l_arr, key):
                 res = knn_mod.knn_query_batched(
                     pts, pids, q, l_max, l_arr, key, axis_name=axis,
                     distances_fn=distances_fn,
                     use_sampling=cfg.use_sampling,
-                    num_pivots=cfg.num_pivots)
+                    num_pivots=cfg.num_pivots,
+                    point_valid=pvalid)
                 return (res.dists, res.ids, res.selection.iterations,
                         res.prune.survivors)
         elif cfg.sampler == "gather":
-            def fn(pts, pids, q, l_arr, key):
+            def body(pts, pids, pvalid, q, l_arr, key):
                 sd, si = knn_mod.knn_simple(
                     pts, pids, q, l_max, axis_name=axis,
-                    distances_fn=distances_fn)
+                    distances_fn=distances_fn, point_valid=pvalid)
                 # per-request l: slots at rank >= l[b] are masked to the
                 # sentinel (knn_simple returns ascending order).
                 keep = jnp.arange(l_max)[None, :] < l_arr[:, None]
@@ -198,19 +252,39 @@ class KnnServer:
         else:
             raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
+        if masked:
+            fn = body
+            in_specs = (P(axis), P(axis), P(axis), P(None), P(None), P(None))
+        else:
+            def fn(pts, pids, q, l_arr, key):
+                return body(pts, pids, None, q, l_arr, key)
+            in_specs = (P(axis), P(axis), P(None), P(None), P(None))
+
         return jax.jit(shard_map(
-            fn, mesh=self.mesh,
-            in_specs=(P(axis), P(axis), P(None), P(None), P(None)),
+            fn, mesh=self.mesh, in_specs=in_specs,
             out_specs=(P(None), P(None), P(), P(None)),
             check_vma=False))
 
+    def _backing_arrays(self):
+        """(executable operands, generation) to run a dispatch against.
+
+        Store-backed servers capture the current snapshot here — the
+        epoch-swap point.  The returned arrays are immutable, so a batch
+        dispatched before a flush finishes cleanly against its own
+        generation no matter how many swaps land meanwhile.
+        """
+        if self._store is not None:
+            snap = self._store.snapshot()
+            return (snap.points, snap.ids, snap.valid), snap.generation
+        return (self._points, self._ids), 0
+
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
+        operands, _ = self._backing_arrays()
         for b in self.cfg.bucket_sizes:
             q = np.zeros((b, self.dim), np.float32)
             l_arr = np.zeros(b, np.int32)
-            out = self._fn(self._points, self._ids, q, l_arr,
-                           self._base_key)
+            out = self._fn(*operands, q, l_arr, self._base_key)
             jax.block_until_ready(out)
 
     # ---- request path ---------------------------------------------------
@@ -286,8 +360,8 @@ class KnnServer:
         key = jax.random.fold_in(self._base_key, batch_id)
         t_dispatch = time.perf_counter()
         try:
-            d, i, iters, surv = self._fn(self._points, self._ids, q,
-                                         l_arr, key)
+            operands, generation = self._backing_arrays()
+            d, i, iters, surv = self._fn(*operands, q, l_arr, key)
             d = np.asarray(d)
             i = np.asarray(i)
             surv = np.asarray(surv)
@@ -312,7 +386,11 @@ class KnnServer:
             dists = d[row, order]
             ids = i[row, order]
             values = None
-            if self._values is not None:
+            if self._store is not None and self._store.with_values:
+                # the store's id -> value map is monotone (entries outlive
+                # deletion), so the lookup is valid for any generation's ids
+                values = self._store.values_for(ids)
+            elif self._values is not None:
                 # sentinel slots (fewer than l finite points) map to -1;
                 # clip both ends — np.where evaluates the lookup branch
                 # for sentinel ids too.
@@ -324,7 +402,8 @@ class KnnServer:
                 iterations=iters, rounds=rounds, messages=messages,
                 survivors=int(surv[row]), bucket=bucket,
                 queued_s=t_dispatch - rec.t_enqueue,
-                latency_s=t_done - rec.t_enqueue))
+                latency_s=t_done - rec.t_enqueue,
+                generation=generation))
 
     # ---- background micro-batcher ---------------------------------------
 

@@ -1,0 +1,12 @@
+"""Mutable sharded point store — streaming ingest/deletes under the
+static-shape query path, with epoch-swapped serving (DESIGN.md Section 7).
+"""
+
+from repro.store.mutable import (ID_SENTINEL, IngestStats, MutableStore,
+                                 StoreFullError, StoreSnapshot)
+from repro.store.compaction import CompactionDecision, evaluate, repack
+
+__all__ = [
+    "MutableStore", "StoreSnapshot", "StoreFullError", "IngestStats",
+    "ID_SENTINEL", "CompactionDecision", "evaluate", "repack",
+]

@@ -1,0 +1,110 @@
+"""Compaction / rebalance policy and repacking for the mutable store.
+
+Two forces erode a capacity-padded sharded store under streaming
+mutations:
+
+* **Tombstones.**  Deletes only flip the ``valid`` bit — the slot stays
+  occupied (reusing it in place would make a staged batch's scatter
+  order-sensitive and would interleave dead and live rows forever).  Dead
+  slots cost nothing per query (every shard scans its full static buffer
+  regardless — XLA shapes are fixed), but they consume insert headroom:
+  a shard's free space is only its untouched tail.
+
+* **Imbalance.**  Inserts land on the emptiest shard, but deletes land
+  wherever the victim lives, so live counts drift apart.  Skewed shards
+  hurt twice: per-machine candidate quality degrades (the Duan/Qiao/Cheng
+  argument — each machine's local answer should be drawn from a
+  comparably-sized sample), and a full shard rejects inserts while its
+  neighbors sit half empty.
+
+The trigger math (:func:`evaluate`) watches both with one scalar each:
+
+  ``tombstone_density = dead_slots / occupied_slots``     (reclaimable frac)
+  ``imbalance         = (max_live - min_live) / capacity`` (skew frac)
+
+Crossing either configured threshold schedules a repack at the next
+apply.  :func:`repack` rebuilds the mirrors: live points are dealt
+round-robin in ascending-id order, so shard live counts differ by at most
+one and every shard's occupied region is a dense prefix (the whole tail
+becomes insert headroom again).  Ids are stable across a repack — only
+slots move — so a repack is invisible to clients except as a generation
+bump (DESIGN.md Section 7).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class CompactionDecision(NamedTuple):
+    compact: bool
+    reason: str | None
+    tombstone_density: float
+    imbalance: float
+
+
+def evaluate(live: np.ndarray, used: np.ndarray, cap: int, *,
+             tombstone_frac: float,
+             imbalance_frac: float) -> CompactionDecision:
+    """Decide whether the store should repack.
+
+    ``live``: (k,) live points per shard; ``used``: (k,) occupied slots
+    per shard (the high-water mark — live + tombstones); ``cap``: slots
+    per shard.
+    """
+    used_total = int(used.sum())
+    dead = used_total - int(live.sum())
+    density = dead / used_total if used_total else 0.0
+    imbalance = (int(live.max()) - int(live.min())) / cap if cap else 0.0
+    if density > tombstone_frac:
+        return CompactionDecision(
+            True, f"tombstone_density {density:.3f} > {tombstone_frac}",
+            density, imbalance)
+    if imbalance > imbalance_frac:
+        return CompactionDecision(
+            True, f"imbalance {imbalance:.3f} > {imbalance_frac}",
+            density, imbalance)
+    return CompactionDecision(False, None, density, imbalance)
+
+
+class RepackResult(NamedTuple):
+    points: np.ndarray     # (k*cap, dim) new point mirror
+    ids: np.ndarray        # (k*cap,) new id mirror (sentinel in free slots)
+    valid: np.ndarray      # (k*cap,) new validity mirror
+    slot_of: dict          # id -> new slot
+    live: np.ndarray       # (k,) live per shard (balanced to within 1)
+    used: np.ndarray       # (k,) new high-water marks (== live)
+
+
+def repack(points: np.ndarray, ids: np.ndarray, valid: np.ndarray,
+           k: int, cap: int, *, id_sentinel: int) -> RepackResult:
+    """Pack live slots into dense, balanced per-shard prefixes.
+
+    Live points are dealt round-robin in ascending-id order: point t goes
+    to shard ``t % k`` at local offset ``t // k``.  Deterministic (no RNG,
+    no dependence on previous layout), balanced to within one point, and
+    id-stable.
+    """
+    dim = points.shape[1]
+    total = k * cap
+    live_slots = np.flatnonzero(valid)
+    order = live_slots[np.argsort(ids[live_slots], kind="stable")]
+    n = order.size
+    assert n <= total
+
+    new_pts = np.zeros((total, dim), points.dtype)
+    new_ids = np.full(total, id_sentinel, np.int32)
+    new_valid = np.zeros(total, bool)
+
+    t = np.arange(n)
+    dest = (t % k) * cap + t // k
+    new_pts[dest] = points[order]
+    new_ids[dest] = ids[order]
+    new_valid[dest] = True
+
+    slot_of = {int(i): int(s) for i, s in zip(ids[order], dest)}
+    live = np.bincount(dest // cap, minlength=k).astype(np.int64)
+    return RepackResult(points=new_pts, ids=new_ids, valid=new_valid,
+                        slot_of=slot_of, live=live, used=live.copy())

@@ -1,0 +1,467 @@
+"""Mutable, sharded point store with epoch-swapped snapshots.
+
+The paper — and the whole query path built on it — assumes a static point
+set wrapped once by ``core.datastore.build_local``.  Production kNN
+services (kNN-LM stores, feature retrieval) must absorb inserts, deletes,
+and updates *while serving*.  This module adds that layer without giving
+up the repo's static-shape discipline:
+
+* **Capacity-padded shard buffers.**  Each of the k shards owns ``cap``
+  slots of a device-resident ``(k*cap, dim)`` point buffer (NamedSharding
+  over the service axis) plus parallel ``ids``/``valid`` buffers.  Shapes
+  never change, so no mutation ever recompiles an executable; a slot that
+  holds no live point is masked by ``valid`` and competes in Algorithm 2
+  exactly like the paper's +inf fake padding points.
+
+* **Write-ahead staging.**  Mutations are staged host-side
+  (:meth:`insert` / :meth:`delete` / :meth:`update` validate and enqueue;
+  nothing is device-visible yet), then :meth:`flush` applies the whole
+  batch: ops replay onto the host mirrors in submission order, and the
+  net effect — one final value per touched slot — lands on device as a
+  single padded scatter.  Auto-flush triggers at ``staging_size`` pending
+  ops.
+
+* **Generations / epoch swap.**  Every applied batch produces a fresh
+  immutable :class:`StoreSnapshot` (device arrays + generation number);
+  readers grab the current snapshot at dispatch time and keep computing
+  against it even while newer generations land — jax array immutability
+  makes the swap free and torn reads impossible.  The serving integration
+  (``runtime/knn_server.py``) reports the generation each answer was
+  computed against.
+
+* **Compaction / rebalance** (``store/compaction.py``).  Deletes leave
+  tombstones; inserts fill the emptiest shard's tail.  When tombstone
+  density or shard imbalance crosses its threshold (or a shard's tail
+  runs out while global space remains), the store repacks live points
+  into dense, balanced prefixes — one full re-upload, one generation
+  bump, ids stable throughout.
+
+Protocol details and the trigger math: DESIGN.md Section 7.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import NamedTuple, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.compat import make_mesh
+from repro.store import compaction
+
+ID_SENTINEL = 2**31 - 1
+
+
+class StoreFullError(RuntimeError):
+    """Raised when an insert cannot fit even after compaction."""
+
+
+class StoreSnapshot(NamedTuple):
+    """One immutable generation of the store, as the device sees it.
+
+    ``points``: (k*cap, dim) f32, sharded over the service axis;
+    ``ids``: (k*cap,) int32 global point ids (ID_SENTINEL in dead/free
+    slots); ``valid``: (k*cap,) bool live mask; ``live``: global live
+    count at this generation.
+    """
+
+    generation: int
+    points: jax.Array
+    ids: jax.Array
+    valid: jax.Array
+    live: int
+
+
+@dataclasses.dataclass
+class IngestStats:
+    inserted: int = 0
+    deleted: int = 0
+    updated: int = 0
+    applies: int = 0               # flushes that produced a generation
+    compactions: int = 0
+    forced_compactions: int = 0    # repacks forced by a full shard mid-flush
+    last_compact_reason: Optional[str] = None
+
+
+@dataclasses.dataclass
+class _Op:
+    kind: str                      # "insert" | "delete" | "update"
+    id: int
+    point: Optional[np.ndarray] = None
+    value: Optional[int] = None
+
+
+class MutableStore:
+    """Mutable sharded point store; see module docstring.
+
+    Thread-safe: mutations, flushes, and snapshot reads may come from any
+    thread (the serving integration reads snapshots from the micro-batcher
+    thread while an ingest thread mutates).
+    """
+
+    def __init__(self, dim: int, *, capacity_per_shard: int, mesh=None,
+                 axis_name: str = "knn", staging_size: int = 64,
+                 compact_tombstone_frac: float = 0.35,
+                 compact_imbalance_frac: float = 0.5,
+                 auto_compact: bool = True, with_values: bool = False,
+                 track_history: bool = False):
+        if capacity_per_shard < 1:
+            raise ValueError("capacity_per_shard must be >= 1")
+        self.dim = int(dim)
+        self.axis_name = axis_name
+        self.mesh = mesh if mesh is not None else make_mesh(
+            (jax.device_count(),), (axis_name,))
+        self.k = int(dict(self.mesh.shape)[axis_name])
+        self.cap = int(capacity_per_shard)
+        self.total = self.k * self.cap
+        self.staging_size = int(staging_size)
+        self.compact_tombstone_frac = float(compact_tombstone_frac)
+        self.compact_imbalance_frac = float(compact_imbalance_frac)
+        self.auto_compact = bool(auto_compact)
+        self.with_values = bool(with_values)
+        self.stats = IngestStats()
+
+        self._lock = threading.RLock()
+        self._sharding = NamedSharding(self.mesh, P(axis_name))
+
+        # Host mirrors — authoritative control plane; the device snapshot
+        # is always a pure function of these (mirror first, then upload).
+        self._pts = np.zeros((self.total, self.dim), np.float32)
+        self._ids = np.full(self.total, ID_SENTINEL, np.int32)
+        self._valid = np.zeros(self.total, bool)
+        self._slot_of: dict[int, int] = {}
+        # Ids are single-use, forever: once staged for insertion an id can
+        # never be inserted again, even after deletion.  This is what makes
+        # the id -> value map monotone (values_for answers correctly for
+        # any generation's ids) and an id denote one immutable point
+        # identity across all generations.  Grows with total inserts.
+        self._used_ids: set[int] = set()
+        self._live = np.zeros(self.k, np.int64)   # live points per shard
+        self._used = np.zeros(self.k, np.int64)   # high-water mark per shard
+        self._values: dict[int, int] = {}
+        self._next_id = 0
+
+        # Write-ahead staging.
+        self._pending: list[_Op] = []
+        self._staged_state: dict[int, bool] = {}  # id -> live after flush
+        self._projected_live = 0
+
+        self._apply_fn = jax.jit(
+            _scatter_apply,
+            out_shardings=(self._sharding, self._sharding, self._sharding))
+
+        self._history: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        self._track_history = bool(track_history)
+        self._snap = self._upload_snapshot_locked(generation=0)
+        self._record_history()
+
+    # ---- read side -------------------------------------------------------
+
+    def snapshot(self) -> StoreSnapshot:
+        """The current generation (immutable; safe to compute against while
+        newer generations land)."""
+        with self._lock:
+            return self._snap
+
+    @property
+    def generation(self) -> int:
+        return self.snapshot().generation
+
+    @property
+    def live_count(self) -> int:
+        """Live points in the *applied* state (staged ops excluded)."""
+        with self._lock:
+            return int(self._live.sum())
+
+    @property
+    def pending_ops(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    @property
+    def live_per_shard(self) -> np.ndarray:
+        """(k,) live points per shard — the balance the compactor defends."""
+        with self._lock:
+            return self._live.copy()
+
+    def live_arrays(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, points) of the applied live set, ascending by id — the
+        brute-force oracle view used by tests and benchmarks."""
+        with self._lock:
+            slots = np.flatnonzero(self._valid)
+            order = slots[np.argsort(self._ids[slots], kind="stable")]
+            return self._ids[order].copy(), self._pts[order].copy()
+
+    def history(self, generation: int) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, points) live at ``generation`` (requires track_history)."""
+        if not self._track_history:
+            raise RuntimeError("store built with track_history=False")
+        with self._lock:
+            return self._history[generation]
+
+    def values_for(self, ids: np.ndarray) -> np.ndarray:
+        """Map global point ids to their payload values, -1 where absent.
+
+        The id→value map is monotone (entries survive deletion) so lookups
+        against older generations' answers stay well-defined.
+        """
+        with self._lock:
+            return np.array([self._values.get(int(i), -1) for i in ids],
+                            np.int32)
+
+    # ---- write side (staging) -------------------------------------------
+
+    def insert(self, points, ids=None, values=None) -> np.ndarray:
+        """Stage point insertions; returns the assigned global ids.
+
+        ``points``: (n, dim) or (dim,).  ``ids`` (optional) must be fresh —
+        never used before, not even by a since-deleted point (ids are
+        single-use so the id->value map stays monotone); omitted ids are
+        assigned from a monotone counter.  ``values`` (optional, requires
+        ``with_values``): per-point int payloads.  Atomic: on any
+        validation error (duplicate/reused id, capacity) the whole batch
+        is rejected and nothing is staged.
+        """
+        points = np.atleast_2d(np.asarray(points, np.float32))
+        n = points.shape[0]
+        if points.shape != (n, self.dim):
+            raise ValueError(f"points shape {points.shape} != (n, {self.dim})")
+        if values is not None and not self.with_values:
+            raise ValueError("store built with with_values=False")
+        if values is not None:
+            values = np.broadcast_to(np.asarray(values, np.int32), (n,))
+        with self._lock:
+            if ids is None:
+                ids = np.arange(self._next_id, self._next_id + n,
+                                dtype=np.int64)
+            else:
+                ids = np.broadcast_to(np.asarray(ids, np.int64), (n,))
+            # validate the whole batch before staging any of it
+            if self._projected_live + n > self.total:
+                raise StoreFullError(
+                    f"store full: capacity {self.total}, projected live "
+                    f"{self._projected_live}, insert batch {n}")
+            batch = set()
+            for pid in ids:
+                pid = int(pid)
+                if not 0 <= pid < ID_SENTINEL:
+                    raise ValueError(f"id {pid} outside [0, 2^31-1)")
+                if pid in batch or pid in self._used_ids:
+                    raise ValueError(
+                        f"id {pid} was already used (ids are single-use)")
+                batch.add(pid)
+            for t in range(n):
+                pid = int(ids[t])
+                self._pending.append(_Op(
+                    "insert", pid, point=points[t].copy(),
+                    value=None if values is None else int(values[t])))
+                self._staged_state[pid] = True
+                self._used_ids.add(pid)
+                self._next_id = max(self._next_id, pid + 1)
+            self._projected_live += n
+            self._maybe_autoflush_locked()
+            return ids.astype(np.int32)
+
+    def delete(self, ids) -> None:
+        """Stage deletions by global id (KeyError if not live/staged).
+        Atomic: one unknown id rejects the whole batch, staging nothing."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        with self._lock:
+            gone = set()
+            for pid in ids:
+                pid = int(pid)
+                if pid in gone or not self._would_be_live(pid):
+                    raise KeyError(f"id {pid} is not live")
+                gone.add(pid)
+            for pid in ids:
+                pid = int(pid)
+                self._pending.append(_Op("delete", pid))
+                self._staged_state[pid] = False
+            self._projected_live -= len(ids)
+            self._maybe_autoflush_locked()
+
+    def update(self, ids, points) -> None:
+        """Stage in-place point overwrites (same id, same slot).
+        Atomic: one unknown id rejects the whole batch, staging nothing."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        points = np.atleast_2d(np.asarray(points, np.float32))
+        if points.shape != (len(ids), self.dim):
+            raise ValueError(
+                f"points shape {points.shape} != ({len(ids)}, {self.dim})")
+        with self._lock:
+            for pid in ids:
+                if not self._would_be_live(int(pid)):
+                    raise KeyError(f"id {int(pid)} is not live")
+            for pid, pt in zip(ids, points):
+                self._pending.append(_Op("update", int(pid), point=pt.copy()))
+            self._maybe_autoflush_locked()
+
+    def _would_be_live(self, pid: int) -> bool:
+        if pid in self._staged_state:
+            return self._staged_state[pid]
+        return pid in self._slot_of
+
+    def _maybe_autoflush_locked(self):
+        if len(self._pending) >= self.staging_size:
+            self.flush()
+
+    # ---- apply (epoch swap) ---------------------------------------------
+
+    def flush(self) -> int:
+        """Apply all staged mutations as one epoch swap; returns the new
+        generation (or the current one if nothing was staged)."""
+        with self._lock:
+            if not self._pending:
+                return self._snap.generation
+            return self._apply_locked(force_compact=False)
+
+    def compact(self) -> int:
+        """Flush staged ops (if any) and force a repack/rebalance; always
+        produces a new generation."""
+        with self._lock:
+            return self._apply_locked(force_compact=True)
+
+    def _apply_locked(self, *, force_compact: bool) -> int:
+        ops, self._pending = self._pending, []
+        self._staged_state = {}
+        touched: set[int] = set()
+        repacked = False
+
+        for op in ops:
+            if op.kind == "insert":
+                j = self._pick_shard_locked()
+                if j < 0:
+                    # Every shard is at its high-water mark but global
+                    # capacity remains (staging checked it): reclaim
+                    # tombstones now.  At most once per flush — after a
+                    # repack the free tail covers all remaining inserts.
+                    self._repack_locked()
+                    repacked = True
+                    self.stats.forced_compactions += 1
+                    self.stats.last_compact_reason = "forced: all shards at high-water"
+                    j = self._pick_shard_locked()
+                    assert j >= 0, "repack must free tail space"
+                slot = j * self.cap + int(self._used[j])
+                self._used[j] += 1
+                self._live[j] += 1
+                self._pts[slot] = op.point
+                self._ids[slot] = op.id
+                self._valid[slot] = True
+                self._slot_of[op.id] = slot
+                if op.value is not None:
+                    self._values[op.id] = op.value
+                touched.add(slot)
+                self.stats.inserted += 1
+            elif op.kind == "delete":
+                slot = self._slot_of.pop(op.id)
+                self._live[slot // self.cap] -= 1
+                self._valid[slot] = False
+                self._ids[slot] = ID_SENTINEL
+                touched.add(slot)
+                self.stats.deleted += 1
+            else:  # update
+                slot = self._slot_of[op.id]
+                self._pts[slot] = op.point
+                touched.add(slot)
+                self.stats.updated += 1
+
+        if force_compact and not repacked:
+            self._repack_locked()
+            repacked = True
+            self.stats.last_compact_reason = "forced: explicit compact()"
+        elif self.auto_compact and not repacked:
+            decision = compaction.evaluate(
+                self._live, self._used, self.cap,
+                tombstone_frac=self.compact_tombstone_frac,
+                imbalance_frac=self.compact_imbalance_frac)
+            if decision.compact:
+                self._repack_locked()
+                repacked = True
+                self.stats.last_compact_reason = decision.reason
+
+        self._projected_live = int(self._live.sum())
+        gen = self._snap.generation + 1
+        if repacked:
+            # A repack moves slots wholesale: one full upload.
+            self._snap = self._upload_snapshot_locked(generation=gen)
+        else:
+            new_pts, new_ids, new_valid = self._scatter_locked(sorted(touched))
+            self._snap = StoreSnapshot(generation=gen, points=new_pts,
+                                       ids=new_ids, valid=new_valid,
+                                       live=self._projected_live)
+        self.stats.applies += 1
+        self._record_history()
+        return gen
+
+    def _upload_snapshot_locked(self, *, generation: int) -> StoreSnapshot:
+        """Full upload of the mirrors as a fresh snapshot.
+
+        device_put is handed *copies*: the host->device transfer may still
+        be in flight when this method returns, and the next flush mutates
+        the mirrors in place — uploading the live mirror would let a later
+        batch's writes leak into (and tear) this supposedly immutable
+        generation under concurrent serving.
+        """
+        return StoreSnapshot(
+            generation=generation,
+            points=jax.device_put(self._pts.copy(), self._sharding),
+            ids=jax.device_put(self._ids.copy(), self._sharding),
+            valid=jax.device_put(self._valid.copy(), self._sharding),
+            live=int(self._live.sum()))
+
+    def _pick_shard_locked(self) -> int:
+        """Balance-aware placement: the least-loaded shard with tail space
+        (Duan/Qiao-style shard balance), smallest index on ties; -1 if no
+        shard has tail space."""
+        open_mask = self._used < self.cap
+        if not open_mask.any():
+            return -1
+        live = np.where(open_mask, self._live, np.iinfo(np.int64).max)
+        return int(np.argmin(live))
+
+    def _repack_locked(self):
+        res = compaction.repack(self._pts, self._ids, self._valid,
+                                self.k, self.cap, id_sentinel=ID_SENTINEL)
+        self._pts, self._ids, self._valid = res.points, res.ids, res.valid
+        self._slot_of = res.slot_of
+        self._live, self._used = res.live, res.used
+        self.stats.compactions += 1
+
+    def _scatter_locked(self, slots: list[int]):
+        """Apply the final per-slot values of one staged batch on device.
+
+        Touched slots are deduplicated by construction (a set), so the
+        scatter has unique indices; padding rows point at slot ``total``
+        and are dropped.  Padded to powers of two so the jit cache stays
+        small across flushes of varying size.
+        """
+        n = len(slots)
+        pad = max(8, 1 << max(0, (n - 1).bit_length()))
+        idx = np.full(pad, self.total, np.int32)
+        idx[:n] = slots
+        upd_pts = np.zeros((pad, self.dim), np.float32)
+        upd_ids = np.full(pad, ID_SENTINEL, np.int32)
+        upd_valid = np.zeros(pad, bool)
+        upd_pts[:n] = self._pts[slots]
+        upd_ids[:n] = self._ids[slots]
+        upd_valid[:n] = self._valid[slots]
+        return self._apply_fn(self._snap.points, self._snap.ids,
+                              self._snap.valid, idx, upd_pts, upd_ids,
+                              upd_valid)
+
+    def _record_history(self):
+        if self._track_history:
+            ids, pts = self.live_arrays()
+            self._history[self._snap.generation] = (ids, pts)
+
+
+def _scatter_apply(pts, ids, valid, slots, upd_pts, upd_ids, upd_valid):
+    """On-device batched mutation: one scatter per buffer, out-of-range
+    (padding) rows dropped.  No donation — older generations stay live for
+    in-flight readers (the epoch-swap contract)."""
+    return (pts.at[slots].set(upd_pts, mode="drop"),
+            ids.at[slots].set(upd_ids, mode="drop"),
+            valid.at[slots].set(upd_valid, mode="drop"))

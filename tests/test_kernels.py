@@ -107,3 +107,65 @@ def test_oracle_fallback_large_l(rng):
     rv, ri = ref.distance_topk_ref(q, p, 512)
     np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
                                atol=1e-3)
+
+
+@pytest.mark.parametrize("l", [255, 256, 257])
+def test_specialization_envelope_boundary(rng, l):
+    """The l <= MAX_L (256) fused kernel and the l2_distance + lax.top_k
+    fallback must agree across the routing seam: l = 255 and 256 run the
+    kernel, 257 silently falls back — all three must match the oracle."""
+    from repro.kernels.distance_topk import MAX_L
+    assert MAX_L == 256            # the seam this test pins
+    B, d, m = 4, 32, 512
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    p = rng.normal(size=(m, d)).astype(np.float32)
+    # routing truth, straight from the dispatcher's own gate
+    _, reason = ops._fused_gate(l, d, 8, 256, 512)
+    assert (reason is None) == (l <= MAX_L)
+    v, i = ops.distance_topk(q, p, l)
+    rv, ri = ref.distance_topk_ref(q, p, l)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
+                               atol=1e-3)
+    for b in range(B):
+        assert set(np.asarray(i)[b].tolist()) == set(
+            np.asarray(ri)[b].tolist()), b
+
+
+@pytest.mark.parametrize("shape", [(8, 128, 256), (13, 300, 777)])
+@pytest.mark.parametrize("l", [1, 16])
+def test_masked_distance_topk_sweep(rng, shape, l):
+    """The fused kernel's masked path (mutable-store tombstones) against
+    the masked oracle: masked rows never appear, sentinel ids in +inf
+    slots."""
+    B, d, m = shape
+    q = rng.normal(size=(B, d)).astype(np.float32)
+    p = rng.normal(size=(m, d)).astype(np.float32)
+    valid = rng.random(m) > 0.4
+    v, i = ops.distance_topk(q, p, l, valid=valid)
+    rv, ri = ref.masked_distance_topk_ref(q, p, valid, l)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-4,
+                               atol=1e-3)
+    dead = set(np.flatnonzero(~valid).tolist())
+    for b in range(B):
+        got = set(np.asarray(i)[b].tolist())
+        assert got == set(np.asarray(ri)[b].tolist()), b
+        assert not (got & dead), "tombstoned id surfaced"
+
+
+def test_masked_distance_topk_all_invalid(rng):
+    """Fully-masked store shard: all +inf distances, all sentinel ids."""
+    q = rng.normal(size=(4, 64)).astype(np.float32)
+    p = rng.normal(size=(256, 64)).astype(np.float32)
+    v, i = ops.distance_topk(q, p, 8, valid=np.zeros(256, bool))
+    assert np.all(np.isinf(np.asarray(v)))
+    assert np.all(np.asarray(i) == 2**31 - 1)
+
+
+def test_masked_l2_distance(rng):
+    q = rng.normal(size=(8, 128)).astype(np.float32)
+    p = rng.normal(size=(256, 128)).astype(np.float32)
+    valid = rng.random(256) > 0.5
+    out = np.asarray(ops.l2_distance(q, p, valid=valid))
+    want = np.asarray(ref.masked_l2_distance_ref(q, p, valid))
+    np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-3)
+    assert np.all(np.isinf(out[:, ~valid]))

@@ -1,0 +1,445 @@
+"""Mutable sharded store: staging/flush semantics, validity threading,
+compaction/rebalance, and epoch-swapped serving.
+
+The load-bearing invariant (ISSUE 2 acceptance): for ANY interleaving of
+insert/delete/update/compact, `knn_query` over the mutable store returns
+exactly the brute-force l-NN of the *live* points — deleted points never
+surface, inserted points surface immediately once their generation is
+visible — and an epoch swap under concurrent submit load drops zero
+in-flight queries.
+"""
+
+import threading
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro.core as core
+from repro.configs.knn_service import CONFIG
+from repro.parallel.compat import shard_map
+from repro.runtime import KnnServer
+from repro.store import MutableStore, StoreFullError
+
+K = 8
+DIM = 4
+CAP = 32                      # slots per shard -> 256 total
+NEVER = 10**9                 # staging_size that never auto-flushes
+
+_SENTINEL = 2**31 - 1
+
+
+def _mk_store(mesh, **kw):
+    kw.setdefault("staging_size", NEVER)
+    return MutableStore(DIM, capacity_per_shard=CAP, mesh=mesh,
+                        axis_name="x", **kw)
+
+
+def _mk_server(store, **overrides):
+    kw = dict(dim=DIM, l=8, l_max=16, bucket_sizes=(4,))
+    kw.update(overrides)
+    return KnnServer(store=store, cfg=CONFIG.replace(**kw))
+
+
+def _brute_ids(ids, pts, q, l):
+    """Set of the l nearest live ids (distances are a.s. distinct)."""
+    if len(ids) == 0:
+        return set()
+    d = ((q[None] - pts) ** 2).sum(-1)
+    return set(np.asarray(ids)[np.argsort(d, kind="stable")[:l]].tolist())
+
+
+def _check_result(r, live_ids, live_pts, q, l):
+    """r's finite slots == brute-force l-NN of the live set; the rest are
+    sentinels (deleted points must never surface, not even at +inf)."""
+    l_eff = min(l, len(live_ids))
+    assert set(r.ids[:l_eff].tolist()) == _brute_ids(live_ids, live_pts, q,
+                                                     l_eff)
+    assert np.all(np.isfinite(r.dists[:l_eff]))
+    assert np.all(np.isinf(r.dists[l_eff:]))
+    assert np.all(r.ids[l_eff:] == _SENTINEL)
+
+
+# ---- staging / visibility -------------------------------------------------
+
+
+def test_staged_ops_invisible_until_flush(mesh8, rng):
+    st = _mk_store(mesh8)
+    srv = _mk_server(st)
+    q = rng.normal(size=DIM).astype(np.float32)
+
+    st.insert(rng.normal(size=(20, DIM)).astype(np.float32))
+    assert st.pending_ops == 20 and st.live_count == 0
+    r = srv.query_batch(q[None], [8])[0]
+    assert r.generation == 0
+    assert np.all(np.isinf(r.dists)) and np.all(r.ids == _SENTINEL)
+
+    gen = st.flush()
+    assert gen == 1 and st.pending_ops == 0 and st.live_count == 20
+    r = srv.query_batch(q[None], [8])[0]
+    assert r.generation == 1
+    ids, pts = st.live_arrays()
+    _check_result(r, ids, pts, q, 8)
+
+
+def test_autoflush_at_staging_size(mesh8, rng):
+    st = _mk_store(mesh8, staging_size=16)
+    st.insert(rng.normal(size=(15, DIM)).astype(np.float32))
+    assert st.generation == 0            # below threshold: still staged
+    st.insert(rng.normal(size=(1, DIM)).astype(np.float32))
+    assert st.generation == 1 and st.live_count == 16
+
+
+def test_staging_validation(mesh8, rng):
+    st = _mk_store(mesh8)
+    ids = st.insert(rng.normal(size=(4, DIM)).astype(np.float32))
+    with pytest.raises(ValueError):      # duplicate staged id
+        st.insert(np.zeros(DIM, np.float32), ids=[int(ids[0])])
+    with pytest.raises(KeyError):
+        st.delete([999])
+    with pytest.raises(KeyError):
+        st.update([999], np.zeros((1, DIM), np.float32))
+    st.flush()
+    # delete staged-then-flushed id, then double delete
+    st.delete([int(ids[0])])
+    with pytest.raises(KeyError):
+        st.delete([int(ids[0])])
+    st.flush()
+    # ids are single-use forever: re-inserting a deleted id must fail
+    # (this is what keeps the id -> value map monotone for old epochs)
+    with pytest.raises(ValueError):
+        st.insert(np.zeros(DIM, np.float32), ids=[int(ids[0])])
+    # and auto-assigned ids never collide with anything ever used
+    new = st.insert(np.zeros(DIM, np.float32))
+    assert int(new[0]) > int(ids.max())
+
+
+def test_staging_is_atomic_per_call(mesh8, rng):
+    """A rejected batch stages nothing: no partial inserts/deletes leak
+    into a later flush."""
+    st = _mk_store(mesh8)
+    ids = st.insert(rng.normal(size=(st.total - 2, DIM)).astype(np.float32))
+    st.flush()
+    # insert overflowing by one: whole batch rejected, nothing staged
+    with pytest.raises(StoreFullError):
+        st.insert(rng.normal(size=(3, DIM)).astype(np.float32))
+    assert st.pending_ops == 0
+    # delete with one bad id: whole batch rejected
+    with pytest.raises(KeyError):
+        st.delete([int(ids[0]), 10**6])
+    # delete with an intra-batch duplicate: rejected
+    with pytest.raises(KeyError):
+        st.delete([int(ids[1]), int(ids[1])])
+    # update with one bad id: rejected
+    with pytest.raises(KeyError):
+        st.update([int(ids[0]), 10**6],
+                  np.zeros((2, DIM), np.float32))
+    assert st.pending_ops == 0
+    st.flush()
+    assert st.live_count == st.total - 2    # nothing leaked
+
+
+def test_store_full_raises_at_staging(mesh8, rng):
+    st = _mk_store(mesh8)
+    st.insert(rng.normal(size=(st.total, DIM)).astype(np.float32))
+    with pytest.raises(StoreFullError):
+        st.insert(np.zeros(DIM, np.float32))
+    st.flush()
+    # deleting frees projected capacity again
+    st.delete([0])
+    st.insert(np.zeros(DIM, np.float32))
+    st.flush()
+    assert st.live_count == st.total
+
+
+def test_update_moves_point(mesh8, rng):
+    st = _mk_store(mesh8)
+    ids = st.insert(rng.normal(size=(32, DIM)).astype(np.float32) + 10.0)
+    st.flush()
+    srv = _mk_server(st)
+    q = rng.normal(size=DIM).astype(np.float32)
+    target = int(ids[7])
+    st.update([target], q[None])         # exact hit: distance 0
+    st.flush()
+    r = srv.query_batch(q[None], [1])[0]
+    assert r.ids[0] == target and r.dists[0] < 1e-6
+
+
+def test_values_follow_mutations(mesh8, rng):
+    st = _mk_store(mesh8, with_values=True)
+    pts = rng.normal(size=(10, DIM)).astype(np.float32)
+    ids = st.insert(pts, values=np.arange(100, 110))
+    st.flush()
+    srv = _mk_server(st, l_max=16)
+    q = pts[3]
+    r = srv.query_batch(q[None], [2])[0]
+    assert r.values[0] == 103            # nearest is the point itself
+    st.delete([int(ids[3])])
+    st.flush()
+    r = srv.query_batch(q[None], [2])[0]
+    assert 103 not in r.values.tolist()
+
+
+# ---- the core invariant ---------------------------------------------------
+
+
+def test_interleaving_property(mesh8, rng):
+    """Random interleavings of insert/delete/update/compact: after every
+    flush the served answer equals brute force over exactly the live set."""
+    st = _mk_store(mesh8)
+    srv = _mk_server(st)
+    srv.warmup()
+    model: dict[int, np.ndarray] = {}    # id -> point (the oracle)
+
+    for rnd in range(12):
+        action = rng.choice(["insert", "delete", "update", "compact"],
+                            p=[0.45, 0.25, 0.15, 0.15])
+        if action == "insert" or not model:
+            n = int(rng.integers(1, min(40, st.total - len(model)) + 1))
+            pts = rng.normal(size=(n, DIM)).astype(np.float32)
+            ids = st.insert(pts)
+            model.update(zip(ids.tolist(), pts))
+        elif action == "delete":
+            n = int(rng.integers(1, max(2, len(model) // 2)))
+            victims = rng.choice(sorted(model), size=n, replace=False)
+            st.delete(victims)
+            for v in victims:
+                del model[int(v)]
+        elif action == "update":
+            n = int(rng.integers(1, max(2, len(model) // 2)))
+            chosen = rng.choice(sorted(model), size=n, replace=False)
+            pts = rng.normal(size=(n, DIM)).astype(np.float32)
+            st.update(chosen, pts)
+            model.update(zip((int(c) for c in chosen), pts))
+        else:
+            st.compact()
+        st.flush()
+
+        # mirror invariants
+        assert st.live_count == len(model)
+        ids, pts = st.live_arrays()
+        assert sorted(ids.tolist()) == sorted(model)
+        np.testing.assert_array_equal(
+            pts, np.stack([model[i] for i in ids.tolist()]))
+        assert int(np.asarray(st.snapshot().valid).sum()) == len(model)
+
+        # served answers == brute force over the live set
+        qs = rng.normal(size=(3, DIM)).astype(np.float32)
+        for q, r in zip(qs, srv.query_batch(qs, [8, 8, 8])):
+            assert r.generation == st.generation
+            _check_result(r, ids, pts, q, 8)
+
+
+def test_knn_query_point_valid_direct(mesh8, rng):
+    """core.knn_query with a point_valid mask == brute force over the
+    masked subset (validity threaded through Algorithm 2 itself)."""
+    N = K * 64
+    pts = rng.normal(size=(N, DIM)).astype(np.float32)
+    pids = np.arange(N, dtype=np.int32)
+    valid = rng.random(N) > 0.5
+    q = rng.normal(size=(2, DIM)).astype(np.float32)
+    l = 12
+
+    def fn(p, i, v, qq, key):
+        res = core.knn_query(p, i, qq, l, key, axis_name="x",
+                             point_valid=v)
+        return res.dists, res.ids
+
+    f = jax.jit(shard_map(
+        fn, mesh=mesh8,
+        in_specs=(P("x"), P("x"), P("x"), P(None), P(None)),
+        out_specs=(P(None), P(None))))
+    d, i = map(np.asarray, f(pts, pids, valid, q, jax.random.PRNGKey(0)))
+    for b in range(2):
+        want = _brute_ids(pids[valid], pts[valid], q[b], l)
+        assert set(i[b].tolist()) == want
+        assert not (set(i[b].tolist()) & set(pids[~valid].tolist()))
+
+
+def test_store_gather_sampler_agrees(mesh8, rng):
+    """The gather baseline honors the valid mask identically."""
+    st = _mk_store(mesh8)
+    ids = st.insert(rng.normal(size=(120, DIM)).astype(np.float32))
+    st.flush()
+    st.delete(ids[::3])
+    st.flush()
+    sel = _mk_server(st)
+    gat = _mk_server(st, sampler="gather")
+    qs = rng.normal(size=(4, DIM)).astype(np.float32)
+    for a, b in zip(sel.query_batch(qs, [8] * 4),
+                    gat.query_batch(qs, [8] * 4)):
+        np.testing.assert_allclose(a.dists, b.dists, rtol=1e-5)
+        assert a.ids.tolist() == b.ids.tolist()
+
+
+# ---- compaction / rebalance ----------------------------------------------
+
+
+def test_tombstone_compaction_trigger(mesh8, rng):
+    st = _mk_store(mesh8, compact_tombstone_frac=0.3,
+                   compact_imbalance_frac=10.0)
+    ids = st.insert(rng.normal(size=(200, DIM)).astype(np.float32))
+    st.flush()
+    assert st.stats.compactions == 0
+    st.delete(rng.choice(ids, size=120, replace=False))
+    st.flush()                           # density 0.6 > 0.3
+    assert st.stats.compactions == 1
+    assert "tombstone_density" in st.stats.last_compact_reason
+    # repack rebalances to within one point and re-densifies shards
+    live = st.live_per_shard
+    assert live.max() - live.min() <= 1
+    # and answers are unaffected
+    srv = _mk_server(st)
+    q = rng.normal(size=DIM).astype(np.float32)
+    lid, lpts = st.live_arrays()
+    _check_result(srv.query_batch(q[None], [8])[0], lid, lpts, q, 8)
+
+
+def test_imbalance_compaction_trigger(mesh8, rng):
+    st = _mk_store(mesh8, compact_tombstone_frac=10.0,
+                   compact_imbalance_frac=0.25)
+    ids = st.insert(rng.normal(size=(st.total, DIM)).astype(np.float32))
+    st.flush()
+    # concentrated deletes: balance-aware placement dealt sequential
+    # inserts round-robin, so every K-th id lives on the same shard —
+    # deleting them empties that shard while the others stay full
+    st.delete(ids[::K])
+    st.flush()
+    assert st.stats.compactions == 1
+    assert "imbalance" in st.stats.last_compact_reason
+    live = st.live_per_shard
+    assert live.max() - live.min() <= 1
+
+
+def test_forced_compaction_reclaims_tombstones(mesh8, rng):
+    """All shards at their high-water mark + global space free: the flush
+    must repack instead of failing."""
+    st = _mk_store(mesh8, auto_compact=False)
+    ids = st.insert(rng.normal(size=(st.total, DIM)).astype(np.float32))
+    st.flush()
+    st.delete(ids[: st.total // 2])
+    st.flush()                           # tombstones everywhere, no tail
+    st.insert(rng.normal(size=(st.total // 4, DIM)).astype(np.float32))
+    st.flush()
+    assert st.stats.forced_compactions == 1
+    assert st.live_count == st.total // 2 + st.total // 4
+    ids2, pts2 = st.live_arrays()
+    srv = _mk_server(st)
+    q = rng.normal(size=DIM).astype(np.float32)
+    _check_result(srv.query_batch(q[None], [8])[0], ids2, pts2, q, 8)
+
+
+def test_compaction_is_id_stable(mesh8, rng):
+    st = _mk_store(mesh8)
+    pts = rng.normal(size=(100, DIM)).astype(np.float32)
+    ids = st.insert(pts)
+    st.flush()
+    ids_b, pts_b = st.live_arrays()
+    before = {int(i): p for i, p in zip(ids_b, pts_b)}
+    st.compact()
+    ids_a, pts_a = st.live_arrays()
+    assert sorted(ids_a.tolist()) == sorted(ids.tolist())
+    for i, p in zip(ids_a.tolist(), pts_a):
+        np.testing.assert_array_equal(p, before[i])
+
+
+# ---- epoch-swapped serving ------------------------------------------------
+
+
+def test_epoch_swap_under_load_drops_nothing(mesh8, rng):
+    """Concurrent submit load across continuous epoch swaps: every future
+    resolves, and each answer is exactly the brute-force l-NN of the live
+    set of the generation it reports."""
+    st = _mk_store(mesh8, track_history=True)
+    st.insert(rng.normal(size=(64, DIM)).astype(np.float32))
+    st.flush()
+    srv = _mk_server(st)
+    srv.warmup()
+
+    stop = threading.Event()
+
+    def mutate():
+        # net-zero churn: two epoch swaps per cycle, can never fill the
+        # store, keeps swapping until told to stop
+        r = np.random.default_rng(5)
+        while not stop.is_set():
+            ids = st.insert(r.normal(size=(8, DIM)).astype(np.float32))
+            st.flush()
+            st.delete(ids)
+            st.flush()
+
+    t = threading.Thread(target=mutate, daemon=True)
+    queries = [rng.normal(size=DIM).astype(np.float32) for _ in range(24)]
+    with srv.serving():
+        t.start()
+        futs = [srv.submit(q, 8) for q in queries[:12]]
+        results = [f.result(timeout=120) for f in futs]      # zero drops
+        # deterministic swap between the waves: wave-2 dispatches must
+        # capture a generation strictly newer than every wave-1 answer
+        st.insert(rng.normal(size=(4, DIM)).astype(np.float32))
+        forced_gen = st.flush()
+        futs = [srv.submit(q, 8) for q in queries[12:]]
+        results += [f.result(timeout=120) for f in futs]     # zero drops
+        stop.set()
+        t.join()
+
+    gens = [r.generation for r in results]
+    assert min(gens) >= 1 and max(gens) <= st.generation
+    assert min(g for g in gens[12:]) >= forced_gen > max(gens[:12]), \
+        "in-flight queries crossed the epoch swap the wrong way"
+    # full exactness against the *reported* generation's live set
+    for q, r in zip(queries, results):
+        ids_g, pts_g = st.history(r.generation)
+        _check_result(r, ids_g, pts_g, q, 8)
+
+
+def test_epoch_swap_exactness_per_generation(mesh8, rng):
+    """Synchronous variant of the swap test with full exactness: the same
+    query re-asked across generations tracks each generation's live set."""
+    st = _mk_store(mesh8, track_history=True)
+    srv = _mk_server(st)
+    q = rng.normal(size=DIM).astype(np.float32)
+    for _ in range(6):
+        ids = st.insert(rng.normal(size=(16, DIM)).astype(np.float32))
+        st.flush()
+        st.delete(ids[:10])
+        st.flush()
+        r = srv.query_batch(q[None], [8])[0]
+        assert r.generation == st.generation
+        ids_g, pts_g = st.history(r.generation)
+        _check_result(r, ids_g, pts_g, q, 8)
+
+
+def test_empty_store_serves_sentinels(mesh8, rng):
+    st = _mk_store(mesh8)
+    srv = _mk_server(st)
+    r = srv.query_batch(rng.normal(size=(1, DIM)).astype(np.float32),
+                        [8])[0]
+    assert np.all(np.isinf(r.dists)) and np.all(r.ids == _SENTINEL)
+    # drain to empty after being populated
+    ids = st.insert(rng.normal(size=(30, DIM)).astype(np.float32))
+    st.flush()
+    st.delete(ids)
+    st.flush()
+    r = srv.query_batch(rng.normal(size=(1, DIM)).astype(np.float32),
+                        [8])[0]
+    assert np.all(np.isinf(r.dists)) and np.all(r.ids == _SENTINEL)
+
+
+def test_server_store_mesh_conflict_rejected(mesh8, rng):
+    st = _mk_store(mesh8)
+    with pytest.raises(ValueError):
+        KnnServer(np.zeros((8, DIM), np.float32), store=st)
+    # an equal mesh is accepted (jax may or may not intern Mesh objects;
+    # the guard compares by equality, never identity)...
+    from repro.parallel.compat import make_mesh
+    twin = make_mesh((8,), ("x",))
+    KnnServer(store=st, cfg=CONFIG.replace(dim=DIM, l_max=16,
+                                           bucket_sizes=(4,)), mesh=twin)
+    # ...a genuinely different one is not
+    other = make_mesh((4, 2), ("data", "x"))
+    with pytest.raises(ValueError):
+        KnnServer(store=st, cfg=CONFIG.replace(dim=DIM, l_max=16,
+                                               bucket_sizes=(4,)),
+                  mesh=other)
