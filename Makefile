@@ -1,7 +1,7 @@
 # Local fallback for the CI entrypoints (.github/workflows/ci.yml).
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test deps bench bench-serve bench-smoke examples
+.PHONY: test test-cov deps bench bench-serve bench-smoke examples
 
 deps:
 	pip install -r requirements-dev.txt
@@ -9,6 +9,14 @@ deps:
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
+
+# coverage gate for the query-path packages (ci.yml coverage job):
+# store (mutable/compaction/summaries) and core (Algorithms 1 & 2) must
+# stay above the floor so the routing path can't silently rot untested.
+test-cov:
+	$(PYTHONPATH_PREFIX) python -m pytest -q \
+		--cov=repro.store --cov=repro.core \
+		--cov-report=term-missing --cov-fail-under=85
 
 bench:
 	$(PYTHONPATH_PREFIX):. python -m benchmarks.run

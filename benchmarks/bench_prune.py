@@ -1,8 +1,16 @@
-"""Lemma 2.3 — the sample-prune survivor envelope.
+"""Lemma 2.3 — the sample-prune survivor envelope — and the shard-routing
+prune rate.
 
 Over many random instances: survivor counts land in [l, 11 l] w.h.p., the
 verification (Las Vegas hardening) acceptance rate is ~1, and the true
-l-NN set always survives.
+l-NN set always survives.  (The envelope assertions are also CI-enforced:
+tests/test_sampling.py test_prune_survivor_envelope_sweep.)
+
+The routing section measures the *other* prune in the stack — per-shard
+pivot summaries (store/summaries.py): what fraction of the k shards the
+lower-bound test rules out per query, on clustered vs uniform instances,
+with the exactness invariant (every true l-NN winner lives in a kept
+shard) checked on every query.
 """
 
 from __future__ import annotations
@@ -13,7 +21,40 @@ from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import kmachine_mesh, row
 from repro.core import sampling
+from repro.data import sharded_clusters
 from repro.parallel.compat import shard_map
+from repro.store import build_summaries, route_shards
+
+
+def run_routing(emit=print, k: int = 8, m: int = 2048, dim: int = 32,
+                n_queries: int = 64):
+    """Summary-routing prune rate + exactness spot-check (host-only)."""
+    rng = np.random.default_rng(0)
+    clustered, centers = sharded_clusters(k, m, dim, rng=rng)
+    instances = {
+        "clustered": clustered,
+        "uniform": rng.normal(size=(k * m, dim)),
+    }
+    for name, pts in instances.items():
+        pts = pts.astype(np.float32)
+        if name == "clustered":
+            q = centers[rng.integers(0, k, n_queries)] + rng.normal(
+                size=(n_queries, dim))
+        else:
+            q = rng.normal(size=(n_queries, dim))
+        q = q.astype(np.float32)
+        summ = build_summaries(pts, k)
+        for l in (8, 128):
+            active = route_shards(summ, q, np.full(n_queries, l))
+            # exactness: all true l-NN ids must live in kept shards
+            d = ((q[:, None, :].astype(np.float64)
+                  - pts[None].astype(np.float64)) ** 2).sum(-1)
+            top = np.argsort(d, axis=1, kind="stable")[:, :l]
+            ok = all(active[b, top[b] // m].all() for b in range(n_queries))
+            touched = active.sum(-1)
+            emit(row(f"route/{name}_l{l}", float(touched.mean()),
+                     f"mean_touched={touched.mean():.2f}/{k};"
+                     f"max={touched.max()};exact={'1' if ok else '0'}"))
 
 
 def run(emit=print):
@@ -40,6 +81,7 @@ def run(emit=print):
                  f"mean_survivors={surv.mean():.0f};max={surv.max()};"
                  f"bound_11l={11*l};within_bound="
                  f"{(surv <= 11*l).mean():.2f};accept_rate={acc/trials:.2f}"))
+    run_routing(emit)
 
 
 if __name__ == "__main__":

@@ -1,13 +1,18 @@
-"""Micro-batched kNN service throughput/latency vs the gather baseline.
+"""Micro-batched kNN service throughput/latency vs the gather baseline,
+plus the exact-vs-pruned routing A/B.
 
 Drives runtime/knn_server.py with a closed-loop offered load (bursts of
 requests with per-request l drawn from a fixed mix), for both
 ``sampler="selection"`` (Algorithm 2, O(log l) rounds) and
 ``sampler="gather"`` (the paper's simple method via knn_simple, O(k*l)
 values on the wire) — the paper's Figure 2 contrast restated as a serving
-benchmark.  Emits CSV rows like every other bench module plus
-``BENCH_serve.json`` with sustained queries/sec and p50/p99 request
-latency per sampler.
+benchmark.  A second section serves a *clustered* store (one cluster per
+shard, queries near cluster centers) under ``route="exact"`` vs
+``route="pruned"`` (store/summaries.py): same bit-identical answers,
+fewer touched shards and k-machine messages.  Emits CSV rows like every
+other bench module plus ``BENCH_serve.json`` with sustained queries/sec,
+p50/p99 request latency, and mean rounds/messages/shards_touched per
+configuration.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
@@ -50,12 +55,32 @@ def _build_server(sampler: str, n_points: int):
     return srv
 
 
-def _drive(srv, rng, bursts: int) -> dict:
+def _build_routed_server(route: str, n_points: int):
+    """Clustered store, one cluster per shard (contiguous layout), for
+    the exact-vs-pruned routing A/B — the same instance family the
+    exactness harness proves bit-identical (repro.data.sharded_clusters)."""
+    from repro.data import sharded_clusters
+    from repro.runtime import KnnServer
+    k = common.K_MACHINES
+    pts, centers = sharded_clusters(k, n_points // k, DIM, seed=1)
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+                         sampler="selection", route=route)
+    srv = KnnServer(pts, cfg=cfg, mesh=common.kmachine_mesh(),
+                    axis_name="x")
+    srv.warmup()
+    return srv, centers
+
+
+def _drive(srv, rng, bursts: int, centers=None) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
-    exercised; latencies are per request (enqueue -> result)."""
+    exercised; latencies are per request (enqueue -> result).  With
+    ``centers``, each burst's queries land near one random center (the
+    clustered routing workload: a decode batch's positions are
+    neighbors, so a micro-batch shares a destination — the touched-shard
+    union stays small) instead of uniformly."""
     burst_sizes = [1, 3, 8, 16, 5, 16, 2, 16]
-    lat, iters, rounds, msgs = [], [], [], []
+    lat, iters, rounds, msgs, touched = [], [], [], [], []
     n_queries = 0
     t0 = None
     for burst in range(WARM_BURSTS + bursts):
@@ -64,6 +89,8 @@ def _drive(srv, rng, bursts: int) -> dict:
             srv.stats = type(srv.stats)()    # drop warmup counters
         bs = burst_sizes[burst % len(burst_sizes)]
         qs = rng.normal(size=(bs, DIM)).astype(np.float32)
+        if centers is not None:
+            qs += centers[rng.integers(0, len(centers))].astype(np.float32)
         ls = [L_MIX[(burst + j) % len(L_MIX)] for j in range(bs)]
         results = srv.query_batch(qs, ls)
         if burst >= WARM_BURSTS:
@@ -73,6 +100,7 @@ def _drive(srv, rng, bursts: int) -> dict:
                 iters.append(r.iterations)
                 rounds.append(r.rounds)
                 msgs.append(r.messages)
+                touched.append(r.shards_touched)
     wall = time.perf_counter() - t0
     lat = np.asarray(lat)
     return {
@@ -84,6 +112,7 @@ def _drive(srv, rng, bursts: int) -> dict:
         "mean_iterations": float(np.mean(iters)),
         "mean_rounds": float(np.mean(rounds)),
         "mean_messages": float(np.mean(msgs)),
+        "mean_shards_touched": float(np.mean(touched)),
         "batches": srv.stats.batches,
         "padded_rows": srv.stats.padded_rows,
         "bucket_counts": {str(k): v
@@ -111,6 +140,22 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
             f"serve_{sampler}_qps", 1e6 / r["qps"],
             f"qps={r['qps']:.1f} p50={r['p50_ms']:.2f}ms "
             f"p99={r['p99_ms']:.2f}ms rounds={r['mean_rounds']:.1f}"))
+    # exact-vs-pruned routing A/B on the clustered workload: answers are
+    # bit-identical (tests/test_routing.py enforces it); what this section
+    # measures is the k-machine bill — mean messages strictly below the
+    # exact route, shards_touched < k.
+    report["routing"] = {}
+    for route in ("exact", "pruned"):
+        srv, centers = _build_routed_server(route, n_points)
+        rng_route = np.random.default_rng(11)    # same load both routes
+        report["routing"][route] = _drive(srv, rng_route, bursts,
+                                          centers=centers)
+        r = report["routing"][route]
+        emit(common.row(
+            f"serve_route_{route}_qps", 1e6 / r["qps"],
+            f"qps={r['qps']:.1f} msgs={r['mean_messages']:.1f} "
+            f"rounds={r['mean_rounds']:.1f} "
+            f"shards_touched={r['mean_shards_touched']:.2f}"))
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

@@ -45,6 +45,27 @@ class KnnServiceConfig:
     # Distance computation: "auto" routes through kernels/ops.py (Pallas
     # kernel on TPU, jnp oracle elsewhere); "jnp" forces the pure-jnp path.
     distance_impl: str = "auto"
+    # Shard routing (store/summaries.py): "exact" sends every query to all
+    # k shards (the paper's collective); "pruned" consults per-shard pivot
+    # summaries (centroid + covering radius + random-projection sketch)
+    # and masks shards that provably cannot hold an l-NN winner.  Answers
+    # are bit-identical either way (tests/test_routing.py); only the
+    # k-machine message/round bill and QueryResult.shards_touched change.
+    route: str = "exact"
+    # Relative float-safety margin of the routing lower-bound test: a
+    # shard is kept unless lb > T*(1+slack) + err, where err is the
+    # magnitude-absolute f32 rounding bound computed per query
+    # (summaries.pipeline_error_bound) — so pipeline rounding can never
+    # turn a mathematically sound prune into a dropped winner, even for
+    # data far from the origin.
+    route_slack: float = 1e-4
+    # Random-projection sketch width (directions per summary) and the seed
+    # of the shared direction matrix (deterministic: two servers over the
+    # same generation must route identically).  Store-backed servers take
+    # the sketch from the store (MutableStore summary_projections /
+    # summary_seed); a mismatch with these values raises at construction.
+    route_num_projections: int = 8
+    route_proj_seed: int = 0
 
     # ---- mutable sharded store (store/mutable.py) -----------------------
     # Slots per shard of the capacity-padded buffers; fixes every compiled

@@ -138,10 +138,30 @@ def _masked_distances(distances_fn, queries, points, point_valid):
     return jnp.where(point_valid[None, :].astype(jnp.bool_), d, jnp.inf)
 
 
+def _apply_shard_routing(point_valid, shard_active, m):
+    """Fold the ``route="pruned"`` whole-shard mask into the point mask.
+
+    ``shard_active`` is this shard's routing flag (a (1,)-slice of the
+    per-batch (k,) active vector, or a scalar): False means the
+    summaries-layer lower-bound test (store/summaries.py route_shards)
+    proved this shard cannot hold a winner, so every one of its points
+    enters the pipeline at +inf — upstream of the fused distance+top-l
+    kernel, through the same ``valid`` operand tombstones use.  Exactness
+    is the *caller's* contract: the flag must come from a sound bound
+    against the same snapshot generation being queried.
+    """
+    if shard_active is None:
+        return point_valid
+    flag = jnp.reshape(shard_active, ()).astype(jnp.bool_)
+    if point_valid is None:
+        return jnp.broadcast_to(flag, (m,))
+    return point_valid & flag
+
+
 def _knn_pipeline(
     points, point_ids, queries, l_buf, l_run, key, *,
     axis_name, distances_fn, use_sampling, num_pivots, gather_results,
-    point_valid=None,
+    point_valid=None, shard_active=None,
 ) -> KnnResult:
     """Shared Algorithm 2 body.
 
@@ -156,7 +176,11 @@ def _knn_pipeline(
     mask: invalid slots enter the pipeline at +inf, making them
     indistinguishable from the paper's fake sentinel points — they are
     never sampled as survivors, never selected, never gathered.
+    ``shard_active`` (optional) is the pruned-routing whole-shard flag
+    (:func:`_apply_shard_routing`).
     """
+    point_valid = _apply_shard_routing(point_valid, shard_active,
+                                       points.shape[0])
     d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l_buf)               # (B, l_buf)
 
@@ -194,6 +218,7 @@ def knn_query(
     num_pivots: int = 1,
     gather_results: bool = True,
     point_valid: jax.Array | None = None,
+    shard_active: jax.Array | None = None,
 ) -> KnnResult:
     """Full Algorithm 2 inside a shard_map context.
 
@@ -202,12 +227,14 @@ def knn_query(
     ``num_pivots > 1`` enables the beyond-paper multi-pivot selection.
     ``point_valid`` ((m,) bool, optional): live-slot mask for mutable
     stores — invalid slots are treated as the paper's +inf fake points.
+    ``shard_active`` (optional): this shard's ``route="pruned"`` flag —
+    False masks the whole shard the same way (store/summaries.py).
     """
     return _knn_pipeline(
         points, point_ids, queries, l, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
-        point_valid=point_valid)
+        point_valid=point_valid, shard_active=shard_active)
 
 
 def knn_query_batched(
@@ -224,6 +251,7 @@ def knn_query_batched(
     num_pivots: int = 1,
     gather_results: bool = True,
     point_valid: jax.Array | None = None,
+    shard_active: jax.Array | None = None,
 ) -> KnnResult:
     """Algorithm 2 with a *per-request* neighbor count — the serving form.
 
@@ -248,7 +276,7 @@ def knn_query_batched(
         points, point_ids, queries, l_max, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
-        point_valid=point_valid)
+        point_valid=point_valid, shard_active=shard_active)
 
 
 def knn_simple(
@@ -260,6 +288,7 @@ def knn_simple(
     axis_name: str,
     distances_fn=squared_l2_distances,
     point_valid: jax.Array | None = None,
+    shard_active: jax.Array | None = None,
 ):
     """The paper's baseline "simple method" (Section 3).
 
@@ -267,8 +296,12 @@ def knn_simple(
     the k-machine model (k*l values over the leader's links); one
     all_gather of l values per shard here.  Returns replicated ascending
     (dists, ids) of shape (B, l); +inf slots (fewer than l live points)
-    carry the INT32_MAX sentinel id.
+    carry the INT32_MAX sentinel id.  ``shard_active`` masks this whole
+    shard when pruned routing proved it loser-only (same contract as
+    :func:`knn_query`).
     """
+    point_valid = _apply_shard_routing(point_valid, shard_active,
+                                       points.shape[0])
     d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l)
     gd = lax.all_gather(d, axis_name)                            # (k, B, l)

@@ -61,3 +61,22 @@ def gaussian_clusters(n: int, dim: int, num_classes: int, seed: int = 0):
     labels = rng.integers(0, num_classes, n)
     pts = centers[labels] + rng.normal(size=(n, dim))
     return pts.astype(np.float32), labels.astype(np.int32)
+
+
+def sharded_clusters(k: int, per_shard: int, dim: int, *, scale: float = 8.0,
+                     shift: float = 0.0, seed: int = 0, rng=None):
+    """One gaussian cluster per shard, laid out contiguously — the
+    routing-friendly workload (shard j owns rows [j·m, (j+1)·m), all near
+    centers[j]).  Used by the exactness harness (tests/test_routing.py)
+    and the routing benches, which must measure the same instance family.
+
+    ``shift`` pushes every center away from the origin (the f32
+    catastrophic-cancellation stress).  Returns (points (k·m, dim) f32,
+    centers (k, dim) f64).
+    """
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    centers = rng.normal(scale=scale, size=(k, dim)) + shift
+    pts = np.concatenate(
+        [centers[j] + rng.normal(size=(per_shard, dim)) for j in range(k)])
+    return pts.astype(np.float32), centers

@@ -31,6 +31,16 @@ generation they started with while later submissions see the newly
 swapped epoch (DESIGN.md Section 7).  ``QueryResult.generation`` reports
 which epoch answered.  benchmarks/bench_ingest.py measures ingest
 throughput and query latency under concurrent ingest.
+
+With ``cfg.route="pruned"`` each dispatch first consults per-shard pivot
+summaries (store/summaries.py; captured in the same lock acquisition as
+the snapshot, so routing metadata always matches the answering epoch) and
+computes the micro-batch's touched-shard set; shards the lower-bound test
+rules out are masked wholesale inside the executable and drop out of the
+k-machine message bill (``QueryResult.shards_touched``).  Answers are
+bit-identical to ``route="exact"`` — the property harness
+tests/test_routing.py enforces this, DESIGN.md Section 8 explains why.
+benchmarks/bench_serve.py runs the exact-vs-pruned A/B.
 """
 
 from __future__ import annotations
@@ -50,6 +60,7 @@ from repro.configs.knn_service import CONFIG, KnnServiceConfig
 from repro.core import knn as knn_mod
 from repro.kernels import ops as kops
 from repro.parallel.compat import make_mesh, shard_map
+from repro.store import summaries as summaries_mod
 
 _ID_SENTINEL = 2**31 - 1
 
@@ -74,6 +85,14 @@ class QueryResult(NamedTuple):
     baseline is one collective round whose payload is l scalars from each
     of k-1 peers — its ``messages`` entry counts those O(1)-word units, so
     the O(k*l) vs O(k*log l) contrast is directly visible.
+
+    ``shards_touched`` is the size of the carrying batch's touched-shard
+    set: k under ``route="exact"``; under ``route="pruned"`` the union,
+    over the batch's real rows, of shards the summary lower-bound test
+    could not rule out (store/summaries.py).  Pruned shards hold no
+    candidates, so in the k-machine model they send nothing — the
+    ``messages`` bill charges ``shards_touched - 1`` peers per round
+    instead of ``k - 1``.
     """
 
     dists: np.ndarray
@@ -88,6 +107,7 @@ class QueryResult(NamedTuple):
     queued_s: float        # enqueue -> dispatch
     latency_s: float       # enqueue -> result
     generation: int = 0    # store epoch the answer was computed against
+    shards_touched: int = -1   # carrying batch's touched-shard count
 
 
 @dataclasses.dataclass
@@ -147,6 +167,9 @@ class KnnServer:
                 set(cfg.bucket_sizes)):
             raise ValueError(f"bucket_sizes must be ascending and unique, "
                              f"got {cfg.bucket_sizes}")
+        if cfg.route not in ("exact", "pruned"):
+            raise ValueError(f"route must be 'exact' or 'pruned', "
+                             f"got {cfg.route!r}")
         self._store = store
         if store is not None:
             if points is not None or values is not None:
@@ -184,6 +207,29 @@ class KnnServer:
             self._ids = jax.device_put(np.arange(n, dtype=np.int32), sharded)
             self._values = None if values is None else np.asarray(values,
                                                                   np.int32)
+
+        # Static-point routing summaries, built once at generation 0
+        # (store-backed servers instead capture the store's
+        # generation-coupled summaries at every dispatch — the sketch
+        # there is the *store's*, configured at store construction, so a
+        # conflicting service config must fail loudly rather than be
+        # silently ignored).
+        self._summaries = None
+        if cfg.route == "pruned":
+            if store is None:
+                self._summaries = summaries_mod.build_summaries(
+                    points, self.k,
+                    num_projections=cfg.route_num_projections,
+                    seed=cfg.route_proj_seed)
+            elif (store.summary_projections != cfg.route_num_projections
+                    or store.summary_seed != cfg.route_proj_seed):
+                raise ValueError(
+                    f"route summary sketch mismatch: store was built with "
+                    f"summary_projections={store.summary_projections}"
+                    f"/summary_seed={store.summary_seed} but cfg asks for "
+                    f"route_num_projections={cfg.route_num_projections}"
+                    f"/route_proj_seed={cfg.route_proj_seed}; "
+                    f"configure the store, or match the config to it")
 
         # Pre-flight kernel-dispatch report, one row per bucket shape:
         # the routing (Pallas kernel / interpret / jnp oracle) of the
@@ -227,21 +273,27 @@ class KnnServer:
         # masking cost for a point set that can never change).
         masked = self._store is not None
 
+        # route="pruned" adds one (k,) bool operand; in_spec P(axis) hands
+        # each shard its own flag, which core/knn folds into the valid
+        # mask ahead of the fused distance+top-l kernel.
+        routed = cfg.route == "pruned"
+
         if cfg.sampler == "selection":
-            def body(pts, pids, pvalid, q, l_arr, key):
+            def body(pts, pids, pvalid, active, q, l_arr, key):
                 res = knn_mod.knn_query_batched(
                     pts, pids, q, l_max, l_arr, key, axis_name=axis,
                     distances_fn=distances_fn,
                     use_sampling=cfg.use_sampling,
                     num_pivots=cfg.num_pivots,
-                    point_valid=pvalid)
+                    point_valid=pvalid, shard_active=active)
                 return (res.dists, res.ids, res.selection.iterations,
                         res.prune.survivors)
         elif cfg.sampler == "gather":
-            def body(pts, pids, pvalid, q, l_arr, key):
+            def body(pts, pids, pvalid, active, q, l_arr, key):
                 sd, si = knn_mod.knn_simple(
                     pts, pids, q, l_max, axis_name=axis,
-                    distances_fn=distances_fn, point_valid=pvalid)
+                    distances_fn=distances_fn, point_valid=pvalid,
+                    shard_active=active)
                 # per-request l: slots at rank >= l[b] are masked to the
                 # sentinel (knn_simple returns ascending order).
                 keep = jnp.arange(l_max)[None, :] < l_arr[:, None]
@@ -252,12 +304,21 @@ class KnnServer:
         else:
             raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
-        if masked:
+        if masked and routed:
             fn = body
+            in_specs = (P(axis), P(axis), P(axis), P(axis),
+                        P(None), P(None), P(None))
+        elif masked:
+            def fn(pts, pids, pvalid, q, l_arr, key):
+                return body(pts, pids, pvalid, None, q, l_arr, key)
+            in_specs = (P(axis), P(axis), P(axis), P(None), P(None), P(None))
+        elif routed:
+            def fn(pts, pids, active, q, l_arr, key):
+                return body(pts, pids, None, active, q, l_arr, key)
             in_specs = (P(axis), P(axis), P(axis), P(None), P(None), P(None))
         else:
             def fn(pts, pids, q, l_arr, key):
-                return body(pts, pids, None, q, l_arr, key)
+                return body(pts, pids, None, None, q, l_arr, key)
             in_specs = (P(axis), P(axis), P(None), P(None), P(None))
 
         return jax.jit(shard_map(
@@ -266,21 +327,28 @@ class KnnServer:
             check_vma=False))
 
     def _backing_arrays(self):
-        """(executable operands, generation) to run a dispatch against.
+        """(executable operands, generation, summaries) for one dispatch.
 
         Store-backed servers capture the current snapshot here — the
         epoch-swap point.  The returned arrays are immutable, so a batch
         dispatched before a flush finishes cleanly against its own
-        generation no matter how many swaps land meanwhile.
+        generation no matter how many swaps land meanwhile.  Snapshot and
+        routing summaries come from one lock acquisition
+        (``routing_snapshot``), so the summaries can never describe a
+        different generation than the arrays being queried; for static
+        servers the construction-time summaries are generation 0 forever.
         """
         if self._store is not None:
-            snap = self._store.snapshot()
-            return (snap.points, snap.ids, snap.valid), snap.generation
-        return (self._points, self._ids), 0
+            snap, summ = self._store.routing_snapshot()
+            return ((snap.points, snap.ids, snap.valid), snap.generation,
+                    summ)
+        return (self._points, self._ids), 0, self._summaries
 
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
-        operands, _ = self._backing_arrays()
+        operands, _, _ = self._backing_arrays()
+        if self.cfg.route == "pruned":
+            operands = operands + (np.ones(self.k, bool),)
         for b in self.cfg.bucket_sizes:
             q = np.zeros((b, self.dim), np.float32)
             l_arr = np.zeros(b, np.int32)
@@ -332,16 +400,23 @@ class KnnServer:
                 return b
         return self.cfg.bucket_sizes[-1]
 
-    def _accounting(self, iterations: int) -> tuple[int, int]:
-        """k-machine (rounds, messages) for one dispatched batch."""
-        k = self.k
+    def _accounting(self, iterations: int,
+                    touched: int) -> tuple[int, int]:
+        """k-machine (rounds, messages) for one dispatched batch.
+
+        ``touched`` is the batch's touched-shard count (k when
+        route="exact"): a pruned shard holds no candidates, so it never
+        sends — the leader tree carries ``touched - 1`` peers' payloads
+        per round instead of ``k - 1``.
+        """
+        t = max(int(touched), 1)
         if self.cfg.sampler == "gather":
             # one all-gather whose per-peer payload is l_max scalars
-            return 1, (k - 1) * self.cfg.l_max
+            return 1, (t - 1) * self.cfg.l_max
         rounds = 2 * iterations            # pivot all_gather + count psum
         rounds += 2 if self.cfg.use_sampling else 0   # sample + verify
         rounds += 2                        # result gather: count + pack
-        return rounds, (k - 1) * rounds
+        return rounds, (t - 1) * rounds
 
     def _dispatch(self, chunk: list[_Pending]):
         n = len(chunk)
@@ -360,7 +435,20 @@ class KnnServer:
         key = jax.random.fold_in(self._base_key, batch_id)
         t_dispatch = time.perf_counter()
         try:
-            operands, generation = self._backing_arrays()
+            operands, generation, summ = self._backing_arrays()
+            if self.cfg.route == "pruned":
+                # Touched-shard set for this micro-batch: the union over
+                # real rows of the summary lower-bound survivors (padding
+                # rows carry l=0 and route nowhere).  One collective pass
+                # serves the whole batch, so the device mask is the union;
+                # accounting charges only the touched subset.
+                active_rows = summaries_mod.route_shards(
+                    summ, q, l_arr, slack=self.cfg.route_slack)
+                active = active_rows.any(axis=0)
+                touched = int(active.sum())
+                operands = operands + (active,)
+            else:
+                touched = self.k
             d, i, iters, surv = self._fn(*operands, q, l_arr, key)
             d = np.asarray(d)
             i = np.asarray(i)
@@ -374,7 +462,7 @@ class KnnServer:
             return
         t_done = time.perf_counter()
 
-        rounds, messages = self._accounting(iters)
+        rounds, messages = self._accounting(iters, touched)
         with self._cv:
             self.stats.observe(bucket, n)
         for row, rec in enumerate(chunk):
@@ -403,7 +491,7 @@ class KnnServer:
                 survivors=int(surv[row]), bucket=bucket,
                 queued_s=t_dispatch - rec.t_enqueue,
                 latency_s=t_done - rec.t_enqueue,
-                generation=generation))
+                generation=generation, shards_touched=touched))
 
     # ---- background micro-batcher ---------------------------------------
 

@@ -5,8 +5,14 @@ static-shape query path, with epoch-swapped serving (DESIGN.md Section 7).
 from repro.store.mutable import (ID_SENTINEL, IngestStats, MutableStore,
                                  StoreFullError, StoreSnapshot)
 from repro.store.compaction import CompactionDecision, evaluate, repack
+from repro.store.summaries import (ShardSummaries, SummaryMaintainer,
+                                   build_summaries, lower_bounds,
+                                   route_shards, summary_invariants,
+                                   upper_bounds)
 
 __all__ = [
     "MutableStore", "StoreSnapshot", "StoreFullError", "IngestStats",
     "ID_SENTINEL", "CompactionDecision", "evaluate", "repack",
+    "ShardSummaries", "SummaryMaintainer", "build_summaries",
+    "lower_bounds", "upper_bounds", "route_shards", "summary_invariants",
 ]

@@ -51,6 +51,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel.compat import make_mesh
 from repro.store import compaction
+from repro.store import summaries as summaries_mod
 
 ID_SENTINEL = 2**31 - 1
 
@@ -107,7 +108,8 @@ class MutableStore:
                  compact_tombstone_frac: float = 0.35,
                  compact_imbalance_frac: float = 0.5,
                  auto_compact: bool = True, with_values: bool = False,
-                 track_history: bool = False):
+                 track_history: bool = False,
+                 summary_projections: int = 8, summary_seed: int = 0):
         if capacity_per_shard < 1:
             raise ValueError("capacity_per_shard must be >= 1")
         self.dim = int(dim)
@@ -153,9 +155,18 @@ class MutableStore:
             _scatter_apply,
             out_shardings=(self._sharding, self._sharding, self._sharding))
 
+        # Per-shard pivot summaries for pruned routing (store/summaries.py):
+        # updated incrementally alongside every op below, rebuilt exactly on
+        # repack, and frozen with each generation so the (snapshot,
+        # summaries) pair handed to routing_snapshot() can never disagree.
+        self._summ = summaries_mod.SummaryMaintainer(
+            self.k, self.dim, num_projections=summary_projections,
+            seed=summary_seed)
+
         self._history: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._track_history = bool(track_history)
         self._snap = self._upload_snapshot_locked(generation=0)
+        self._summaries = self._summ.freeze(0)
         self._record_history()
 
     # ---- read side -------------------------------------------------------
@@ -165,6 +176,30 @@ class MutableStore:
         newer generations land)."""
         with self._lock:
             return self._snap
+
+    def routing_snapshot(self):
+        """(snapshot, summaries) captured under one lock acquisition —
+        the generation-coupling invariant: ``summaries.generation ==
+        snapshot.generation`` always, so pruned routing can never consult
+        metadata from a different epoch than the one that answers."""
+        with self._lock:
+            return self._snap, self._summaries
+
+    def summaries(self) -> summaries_mod.ShardSummaries:
+        """The current generation's per-shard pivot summaries."""
+        with self._lock:
+            return self._summaries
+
+    @property
+    def summary_projections(self) -> int:
+        """Sketch width of this store's routing summaries (servers with
+        route="pruned" must be configured to match)."""
+        return self._summ.num_projections
+
+    @property
+    def summary_seed(self) -> int:
+        """Direction-matrix seed of this store's routing summaries."""
+        return self._summ.seed
 
     @property
     def generation(self) -> int:
@@ -347,6 +382,7 @@ class MutableStore:
                 slot = j * self.cap + int(self._used[j])
                 self._used[j] += 1
                 self._live[j] += 1
+                self._summ.insert(j, op.point)
                 self._pts[slot] = op.point
                 self._ids[slot] = op.id
                 self._valid[slot] = True
@@ -358,12 +394,15 @@ class MutableStore:
             elif op.kind == "delete":
                 slot = self._slot_of.pop(op.id)
                 self._live[slot // self.cap] -= 1
+                self._summ.delete(slot // self.cap, self._pts[slot])
                 self._valid[slot] = False
                 self._ids[slot] = ID_SENTINEL
                 touched.add(slot)
                 self.stats.deleted += 1
             else:  # update
                 slot = self._slot_of[op.id]
+                self._summ.update(slot // self.cap, self._pts[slot],
+                                  op.point)
                 self._pts[slot] = op.point
                 touched.add(slot)
                 self.stats.updated += 1
@@ -393,6 +432,7 @@ class MutableStore:
                                        ids=new_ids, valid=new_valid,
                                        live=self._projected_live)
         self.stats.applies += 1
+        self._summaries = self._summ.freeze(gen)
         self._record_history()
         return gen
 
@@ -428,6 +468,9 @@ class MutableStore:
         self._pts, self._ids, self._valid = res.points, res.ids, res.valid
         self._slot_of = res.slot_of
         self._live, self._used = res.live, res.used
+        # Exact rebuild: compaction is the point where the incremental
+        # (covering-but-loose) summary bounds get re-tightened.
+        self._summ.rebuild(self._pts, self._valid, self.cap)
         self.stats.compactions += 1
 
     def _scatter_locked(self, slots: list[int]):

@@ -1,0 +1,341 @@
+"""Per-shard pivot summaries — the routing metadata behind ``route="pruned"``.
+
+The paper's Algorithm 2 charges every query a collective over all k
+machines.  PANDA-style systems (Patwary et al., 2016) and the k-machine
+clustering line (Bandyapadhyay et al., 2018) cut that cost with
+partition-level bounding metadata: if a cheap per-shard summary *proves*
+a shard cannot contain an l-NN winner, the query need not touch it.  This
+module maintains that summary per shard and derives the routing decision;
+``core/knn.py`` applies it (whole-shard +inf masking ahead of the fused
+distance+top-l kernel) and ``runtime/knn_server.py`` computes the
+touched-shard set per micro-batch.
+
+**Summary contents** (one row per shard, host-resident, O(k·(dim+r))):
+
+* ``centroids``/``radii`` — the live-point mean and a *covering* radius
+  (every live point of shard j lies within ``radii[j]`` of
+  ``centroids[j]``).  Triangle inequality gives both sides of the bound:
+  ``max(0, |q−c| − r)`` lower-bounds and ``|q−c| + r`` upper-bounds the
+  distance from q to any point of the shard.
+* ``proj_lo``/``proj_hi`` — a small random-projection sketch: for ``r``
+  fixed unit directions u, the interval ``[min_p u·p, max_p u·p]`` over
+  the shard's live points.  For any unit u, ``|u·q − u·p| <= |q − p|``,
+  so the distance from ``u·q`` to the interval is a second, independent
+  lower bound (tight for elongated shards where the ball bound is loose).
+
+**Routing decision** (:func:`route_shards`), per query row with its own l:
+sort shards by their upper bound, accumulate live counts until >= l — the
+upper bound T at which that happens bounds the l-th NN distance from
+above.  Any shard whose lower bound exceeds T (with a float-safety slack,
+see below) provably holds no winner and is masked.  Shards inside the
+cumulative prefix satisfy ``lb <= ub <= T`` and are never masked, so the
+active set always contains >= min(l, total live) points — the selection
+downstream stays exact.
+
+**Exactness under floating point.**  Bounds are computed here in float64
+from exact triangle-inequality math, but the pipeline compares *computed*
+float32 distances (``|q|² − 2q·p + |p|²``, clamped at 0), whose error is
+**absolute** in the coordinate magnitude — ~dim·2⁻²³·(|q|+|p|)², however
+small the true distance (catastrophic cancellation when q ≈ p; for tight
+clusters far from the origin, computed distances quantize to multiples of
+ulp(|q|²)).  A mathematically-true bound must therefore clear both a
+relative and a magnitude-absolute margin before it may prune: a shard is
+kept whenever ``lb <= T·(1+slack) + err``, where ``err =
+16·(dim+1)·2⁻²³·(|q| + R)²`` and R is the generation's largest live
+``|centroid| + radius`` — an upper bound on *twice* the f32 rounding any
+(query, live point) distance can carry, so a pruned shard's computed
+distances provably exceed the computed l-th-NN threshold, not merely the
+true one.  At scales where that quantization swamps the inter-shard gaps
+the margin simply disables pruning — looseness only ever costs pruning
+efficiency, never exactness.  The property harness
+(tests/test_routing.py) holds ``route="pruned"`` bit-identical to
+``route="exact"`` across clustered, uniform, far-from-origin, and
+adversarial all-equidistant instances, including under mutation.
+
+**Maintenance** (:class:`SummaryMaintainer`): updated incrementally on
+ingest/delete (O(dim + r) per op) and rebuilt exactly on compaction.
+Incremental updates keep the *covering* property while the centroid
+drifts — an insert/delete moves the centroid by δ, so every previously
+covered point is still within ``radius + δ`` of the new centroid; deletes
+never shrink the radius or the projection intervals (stale-but-valid).
+Every generation's summaries are frozen to an immutable
+:class:`ShardSummaries` stamped with the snapshot generation, and
+``MutableStore.routing_snapshot()`` hands out the (snapshot, summaries)
+pair under one lock — routing metadata can never be stale relative to the
+epoch that answers (DESIGN.md Section 8).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+
+class ShardSummaries(NamedTuple):
+    """One generation's frozen routing metadata (all host float64).
+
+    ``live``: (k,) live points per shard; ``centroids``: (k, dim) live
+    means (zeros for empty shards); ``radii``: (k,) covering radii;
+    ``directions``: (r, dim) unit projection directions shared by all
+    shards; ``proj_lo``/``proj_hi``: (k, r) per-shard projection
+    intervals (+inf/−inf for empty shards).  ``generation`` matches the
+    :class:`~repro.store.StoreSnapshot` these summaries describe.
+    """
+
+    generation: int
+    live: np.ndarray
+    centroids: np.ndarray
+    radii: np.ndarray
+    directions: np.ndarray
+    proj_lo: np.ndarray
+    proj_hi: np.ndarray
+
+
+def projection_directions(dim: int, num_projections: int,
+                          seed: int = 0) -> np.ndarray:
+    """(r, dim) fixed unit-norm directions — deterministic given the seed
+    (two servers over the same store must route, and therefore answer,
+    identically)."""
+    rng = np.random.default_rng(seed)
+    d = rng.normal(size=(num_projections, dim))
+    return d / np.maximum(np.linalg.norm(d, axis=1, keepdims=True), 1e-30)
+
+
+class SummaryMaintainer:
+    """Mutable per-shard summary state, updated op by op under the store
+    lock; :meth:`freeze` emits the immutable generation-stamped view."""
+
+    def __init__(self, k: int, dim: int, *, num_projections: int = 8,
+                 seed: int = 0):
+        self.k, self.dim = int(k), int(dim)
+        self.num_projections = int(num_projections)
+        self.seed = int(seed)
+        self.directions = projection_directions(dim, num_projections, seed)
+        r = self.directions.shape[0]
+        self._sum = np.zeros((k, dim), np.float64)
+        self._n = np.zeros(k, np.int64)
+        self._radius = np.zeros(k, np.float64)
+        self._lo = np.full((k, r), np.inf)
+        self._hi = np.full((k, r), -np.inf)
+
+    def _centroid(self, j: int) -> np.ndarray:
+        n = self._n[j]
+        return self._sum[j] / n if n else np.zeros(self.dim)
+
+    def insert(self, shard: int, point) -> None:
+        j = int(shard)
+        p = np.asarray(point, np.float64)
+        c_old = self._centroid(j)
+        had = self._n[j] > 0
+        self._sum[j] += p
+        self._n[j] += 1
+        c_new = self._centroid(j)
+        drift = float(np.linalg.norm(c_new - c_old)) if had else 0.0
+        self._radius[j] = max(self._radius[j] + drift,
+                              float(np.linalg.norm(p - c_new)))
+        pr = self.directions @ p
+        np.minimum(self._lo[j], pr, out=self._lo[j])
+        np.maximum(self._hi[j], pr, out=self._hi[j])
+
+    def delete(self, shard: int, point) -> None:
+        j = int(shard)
+        p = np.asarray(point, np.float64)
+        c_old = self._centroid(j)
+        self._sum[j] -= p
+        self._n[j] -= 1
+        if self._n[j] <= 0:
+            self._reset_shard(j)
+            return
+        # Covering radius can only grow by the centroid drift; the
+        # projection intervals stay as-is (stale but still covering).
+        drift = float(np.linalg.norm(self._centroid(j) - c_old))
+        self._radius[j] += drift
+
+    def update(self, shard: int, old_point, new_point) -> None:
+        self.delete(shard, old_point)
+        self.insert(shard, new_point)
+
+    def _reset_shard(self, j: int) -> None:
+        self._sum[j] = 0.0
+        self._n[j] = 0
+        self._radius[j] = 0.0
+        self._lo[j] = np.inf
+        self._hi[j] = -np.inf
+
+    def rebuild(self, points: np.ndarray, valid: np.ndarray,
+                cap: int) -> None:
+        """Exact recompute from the store mirrors (compaction path) —
+        tightens every bound the incremental path loosened."""
+        pts = np.asarray(points, np.float64)
+        for j in range(self.k):
+            sl = slice(j * cap, (j + 1) * cap)
+            pj = pts[sl][np.asarray(valid[sl], bool)]
+            if not len(pj):
+                self._reset_shard(j)
+                continue
+            self._sum[j] = pj.sum(0)
+            self._n[j] = len(pj)
+            c = self._centroid(j)
+            self._radius[j] = float(
+                np.sqrt(((pj - c) ** 2).sum(-1)).max())
+            pr = pj @ self.directions.T
+            self._lo[j] = pr.min(0)
+            self._hi[j] = pr.max(0)
+
+    def freeze(self, generation: int) -> ShardSummaries:
+        n = np.maximum(self._n, 1)[:, None]
+        return ShardSummaries(
+            generation=int(generation),
+            live=self._n.copy(),
+            centroids=self._sum / n,
+            radii=self._radius.copy(),
+            directions=self.directions,
+            proj_lo=self._lo.copy(),
+            proj_hi=self._hi.copy())
+
+
+def build_summaries(points: np.ndarray, k: int, *, valid=None,
+                    num_projections: int = 8, seed: int = 0,
+                    generation: int = 0) -> ShardSummaries:
+    """Summaries for a contiguously sharded static point set.
+
+    ``points``: (n, dim) host array; shard j owns rows
+    ``[j·n/k, (j+1)·n/k)`` — the static :class:`KnnServer` layout.
+    ``valid`` (optional (n,) bool) masks dead rows (store mirrors).
+    """
+    points = np.asarray(points)
+    n, dim = points.shape
+    if n % k:
+        raise ValueError(f"n={n} must be divisible by k={k}")
+    cap = n // k
+    m = SummaryMaintainer(k, dim, num_projections=num_projections, seed=seed)
+    m.rebuild(points, np.ones(n, bool) if valid is None else valid, cap)
+    return m.freeze(generation)
+
+
+# ---- routing bounds ------------------------------------------------------
+
+def _centroid_distances(s: ShardSummaries, q: np.ndarray) -> np.ndarray:
+    """(B, k) float64 query-to-centroid L2 distances (shared by both
+    bound directions — computed once per routing decision)."""
+    return np.sqrt(((q[:, None, :] - s.centroids[None]) ** 2).sum(-1))
+
+
+def lower_bounds(s: ShardSummaries, queries: np.ndarray,
+                 dc: np.ndarray | None = None) -> np.ndarray:
+    """(B, k) *squared*-distance lower bound from each query to each
+    shard's nearest live point; +inf for empty shards.  ``dc`` (optional)
+    is a precomputed :func:`_centroid_distances` result."""
+    q = np.atleast_2d(np.asarray(queries, np.float64))
+    if dc is None:
+        dc = _centroid_distances(s, q)
+    lb = np.maximum(dc - s.radii[None], 0.0)
+    empty = s.live == 0
+    if s.directions.size:
+        qp = q @ s.directions.T                              # (B, r)
+        lo = np.where(empty[:, None], 0.0, s.proj_lo)
+        hi = np.where(empty[:, None], 0.0, s.proj_hi)
+        gap = np.maximum(np.maximum(lo[None] - qp[:, None, :],
+                                    qp[:, None, :] - hi[None]), 0.0)
+        lb = np.maximum(lb, gap.max(-1))
+    out = lb ** 2
+    out[:, empty] = np.inf
+    return out
+
+
+def upper_bounds(s: ShardSummaries, queries: np.ndarray,
+                 dc: np.ndarray | None = None) -> np.ndarray:
+    """(B, k) *squared*-distance upper bound covering every live point of
+    each shard; +inf for empty shards.  ``dc`` as in
+    :func:`lower_bounds`."""
+    q = np.atleast_2d(np.asarray(queries, np.float64))
+    if dc is None:
+        dc = _centroid_distances(s, q)
+    out = (dc + s.radii[None]) ** 2
+    out[:, s.live == 0] = np.inf
+    return out
+
+
+_F32_EPS = float(np.finfo(np.float32).eps)       # 2^-23
+
+
+def pipeline_error_bound(s: ShardSummaries, queries: np.ndarray) -> np.ndarray:
+    """(B,) absolute bound on twice the f32 rounding of any computed
+    (query, live point) squared distance this generation.
+
+    The pipeline's ``|q|² − 2q·p + |p|²`` in f32 carries error
+    ~dim·2⁻²³·(|q|+|p|)² regardless of how small the true distance is;
+    |p| <= R = max live (|centroid| + radius).  The factor 16·(dim+1)
+    covers the accumulation constants of all three dot products, the
+    three-term cancellation, and the doubling needed because both the
+    pruned candidate's distance *and* the threshold-defining winners'
+    distances are rounded.
+    """
+    q = np.atleast_2d(np.asarray(queries, np.float64))
+    dim = q.shape[1]
+    live = s.live > 0
+    if live.any():
+        R = float((np.linalg.norm(s.centroids[live], axis=1)
+                   + s.radii[live]).max())
+    else:
+        R = 0.0
+    qn = np.linalg.norm(q, axis=1)
+    return 16.0 * (dim + 1) * _F32_EPS * (qn + R) ** 2
+
+
+def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
+                 *, slack: float = 1e-4) -> np.ndarray:
+    """(B, k) bool — shard j may hold one of row b's ``ls[b]`` winners.
+
+    Exact by construction: T_b is the upper bound at which the cumulative
+    live count (shards visited in ascending-upper-bound order) reaches
+    ``ls[b]``, so the l-th NN distance is <= T_b; a shard is kept unless
+    ``lb > T_b·(1+slack) + err_b`` with ``err_b`` the magnitude-absolute
+    f32 rounding bound (:func:`pipeline_error_bound`) — it cannot contain
+    a winner even under the computed-distance order the pipeline actually
+    ranks by (module docstring).  Rows with ``ls[b] == 0`` (the
+    micro-batcher's bucket padding) route nowhere; if the total live
+    count is below l, every live shard stays active.
+    """
+    q = np.atleast_2d(np.asarray(queries, np.float64))
+    B = q.shape[0]
+    ls = np.broadcast_to(np.asarray(ls, np.int64), (B,))
+    dc = _centroid_distances(s, q)
+    lb = lower_bounds(s, q, dc)
+    ub = upper_bounds(s, q, dc)
+    order = np.argsort(ub, axis=1, kind="stable")
+    csum = np.cumsum(s.live[order], axis=1)
+    reached = csum >= ls[:, None]
+    has = reached.any(axis=1)
+    first = np.where(has, reached.argmax(axis=1), 0)
+    ub_sorted = np.take_along_axis(ub, order, axis=1)
+    T = np.where(has, ub_sorted[np.arange(B), first], np.inf)
+    T_eff = T * (1.0 + slack) + pipeline_error_bound(s, q)
+    return ((s.live[None, :] > 0) & (lb <= T_eff[:, None])
+            & (ls[:, None] > 0))
+
+
+def summary_invariants(s: ShardSummaries, points: np.ndarray,
+                       valid: np.ndarray, cap: int) -> dict:
+    """Worst-case violation of the covering invariants over the live set
+    (test/bench hook; all values should be <= ~1e-9 for a correct
+    maintainer — float64 rounding only)."""
+    pts = np.asarray(points, np.float64)
+    radius_viol = proj_viol = 0.0
+    live_mismatch = 0
+    for j in range(s.live.shape[0]):
+        sl = slice(j * cap, (j + 1) * cap)
+        pj = pts[sl][np.asarray(valid[sl], bool)]
+        live_mismatch = max(live_mismatch, abs(len(pj) - int(s.live[j])))
+        if not len(pj):
+            continue
+        d = np.sqrt(((pj - s.centroids[j]) ** 2).sum(-1))
+        radius_viol = max(radius_viol, float((d - s.radii[j]).max()))
+        pr = pj @ s.directions.T
+        proj_viol = max(proj_viol,
+                        float((s.proj_lo[j] - pr).max()),
+                        float((pr - s.proj_hi[j]).max()))
+    return {"radius_violation": radius_viol,
+            "projection_violation": proj_viol,
+            "live_mismatch": live_mismatch}

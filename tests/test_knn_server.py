@@ -214,6 +214,38 @@ def test_server_background_batcher(mesh8, rng, pts):
         np.testing.assert_allclose(np.sort(r.dists), bd[0], rtol=1e-4)
 
 
+def test_server_determinism_across_fresh_instances(mesh8, rng, pts):
+    """Identical PRNG seed + identical store generation => bit-identical
+    QueryResult from two fresh KnnServer instances (the dispatch-time
+    snapshot-capture contract: nothing about a server's private lifetime
+    — construction order, warmup, thread timing — may leak into answers)."""
+    from repro.store import MutableStore
+    qs = rng.normal(size=(5, DIM)).astype(np.float32)
+    ls = [1, 3, 32, 17, 8]
+
+    # static backing, one server warmed up and one not
+    a, b = _server(pts, mesh8), _server(pts, mesh8)
+    b.warmup()
+    for ra, rb in zip(a.query_batch(qs, ls), b.query_batch(qs, ls)):
+        assert ra.dists.tobytes() == rb.dists.tobytes()
+        assert np.array_equal(ra.ids, rb.ids)
+        assert ra.generation == rb.generation == 0
+
+    # mutable backing: both servers share one store generation
+    store = MutableStore(DIM, capacity_per_shard=64, axis_name="x")
+    ids = store.insert(rng.normal(size=(200, DIM)).astype(np.float32))
+    store.flush()
+    store.delete(ids[::5])
+    store.flush()
+    kw = dict(dim=DIM, l=8, l_max=32, bucket_sizes=(1, 2, 4, 8))
+    a, b = (KnnServer(store=store, cfg=CONFIG.replace(**kw), seed=0)
+            for _ in range(2))
+    for ra, rb in zip(a.query_batch(qs, ls), b.query_batch(qs, ls)):
+        assert ra.dists.tobytes() == rb.dists.tobytes()
+        assert np.array_equal(ra.ids, rb.ids)
+        assert ra.generation == rb.generation == store.generation
+
+
 def test_server_rejects_bad_requests(mesh8, pts):
     srv = _server(pts, mesh8)
     with pytest.raises(ValueError):

@@ -1,0 +1,360 @@
+"""Pruned shard routing — the exactness property harness.
+
+The contract under test (DESIGN.md Section 8): ``route="pruned"`` may
+mask any shard whose per-shard pivot summary (store/summaries.py) proves
+it cannot hold an l-NN winner, and the answer must stay **bit-identical**
+to ``route="exact"`` — same distance bytes, same ids, same order — for
+every l, on every instance family (clustered, uniform, adversarial
+all-points-equidistant), and at every moment of a mutable store's life
+(mid-stream after interleaved inserts/deletes/updates/compaction).
+
+Property-based via hypothesis when installed (requirements-dev.txt);
+otherwise the same case body runs over a seeded parameter grid, so the
+property is exercised either way (never bare-skipped).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+import repro.core as core
+from repro.configs.knn_service import CONFIG
+from repro.data import sharded_clusters
+from repro.parallel.compat import shard_map
+from repro.runtime import KnnServer
+from repro.store import (MutableStore, build_summaries, lower_bounds,
+                         route_shards, summary_invariants, upper_bounds)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    given = None
+
+K = 8
+DIM = 8
+M = 64                     # points per shard (core-level harness)
+N = K * M
+B = 4                      # query rows per instance
+L_MAX = 256                # static buffer bound; l in {1, 8, 256} all fit
+L_SET = (1, 8, 256)
+FAMILIES = ("clustered", "uniform", "equidistant", "offset")
+SCALES = (1.0, 1e-3)
+
+
+def _instance(family: str, seed: int, scale: float):
+    """(points (N, DIM) f32 contiguous-by-shard, queries (B, DIM) f32)."""
+    rng = np.random.default_rng(seed)
+    if family in ("clustered", "offset"):
+        # "offset" pushes the clusters far from the origin: f32 pipeline
+        # distances quantize to multiples of ulp(|q|^2), so any routing
+        # margin that is merely *relative* to the threshold prunes
+        # computed-distance winners — pipeline_error_bound must hold the
+        # line (it mostly disables pruning at this scale, by design).
+        shift = 2000.0 if family == "offset" else 0.0
+        pts, centers = sharded_clusters(K, M, DIM, shift=shift, rng=rng)
+        q = centers[rng.integers(0, K, B)] + rng.normal(size=(B, DIM))
+    elif family == "uniform":
+        pts = rng.normal(size=(N, DIM))
+        q = rng.normal(size=(B, DIM))
+    else:  # adversarial: every point exactly equidistant from the origin
+        # signed scaled one-hots: |p|^2 == c^2 bit-exactly in f32, so the
+        # query at the origin ties every point and every shard — routing
+        # must keep them all and tie-breaking must not change.
+        eye = np.eye(DIM)[np.arange(N) % DIM]
+        sign = np.where(rng.random(N) < 0.5, 1.0, -1.0)
+        pts = eye * sign[:, None] * 3.0
+        q = np.zeros((B, DIM))
+        q[B // 2:] = eye[rng.integers(0, N, B - B // 2)] * 3.0  # exact hits
+    return (pts * scale).astype(np.float32), (q * scale).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def routing_fn(mesh8):
+    """One compile for the whole harness: exact and pruned Algorithm 2
+    side by side under the same PRNG key."""
+    def fn(p, i, q, la, key, active):
+        ex = core.knn_query_batched(p, i, q, L_MAX, la, key, axis_name="x")
+        pr = core.knn_query_batched(p, i, q, L_MAX, la, key, axis_name="x",
+                                    shard_active=active)
+        return ex.dists, ex.ids, pr.dists, pr.ids
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh8,
+        in_specs=(P("x"), P("x"), P(None), P(None), P(None), P("x")),
+        out_specs=(P(None),) * 4))
+
+
+def _routing_case(routing_fn, family, seed, scale, l):
+    pts, q = _instance(family, seed, scale)
+    pids = np.arange(N, dtype=np.int32)
+    la = np.full(B, l, np.int32)
+    summ = build_summaries(pts, K)
+    active_rows = route_shards(summ, q, la, slack=CONFIG.route_slack)
+    active = active_rows.any(axis=0)
+
+    d_ex, i_ex, d_pr, i_pr = routing_fn(pts, pids, q, la,
+                                        jax.random.PRNGKey(seed), active)
+    d_ex, i_ex, d_pr, i_pr = map(np.asarray, (d_ex, i_ex, d_pr, i_pr))
+    assert d_ex.tobytes() == d_pr.tobytes(), (family, seed, scale, l)
+    assert np.array_equal(i_ex, i_pr), (family, seed, scale, l)
+    # every reported winner must live in a shard routing kept active
+    real = i_ex != 2**31 - 1
+    assert active[(i_ex[real] // M)].all()
+    # and the lower bounds themselves must be sound: lb <= true min <= ub
+    d_all = ((q[:, None, :].astype(np.float64)
+              - pts[None].astype(np.float64)) ** 2).sum(-1)
+    per_shard_min = d_all.reshape(B, K, M).min(-1)
+    assert (lower_bounds(summ, q) <= per_shard_min + 1e-9).all()
+    assert (upper_bounds(summ, q) >= per_shard_min - 1e-9).all()
+
+
+if given is not None:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        family=st.sampled_from(FAMILIES),
+        seed=st.integers(min_value=0, max_value=999),
+        scale=st.sampled_from(SCALES),
+        l=st.sampled_from(L_SET),
+    )
+    def test_routing_exactness_property(routing_fn, family, seed, scale, l):
+        _routing_case(routing_fn, family, seed, scale, l)
+else:
+    @pytest.mark.parametrize("l", L_SET)
+    @pytest.mark.parametrize("scale", SCALES)
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_routing_exactness_property(routing_fn, family, scale, l):
+        for seed in (0, 7):
+            _routing_case(routing_fn, family, seed, scale, l)
+
+
+# ---- routing decision unit properties (host-side, no device work) --------
+
+def test_route_shards_prefix_never_pruned():
+    """Shards inside the cumulative-live prefix satisfy lb <= ub <= T and
+    must survive routing, so the active set always holds >= min(l, live)
+    points — the selection downstream stays exact."""
+    pts, q = _instance("clustered", 3, 1.0)
+    s = build_summaries(pts, K)
+    for l in (1, 8, 64, 256, 1024):
+        active = route_shards(s, q, np.full(B, l, np.int64))
+        assert (s.live[None, :] * active).sum(-1).min() >= min(l, N)
+
+
+def test_route_shards_padding_rows_route_nowhere():
+    pts, q = _instance("uniform", 0, 1.0)
+    s = build_summaries(pts, K)
+    active = route_shards(s, q, np.array([0, 8, 0, 1]))
+    assert not active[0].any() and not active[2].any()
+    assert active[1].any() and active[3].any()
+
+
+def test_route_shards_empty_shards_always_pruned():
+    pts, q = _instance("uniform", 1, 1.0)
+    valid = np.ones(N, bool)
+    valid[:2 * M] = False                      # shards 0 and 1 empty
+    s = build_summaries(pts, K, valid=valid)
+    active = route_shards(s, q, np.full(B, 8))
+    assert not active[:, :2].any()
+    # l beyond the live count keeps every live shard
+    active = route_shards(s, q, np.full(B, N))
+    assert active[:, 2:].all()
+
+
+def test_routing_exact_far_from_origin(mesh8):
+    """Regression: clusters offset ~2000 from the origin at dim=32.  The
+    f32 distance expansion quantizes to multiples of ~ulp(|q|^2) (~8
+    here) while inter-cluster bound gaps stay O(10^2), so a margin that
+    scales only with the threshold prunes shards holding the *computed*
+    winner.  pipeline_error_bound makes the margin absolute in the
+    coordinate magnitude; answers must stay bit-identical."""
+    dim, m = 32, 64
+
+    def fn(p, i, q, la, key, active):
+        ex = core.knn_query_batched(p, i, q, 8, la, key, axis_name="x")
+        pr = core.knn_query_batched(p, i, q, 8, la, key, axis_name="x",
+                                    shard_active=active)
+        return ex.dists, ex.ids, pr.dists, pr.ids
+
+    f = jax.jit(shard_map(
+        fn, mesh=mesh8,
+        in_specs=(P("x"), P("x"), P(None), P(None), P(None), P("x")),
+        out_specs=(P(None),) * 4))
+    n = K * m
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        pts, centers = sharded_clusters(K, m, dim, shift=2000.0, rng=rng)
+        q = (centers[rng.integers(0, K, B)]
+             + rng.normal(size=(B, dim))).astype(np.float32)
+        la = np.full(B, 8, np.int32)
+        summ = build_summaries(pts, K)
+        active = route_shards(summ, q, la).any(axis=0)
+        d_ex, i_ex, d_pr, i_pr = map(np.asarray, f(
+            pts, np.arange(n, dtype=np.int32), q, la,
+            jax.random.PRNGKey(seed), active))
+        assert d_ex.tobytes() == d_pr.tobytes(), seed
+        assert np.array_equal(i_ex, i_pr), seed
+
+
+def test_route_shards_equidistant_prunes_nothing():
+    """The adversarial tie instance: every shard's bounds coincide, so no
+    shard may be ruled out (slack keeps the test conservative)."""
+    pts, q = _instance("equidistant", 5, 1.0)
+    s = build_summaries(pts, K)
+    active = route_shards(s, q[:1], np.array([8]))
+    assert active.all()
+
+
+# ---- server-level: end-to-end A/B over the service path ------------------
+
+def _server_pair(mesh8, pts=None, stores=None, **overrides):
+    kw = dict(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=(4,))
+    kw.update(overrides)
+    mk = lambda route, backing: KnnServer(
+        points=backing if stores is None else None,
+        store=None if stores is None else backing,
+        cfg=CONFIG.replace(**kw, route=route), mesh=mesh8, axis_name="x")
+    if stores is None:
+        return mk("exact", pts), mk("pruned", pts)
+    return mk("exact", stores[0]), mk("pruned", stores[1])
+
+
+def _assert_identical(res_exact, res_pruned):
+    for a, b in zip(res_exact, res_pruned):
+        assert a.dists.tobytes() == b.dists.tobytes()
+        assert np.array_equal(a.ids, b.ids)
+        assert a.generation == b.generation
+        if a.values is not None or b.values is not None:
+            assert np.array_equal(a.values, b.values)
+
+
+def test_server_pruned_identical_and_cheaper_on_clusters(mesh8):
+    """The acceptance contract: identical answers, strictly fewer
+    k-machine messages, and shards_touched < k on a clustered workload."""
+    pts, q = _instance("clustered", 11, 1.0)
+    ex, pr = _server_pair(mesh8, pts=pts)
+    # identity holds for any l mix, up to l_max (which spans half the set
+    # and legitimately touches everything)
+    ls = [1, 8, 256, 40]
+    _assert_identical(ex.query_batch(q, ls), pr.query_batch(q, ls))
+    # small-l batches are where routing pays: shards_touched is the batch
+    # *union*, so keep the wide request out of this bucket
+    ls = [1, 8, 4, 2]
+    ra, rb = ex.query_batch(q, ls), pr.query_batch(q, ls)
+    _assert_identical(ra, rb)
+    assert all(r.shards_touched == K for r in ra)
+    assert all(r.shards_touched < K for r in rb)
+    assert all(b.messages < a.messages for a, b in zip(ra, rb))
+
+
+def test_server_pruned_identical_gather_sampler(mesh8):
+    """The gather baseline prunes identically (knn_simple path)."""
+    pts, q = _instance("clustered", 13, 1.0)
+    ex, pr = _server_pair(mesh8, pts=pts, sampler="gather", l_max=32)
+    ra, rb = ex.query_batch(q, [1, 8, 32, 5]), pr.query_batch(q, [1, 8, 32, 5])
+    _assert_identical(ra, rb)
+    assert all(b.messages < a.messages for a, b in zip(ra, rb))
+
+
+def _mutate_both(stores, fn):
+    for s in stores:
+        fn(s)
+
+
+def test_server_pruned_identical_under_mutation(mesh8):
+    """Mid-stream exactness: after every phase of an interleaved
+    insert/delete/update/compact history, pruned answers stay
+    bit-identical — routing summaries travel with the snapshot
+    generation, so they can never describe a different epoch than the one
+    answering (the generation-coupling invariant)."""
+    rng = np.random.default_rng(42)
+    batch1, centers = sharded_clusters(K, 30, DIM, rng=rng)
+    stores = [MutableStore(DIM, capacity_per_shard=M, axis_name="x")
+              for _ in range(2)]
+    ex, pr = _server_pair(mesh8, stores=stores)
+    q = (centers[rng.integers(0, K, B)]
+         + rng.normal(size=(B, DIM))).astype(np.float32)
+    ls = [1, 8, 256, 77]
+
+    def check():
+        ra, rb = ex.query_batch(q, ls), pr.query_batch(q, ls)
+        _assert_identical(ra, rb)
+        for s in stores:
+            snap, summ = s.routing_snapshot()
+            assert summ.generation == snap.generation
+        return rb
+
+    # phase 1: clustered ingest
+    _mutate_both(stores, lambda s: (s.insert(batch1), s.flush()))
+    check()
+
+    # phase 2: interleaved deletes + inserts + updates
+    ids = stores[0].live_arrays()[0]
+    victims = ids[::3][:60]
+    batch2 = rng.normal(size=(40, DIM)).astype(np.float32)
+    moved = ids[1::3][:20]
+    new_pos = rng.normal(size=(20, DIM)).astype(np.float32)
+
+    def phase2(s):
+        s.delete(victims)
+        s.insert(batch2)
+        s.update(moved, new_pos)
+        s.flush()
+    _mutate_both(stores, phase2)
+    check()
+
+    # phase 3: forced compaction (summaries rebuilt exactly)
+    _mutate_both(stores, lambda s: s.compact())
+    check()
+
+    # phase 4: delete down to a handful -> compact leaves shards empty,
+    # so pruning must fire even on a store-backed server
+    keep = stores[0].live_arrays()[0][:5]
+    _mutate_both(
+        stores,
+        lambda s: (s.delete(np.setdiff1d(s.live_arrays()[0], keep)),
+                   s.compact()))
+    rb = check()
+    assert all(r.shards_touched < K for r in rb)
+    assert stores[0].generation == stores[1].generation
+
+
+def test_server_rejects_sketch_mismatch_with_store(mesh8):
+    """Store-backed pruned servers route with the *store's* sketch; a
+    conflicting service config must fail loudly, not be ignored."""
+    store = MutableStore(DIM, capacity_per_shard=16, axis_name="x",
+                         summary_projections=4)
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=8, bucket_sizes=(1,),
+                         route="pruned")        # asks for 8 projections
+    with pytest.raises(ValueError, match="sketch mismatch"):
+        KnnServer(store=store, cfg=cfg, mesh=mesh8)
+    # matching config constructs fine
+    KnnServer(store=store,
+              cfg=cfg.replace(route_num_projections=4), mesh=mesh8)
+
+
+def test_summary_covering_invariants_under_mutation(rng):
+    """The maintainer's bounds stay *covering* through any op sequence:
+    every live point within the shard radius, every projection inside its
+    interval, live counts exact (violations are float64-rounding only)."""
+    store = MutableStore(DIM, capacity_per_shard=32, axis_name="x",
+                         staging_size=16)
+    pts = rng.normal(scale=5.0, size=(180, DIM)).astype(np.float32)
+    ids = store.insert(pts)
+    store.flush()
+    store.delete(ids[::4])
+    store.update(ids[1::4], rng.normal(size=(len(ids[1::4]), DIM))
+                 .astype(np.float32))
+    store.flush()
+    inv = summary_invariants(store.summaries(), store._pts, store._valid,
+                             store.cap)
+    assert inv["live_mismatch"] == 0
+    assert inv["radius_violation"] <= 1e-9
+    assert inv["projection_violation"] <= 1e-9
+    # compaction re-tightens: rebuilt bounds still cover
+    store.compact()
+    inv = summary_invariants(store.summaries(), store._pts, store._valid,
+                             store.cap)
+    assert inv["radius_violation"] <= 1e-9
+    assert inv["projection_violation"] <= 1e-9

@@ -55,6 +55,33 @@ def test_prune_with_sentinels(mesh8, rng):
     assert not np.asarray(valid)[0][::3].any()
 
 
+def test_prune_survivor_envelope_sweep(mesh8):
+    """benchmarks/bench_prune.py's Lemma 2.3 envelope, CI-enforced: over
+    many seeded instances the survivor count lands in [l, 11l], the Las
+    Vegas verification accepts, and the true l-NN set always survives.
+    Seeds are fixed, so the w.h.p. events are frozen facts, not flakes."""
+    L = 64
+    trials = 12
+    d_all = np.stack([np.random.default_rng(t).exponential(
+        size=(K * L,)).astype(np.float32) for t in range(trials)])[:, None, :]
+
+    def fn(dd, kk):
+        r = sampling.sample_prune(dd, kk, L, axis_name="x")
+        return r.valid, r.survivors, r.applied
+
+    f = jax.jit(shard_map(
+        fn, mesh=mesh8, in_specs=(P(None, "x"), P(None)),
+        out_specs=(P(None, "x"), P(None), P(None)), check_vma=False))
+    for t in range(trials):
+        valid, surv, applied = f(d_all[t], jax.random.PRNGKey(t))
+        assert bool(np.asarray(applied)[0]), f"trial {t}: prune rejected"
+        s = int(np.asarray(surv)[0])
+        assert L <= s <= 11 * L, f"trial {t}: {s} outside [{L}, {11 * L}]"
+        top = np.argsort(d_all[t, 0])[:L]
+        assert np.asarray(valid)[0][top].all(), \
+            f"trial {t}: prune cut a true neighbor"
+
+
 def test_sample_counts_match_paper_constants():
     assert sampling.sample_count(1024) == int(np.ceil(12 * np.log(1024)))
     assert sampling.radius_index(1024) == int(np.ceil(21 * np.log(1024)))
