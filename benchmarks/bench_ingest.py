@@ -5,6 +5,9 @@ Two phases against ``store.MutableStore`` (DESIGN.md Section 7):
   1. **Ingest throughput** — staged insert/delete/update batches applied
      via the on-device scatter path; points/sec per mutation kind, plus
      the cost of one forced compaction (full repack + re-upload).
+     Runs twice: once with the default balance/round-robin store and
+     once with ``placement="affinity"`` + ``redeal="proximity"``
+     (store/placement.py), pricing the locality-aware write path.
   2. **Query latency under ingest** — a store-backed ``KnnServer`` with
      the micro-batcher thread running, a background ingest thread
      streaming insert+delete batches (epoch swaps land continuously),
@@ -43,22 +46,27 @@ QUERIES_UNDER_INGEST = 160     # closed-loop queries in phase 2
 BUCKETS = (1, 2, 4, 8)
 
 
-def _mk_store(rng, cap, staging, prefill=0):
+def _mk_store(rng, cap, staging, prefill=0, placement="balance",
+              redeal="round_robin"):
     from repro.store import MutableStore
-    store = MutableStore(
-        DIM, capacity_per_shard=cap, mesh=common.kmachine_mesh(),
-        axis_name="x", staging_size=staging,
-        compact_tombstone_frac=CONFIG.store_compact_tombstone_frac,
-        compact_imbalance_frac=CONFIG.store_compact_imbalance_frac)
+    # store construction kwargs come from the service config (the single
+    # source of service tuning), with the placement policy under test
+    # swapped in (store/placement.py)
+    kw = CONFIG.replace(store_capacity_per_shard=cap,
+                        store_staging_size=staging, placement=placement,
+                        redeal=redeal).store_kwargs()
+    store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         **kw)
     if prefill:
         store.insert(rng.normal(size=(prefill, DIM)).astype(np.float32))
         store.flush()
     return store
 
 
-def _phase_ingest(rng, cap, staging, batches) -> dict:
+def _phase_ingest(rng, cap, staging, batches, placement="balance",
+                  redeal="round_robin") -> dict:
     """Staged batch -> flush (scatter apply) throughput per mutation kind."""
-    store = _mk_store(rng, cap, staging)
+    store = _mk_store(rng, cap, staging, placement=placement, redeal=redeal)
     total = store.total
 
     def timed_cycles(op) -> float:
@@ -93,6 +101,8 @@ def _phase_ingest(rng, cap, staging, batches) -> dict:
         "capacity_total": total,
         "staging_size": staging,
         "batches": batches,
+        "placement": store.placement,
+        "redeal": store.redeal,
         "insert_pts_per_s": n / wall_ins,
         "update_pts_per_s": n / wall_upd,
         "delete_pts_per_s": (n // 2) / wall_del,
@@ -171,6 +181,14 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
         "dim": DIM, "l_max": L_MAX, "k_machines": common.K_MACHINES,
         "smoke": smoke,
         "ingest": _phase_ingest(rng, cap, staging, batches),
+        # placement-policy write-path cost (store/placement.py): the
+        # affinity pick consults centroids per applied insert, and the
+        # proximity re-deal runs Lloyd at the forced compaction — this
+        # entry prices both against the balance/round-robin baseline
+        # above.
+        "ingest_affinity": _phase_ingest(rng, cap, staging, batches,
+                                         placement="affinity",
+                                         redeal="proximity"),
         "under_ingest": _phase_under_ingest(rng, cap, staging, n_queries),
     }
     ing, und = report["ingest"], report["under_ingest"]
@@ -178,6 +196,11 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
         "ingest_insert", 1e6 * staging / ing["insert_pts_per_s"],
         f"pts_per_s={ing['insert_pts_per_s']:.0f} "
         f"compact_s={ing['compact_s']:.3f}"))
+    aff = report["ingest_affinity"]
+    emit(common.row(
+        "ingest_insert_affinity", 1e6 * staging / aff["insert_pts_per_s"],
+        f"pts_per_s={aff['insert_pts_per_s']:.0f} "
+        f"compact_s={aff['compact_s']:.3f} (redeal=proximity)"))
     emit(common.row(
         "query_under_ingest", 1e6 / und["qps"],
         f"qps={und['qps']:.1f} p50={und['p50_ms']:.2f}ms "

@@ -9,10 +9,15 @@ values on the wire) — the paper's Figure 2 contrast restated as a serving
 benchmark.  A second section serves a *clustered* store (one cluster per
 shard, queries near cluster centers) under ``route="exact"`` vs
 ``route="pruned"`` (store/summaries.py): same bit-identical answers,
-fewer touched shards and k-machine messages.  Emits CSV rows like every
-other bench module plus ``BENCH_serve.json`` with sustained queries/sec,
-p50/p99 request latency, and mean rounds/messages/shards_touched per
-configuration.
+fewer touched shards and k-machine messages.  A third section runs the
+placement A/B (store/placement.py): the same clustered family streamed
+into a *mutable* store under ``placement`` in {balance, affinity} x
+``redeal`` in {round_robin, proximity}, measured before and after a
+compaction, against a static cluster-contiguous pruned baseline — the
+section that shows store-backed serving pruning like the static layout.
+Emits CSV rows like every other bench module plus ``BENCH_serve.json``
+with sustained queries/sec, p50/p99 request latency, and mean
+rounds/messages/shards_touched per configuration.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
@@ -69,6 +74,108 @@ def _build_routed_server(route: str, n_points: int):
                     axis_name="x")
     srv.warmup()
     return srv, centers
+
+
+def _build_placement_store(placement: str, redeal: str, pts, order,
+                           delete_ids, cap: int, staging: int):
+    """Stream the clustered points (cluster-interleaved order) into a
+    mutable store under one placement policy, with a delete wave at the
+    end — the streaming-ingest workload of the placement A/B.  Ids are
+    assigned 0..n-1 in stream order; ``delete_ids`` names the wave, so
+    every variant (and the static baseline) serves the identical
+    post-delete live set."""
+    from repro.store import MutableStore
+    cfg = CONFIG.replace(placement=placement, redeal=redeal,
+                         store_capacity_per_shard=cap,
+                         store_staging_size=staging)
+    store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         **cfg.store_kwargs())
+    shuffled = pts[order]
+    for i in range(0, len(shuffled), staging):
+        store.insert(shuffled[i:i + staging])
+        store.flush()
+    store.delete(delete_ids)        # 12.5% churn: tombstones + size drift
+    store.flush()
+    return store
+
+
+def _placement_section(bursts: int, per_shard: int, emit) -> dict:
+    """Placement A/B: store-backed pruned serving vs the static layout.
+
+    Every variant serves the identical live point set (same clustered
+    family, same delete wave) and the identical query stream, so
+    shards_touched differences are purely the layout's doing.  Each
+    store variant is measured twice: after streaming ingest
+    (pre_compact) and after one compaction (post_compact) — the point
+    where ``redeal="round_robin"`` smears whatever locality affinity
+    placement built, and ``redeal="proximity"`` restores it.
+    """
+    from repro.data import sharded_clusters
+    from repro.runtime import KnnServer
+    k = common.K_MACHINES
+    pts, centers = sharded_clusters(k, per_shard, DIM, seed=5)
+    order = np.random.default_rng(5).permutation(len(pts))
+    cap, staging = per_shard * 2, max(64, per_shard // 8)
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+                         sampler="selection", route="pruned")
+    section = {"per_shard": per_shard, "capacity_per_shard": cap,
+               "staging": staging, "delete_frac": 1 / 8}
+
+    # The delete wave drops an eighth of *each cluster* (uniform churn):
+    # id i holds original row order[i], so deleting the ids whose row
+    # falls in the first per_shard/8 of its cluster block leaves every
+    # cluster at exactly 7/8 size.  That makes the post-delete live set
+    # identical across the store variants AND expressible as a
+    # cluster-contiguous static layout with k-divisible equal blocks —
+    # the baseline below serves the very same points, so shards_touched
+    # differences are purely the layout's doing.
+    dropped_rows = (np.arange(len(pts)) % per_shard) < per_shard // 8
+    delete_ids = np.flatnonzero(dropped_rows[order])
+    static_pts = pts[~dropped_rows]
+
+    # static cluster-contiguous reference: the layout PR 3's routing win
+    # was demonstrated on
+    srv = KnnServer(static_pts, cfg=cfg, mesh=common.kmachine_mesh(),
+                    axis_name="x")
+    srv.warmup()
+    section["static_pruned"] = _drive(
+        srv, np.random.default_rng(13), bursts, centers=centers)
+    section["static_pruned"]["placement_stats"] = srv.placement_stats()
+    static_touched = section["static_pruned"]["mean_shards_touched"]
+    emit(common.row(
+        "serve_placement_static_pruned",
+        1e6 / section["static_pruned"]["qps"],
+        f"shards_touched={static_touched:.2f}"))
+
+    for placement, redeal in (("balance", "round_robin"),
+                              ("affinity", "round_robin"),
+                              ("affinity", "proximity")):
+        name = f"{placement}+{redeal}"
+        store = _build_placement_store(placement, redeal, pts, order,
+                                       delete_ids, cap, staging)
+        srv = KnnServer(store=store, cfg=cfg)
+        srv.warmup()
+        entry = {"pre_compact": _drive(srv, np.random.default_rng(13),
+                                       bursts, centers=centers)}
+        entry["pre_compact"]["placement_stats"] = srv.placement_stats()
+        store.compact()
+        entry["post_compact"] = _drive(srv, np.random.default_rng(13),
+                                       bursts, centers=centers)
+        entry["post_compact"]["placement_stats"] = srv.placement_stats()
+        entry["compactions"] = store.stats.compactions
+        entry["vs_static_touched_ratio"] = (
+            entry["post_compact"]["mean_shards_touched"]
+            / max(static_touched, 1e-9))
+        section[name] = entry
+        emit(common.row(
+            f"serve_placement_{placement}_{redeal}",
+            1e6 / entry["post_compact"]["qps"],
+            f"touched_pre={entry['pre_compact']['mean_shards_touched']:.2f} "
+            f"touched_post={entry['post_compact']['mean_shards_touched']:.2f} "
+            f"msgs={entry['post_compact']['mean_messages']:.1f} "
+            f"prune_rate="
+            f"{entry['post_compact']['placement_stats']['prune_rate']:.2f}"))
+    return section
 
 
 def _drive(srv, rng, bursts: int, centers=None) -> dict:
@@ -156,6 +263,12 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
             f"qps={r['qps']:.1f} msgs={r['mean_messages']:.1f} "
             f"rounds={r['mean_rounds']:.1f} "
             f"shards_touched={r['mean_shards_touched']:.2f}"))
+    # placement A/B (store/placement.py): can a *mutable* store's layout
+    # prune like the static one?  balance / affinity / affinity+proximity
+    # against the static cluster-contiguous baseline, pre and post
+    # compaction.
+    report["placement"] = _placement_section(
+        bursts, per_shard=128 if smoke else 1024, emit=emit)
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

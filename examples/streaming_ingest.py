@@ -3,14 +3,19 @@
 The paper's Algorithm 2 assumes a static point set; production stores
 don't get that luxury.  This demo drives the mutable sharded store
 (``store.MutableStore``, DESIGN.md Section 7) through its whole
-lifecycle under a live server:
+lifecycle under a live server — with locality-aware placement
+(``placement="affinity"`` + ``redeal="proximity"``, Section 9) so
+pruned routing (Section 8) pays on the mutable store too:
 
-  1. stream inserts in staged batches (write-ahead buffer -> one device
-     scatter -> epoch swap; watch the generation counter climb),
-  2. query mid-stream — answers report the generation they ran against,
+  1. stream a *clustered* insert mix in staged batches (write-ahead
+     buffer -> one device scatter -> epoch swap; affinity placement
+     routes each point to its nearest live shard centroid),
+  2. query mid-stream — answers report the generation they ran against
+     and how many shards routing had to touch,
   3. delete points and verify tombstones never surface in answers,
-  4. skew the shards until the compaction trigger fires, and watch the
-     repack rebalance them without changing a single answer,
+  4. force a compaction: the proximity re-deal re-tightens the shard
+     summaries, and the same queries now touch *fewer* shards — the
+     locality win, shown end-to-end (shards_touched before vs after),
   5. run queries *concurrently* with an ingest thread: every request
      resolves (epoch swaps drop nothing), spanning many generations.
 
@@ -27,6 +32,7 @@ import threading
 import numpy as np
 
 from repro.configs.knn_service import CONFIG
+from repro.data import sharded_clusters
 from repro.runtime import KnnServer
 from repro.store import MutableStore
 
@@ -48,24 +54,22 @@ def main():
     rng = np.random.default_rng(0)
     cfg = CONFIG.replace(dim=DIM, l=L, l_max=32, bucket_sizes=(1, 2, 4, 8),
                          store_capacity_per_shard=CAP,
-                         store_compact_imbalance_frac=0.25)
-    store = MutableStore(DIM,
-                         capacity_per_shard=cfg.store_capacity_per_shard,
-                         axis_name="machines",
-                         staging_size=cfg.store_staging_size,
-                         compact_tombstone_frac=cfg.store_compact_tombstone_frac,
-                         compact_imbalance_frac=cfg.store_compact_imbalance_frac)
+                         store_compact_imbalance_frac=0.25,
+                         route="pruned",            # summary-pruned routing
+                         placement="affinity",      # locality-aware inserts
+                         redeal="proximity")        # cluster-coherent repack
+    store = MutableStore(DIM, axis_name="machines", **cfg.store_kwargs())
     server = KnnServer(store=store, cfg=cfg)
     server.warmup()
-    q = rng.normal(size=DIM).astype(np.float32)
+    clusters, centers = sharded_clusters(K, 150, DIM, seed=2)
+    stream = clusters[rng.permutation(len(clusters))]   # interleaved arrival
+    q = (centers[3] + rng.normal(size=DIM)).astype(np.float32)
 
-    # -- 1. streaming inserts -------------------------------------------
+    # -- 1. streaming clustered inserts, affinity-placed -----------------
     print(f"capacity {store.total} slots ({K} shards x {CAP}); "
-          f"generation {store.generation}, live {store.live_count}")
-    all_ids = []
+          f"placement={store.placement} redeal={store.redeal}")
     for batch in range(4):
-        ids = store.insert(rng.normal(size=(300, DIM)).astype(np.float32))
-        all_ids.extend(ids.tolist())
+        store.insert(stream[batch * 300:(batch + 1) * 300])
         gen = store.flush()
         print(f"  batch {batch}: +300 points -> generation {gen}, "
               f"live {store.live_count}")
@@ -73,8 +77,10 @@ def main():
     # -- 2. query mid-stream --------------------------------------------
     res = server.query_batch(q[None], [L])[0]
     assert set(res.ids.tolist()) == brute_ids(store, q, L)
+    touched_before = res.shards_touched
     print(f"query @ generation {res.generation}: "
-          f"nearest ids {sorted(res.ids.tolist())} (matches brute force)")
+          f"nearest ids {sorted(res.ids.tolist())} (matches brute force), "
+          f"shards touched {touched_before}/{K}")
 
     # -- 3. deletes: tombstones never surface ---------------------------
     victims = set(res.ids[:3].tolist())
@@ -86,17 +92,17 @@ def main():
     print(f"deleted {sorted(victims)} -> generation {gen}; new answer "
           f"excludes them and matches brute force")
 
-    # -- 4. skew the shards until compaction rebalances -----------------
-    ids, _ = store.live_arrays()
-    store.delete(ids[: len(ids) // 2])          # concentrated deletes skew
-    store.flush()
-    s = store.stats
-    print(f"compactions so far: {s.compactions} "
-          f"(last reason: {s.last_compact_reason})")
+    # -- 4. compaction: proximity re-deal tightens the routing ----------
+    store.compact()
     res = server.query_batch(q[None], [L])[0]
     assert set(res.ids.tolist()) == brute_ids(store, q, L)
-    print(f"post-compaction answer still matches brute force "
-          f"(generation {res.generation})")
+    print(f"compaction (reason: {store.stats.last_compact_reason}) "
+          f"re-dealt by proximity -> generation {res.generation}; "
+          f"same answer, shards touched {touched_before} -> "
+          f"{res.shards_touched}")
+    print(f"  live histogram {server.placement_stats()['live_per_shard']}, "
+          f"prune rate so far "
+          f"{server.placement_stats()['prune_rate']:.2f}")
 
     # -- 5. queries under concurrent ingest -----------------------------
     stop = threading.Event()

@@ -79,9 +79,41 @@ class KnnServiceConfig:
     store_compact_tombstone_frac: float = 0.35
     # ...or when (max_live - min_live) / capacity exceeds this skew.
     store_compact_imbalance_frac: float = 0.5
+    # Placement subsystem (store/placement.py): "balance" sends each
+    # applied insert to the emptiest shard; "affinity" sends it to the
+    # nearest live summary centroid so clusters stay shard-coherent and
+    # route="pruned" can skip shards on store-backed serving too.
+    placement: str = "balance"
+    # Affinity balance guardrail: only shards within this many live
+    # points of the global minimum are eligible, so insert-only streams
+    # can never skew live counts beyond guard_slack + 1 — far below the
+    # compaction imbalance trigger, which therefore never thrashes.
+    placement_guard_slack: int = 32
+    # Compaction re-deal mode: "round_robin" deals live points by id;
+    # "proximity" re-deals them to Lloyd-centroid-owned shards (balanced
+    # to within one, ids stable) so a repack *restores* locality instead
+    # of smearing it.
+    redeal: str = "round_robin"
 
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)
+
+    def store_kwargs(self) -> dict:
+        """MutableStore construction kwargs this config pins — the single
+        source of service tuning extends to the store: capacity, staging,
+        compaction triggers, placement policy, re-deal mode, and the
+        routing sketch (matched to route_num_projections/route_proj_seed
+        so a store-backed ``route="pruned"`` server always constructs)."""
+        return dict(
+            capacity_per_shard=self.store_capacity_per_shard,
+            staging_size=self.store_staging_size,
+            compact_tombstone_frac=self.store_compact_tombstone_frac,
+            compact_imbalance_frac=self.store_compact_imbalance_frac,
+            placement=self.placement,
+            placement_guard_slack=self.placement_guard_slack,
+            redeal=self.redeal,
+            summary_projections=self.route_num_projections,
+            summary_seed=self.route_proj_seed)
 
 
 CONFIG = KnnServiceConfig()

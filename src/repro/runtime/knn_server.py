@@ -41,6 +41,14 @@ k-machine message bill (``QueryResult.shards_touched``).  Answers are
 bit-identical to ``route="exact"`` — the property harness
 tests/test_routing.py enforces this, DESIGN.md Section 8 explains why.
 benchmarks/bench_serve.py runs the exact-vs-pruned A/B.
+
+How much a store-backed server can actually prune is the store's
+placement policy's doing (store/placement.py, DESIGN.md Section 9):
+``placement="affinity"`` + ``redeal="proximity"`` keep clusters
+shard-coherent so routing skips shards; ``placement_stats()`` surfaces
+the per-shard live histogram and the realized prune rate.
+benchmarks/bench_serve.py runs the placement A/B on a clustered
+streaming-ingest workload.
 """
 
 from __future__ import annotations
@@ -116,12 +124,21 @@ class ServerStats:
     batches: int = 0
     padded_rows: int = 0
     bucket_counts: dict = dataclasses.field(default_factory=dict)
+    # Routing effectiveness (route="pruned" dispatches only): summed
+    # touched-shard counts and the batches they came from, the inputs to
+    # KnnServer.placement_stats()'s prune rate.
+    touched_shards: int = 0
+    routed_batches: int = 0
 
-    def observe(self, bucket: int, n_real: int):
+    def observe(self, bucket: int, n_real: int,
+                touched: Optional[int] = None):
         self.queries += n_real
         self.batches += 1
         self.padded_rows += bucket - n_real
         self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+        if touched is not None:
+            self.touched_shards += touched
+            self.routed_batches += 1
 
 
 @dataclasses.dataclass
@@ -344,6 +361,33 @@ class KnnServer:
                     summ)
         return (self._points, self._ids), 0, self._summaries
 
+    def placement_stats(self) -> dict:
+        """Locality of the layout being served, as routing sees it.
+
+        ``live_per_shard``: per-shard live histogram (the balance the
+        placement guardrail and the compactor defend; uniform
+        ``m_local`` for a static server).  ``prune_rate``: fraction of
+        shard visits the summary lower-bound test avoided across all
+        routed dispatches so far — ``1 − touched/(batches·k)``, 0.0
+        until a ``route="pruned"`` batch has run.  Benchmarks read this
+        after an ingest phase to report the post-ingest prune rate per
+        placement policy (DESIGN.md Section 9).
+        """
+        with self._cv:
+            touched = self.stats.touched_shards
+            routed = self.stats.routed_batches
+        if self._store is not None:
+            hist = [int(v) for v in self._store.live_per_shard]
+            placement = self._store.placement
+            redeal = self._store.redeal
+        else:
+            hist = [self.m_local] * self.k
+            placement = redeal = "static"
+        rate = 1.0 - touched / (routed * self.k) if routed else 0.0
+        return {"placement": placement, "redeal": redeal,
+                "live_per_shard": hist, "routed_batches": routed,
+                "prune_rate": rate}
+
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
         operands, _, _ = self._backing_arrays()
@@ -464,7 +508,9 @@ class KnnServer:
 
         rounds, messages = self._accounting(iters, touched)
         with self._cv:
-            self.stats.observe(bucket, n)
+            self.stats.observe(
+                bucket, n,
+                touched=touched if self.cfg.route == "pruned" else None)
         for row, rec in enumerate(chunk):
             # ascending by distance (gather_selected packs by shard rank,
             # not by distance; l is small, so sort host-side — this also

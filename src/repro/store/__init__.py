@@ -1,10 +1,16 @@
 """Mutable sharded point store — streaming ingest/deletes under the
-static-shape query path, with epoch-swapped serving (DESIGN.md Section 7).
+static-shape query path, with epoch-swapped serving (DESIGN.md Section 7),
+pruned shard routing (Section 8), and locality-aware placement
+(Section 9).
 """
 
 from repro.store.mutable import (ID_SENTINEL, IngestStats, MutableStore,
                                  StoreFullError, StoreSnapshot)
 from repro.store.compaction import CompactionDecision, evaluate, repack
+from repro.store.placement import (AffinityPlacement, BalancePlacement,
+                                   PlacementPolicy, PlacementView,
+                                   lloyd_centroids, make_placement,
+                                   repack_proximity)
 from repro.store.summaries import (ShardSummaries, SummaryMaintainer,
                                    build_summaries, lower_bounds,
                                    route_shards, summary_invariants,
@@ -13,6 +19,9 @@ from repro.store.summaries import (ShardSummaries, SummaryMaintainer,
 __all__ = [
     "MutableStore", "StoreSnapshot", "StoreFullError", "IngestStats",
     "ID_SENTINEL", "CompactionDecision", "evaluate", "repack",
+    "PlacementPolicy", "PlacementView", "BalancePlacement",
+    "AffinityPlacement", "make_placement", "lloyd_centroids",
+    "repack_proximity",
     "ShardSummaries", "SummaryMaintainer", "build_summaries",
     "lower_bounds", "upper_bounds", "route_shards", "summary_invariants",
 ]

@@ -10,12 +10,15 @@ mutations:
   regardless — XLA shapes are fixed), but they consume insert headroom:
   a shard's free space is only its untouched tail.
 
-* **Imbalance.**  Inserts land on the emptiest shard, but deletes land
-  wherever the victim lives, so live counts drift apart.  Skewed shards
-  hurt twice: per-machine candidate quality degrades (the Duan/Qiao/Cheng
-  argument — each machine's local answer should be drawn from a
-  comparably-sized sample), and a full shard rejects inserts while its
-  neighbors sit half empty.
+* **Imbalance.**  Inserts land where the store's placement policy
+  (``store/placement.py``) sends them — the emptiest shard under
+  ``balance``, the nearest-centroid shard within the guardrail band
+  under ``affinity`` — but deletes land wherever the victim lives, so
+  live counts drift apart.  Skewed shards hurt twice: per-machine
+  candidate quality degrades (the Duan/Qiao/Cheng argument — each
+  machine's local answer should be drawn from a comparably-sized
+  sample), and a full shard rejects inserts while its neighbors sit
+  half empty.
 
 The trigger math (:func:`evaluate`) watches both with one scalar each:
 
@@ -28,7 +31,11 @@ round-robin in ascending-id order, so shard live counts differ by at most
 one and every shard's occupied region is a dense prefix (the whole tail
 becomes insert headroom again).  Ids are stable across a repack — only
 slots move — so a repack is invisible to clients except as a generation
-bump (DESIGN.md Section 7).
+bump (DESIGN.md Section 7).  Stores built with ``redeal="proximity"``
+repack through :func:`repro.store.placement.repack_proximity` instead —
+same invariants (balance within one, dense prefixes, id stability), but
+destinations follow Lloyd centroids so clusters stay shard-coherent
+(DESIGN.md Section 9).
 """
 
 from __future__ import annotations

@@ -29,14 +29,22 @@ up the repo's static-shape discipline:
   (``runtime/knn_server.py``) reports the generation each answer was
   computed against.
 
-* **Compaction / rebalance** (``store/compaction.py``).  Deletes leave
-  tombstones; inserts fill the emptiest shard's tail.  When tombstone
+* **Placement policies** (``store/placement.py``).  Deletes leave
+  tombstones; each applied insert asks the store's placement policy for
+  a destination shard — ``balance`` (the emptiest-shard rule) or
+  ``affinity`` (nearest live summary centroid under a balance
+  guardrail), so a clustered stream can keep locality that pruned
+  routing (Section 8) converts into skipped shards.
+
+* **Compaction / rebalance** (``store/compaction.py``).  When tombstone
   density or shard imbalance crosses its threshold (or a shard's tail
   runs out while global space remains), the store repacks live points
   into dense, balanced prefixes — one full re-upload, one generation
-  bump, ids stable throughout.
+  bump, ids stable throughout.  ``redeal="round_robin"`` deals by id;
+  ``redeal="proximity"`` re-deals by Lloyd-centroid affinity under the
+  same balanced-within-one guarantee (``store/placement.py``).
 
-Protocol details and the trigger math: DESIGN.md Section 7.
+Protocol details and the trigger math: DESIGN.md Sections 7 and 9.
 """
 
 from __future__ import annotations
@@ -51,6 +59,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel.compat import make_mesh
 from repro.store import compaction
+from repro.store import placement as placement_mod
 from repro.store import summaries as summaries_mod
 
 ID_SENTINEL = 2**31 - 1
@@ -109,9 +118,14 @@ class MutableStore:
                  compact_imbalance_frac: float = 0.5,
                  auto_compact: bool = True, with_values: bool = False,
                  track_history: bool = False,
-                 summary_projections: int = 8, summary_seed: int = 0):
+                 summary_projections: int = 8, summary_seed: int = 0,
+                 placement="balance", placement_guard_slack: int = 32,
+                 redeal: str = "round_robin"):
         if capacity_per_shard < 1:
             raise ValueError("capacity_per_shard must be >= 1")
+        if redeal not in ("round_robin", "proximity"):
+            raise ValueError(f"redeal must be 'round_robin' or 'proximity', "
+                             f"got {redeal!r}")
         self.dim = int(dim)
         self.axis_name = axis_name
         self.mesh = mesh if mesh is not None else make_mesh(
@@ -124,6 +138,14 @@ class MutableStore:
         self.compact_imbalance_frac = float(compact_imbalance_frac)
         self.auto_compact = bool(auto_compact)
         self.with_values = bool(with_values)
+        # Placement subsystem (store/placement.py): the policy object that
+        # places every applied insert, and the repack mode that re-deals
+        # live points at compaction.
+        self._placement = placement_mod.make_placement(
+            placement, guard_slack=placement_guard_slack)
+        self.placement = self._placement.name
+        self.placement_guard_slack = int(placement_guard_slack)
+        self.redeal = str(redeal)
         self.stats = IngestStats()
 
         self._lock = threading.RLock()
@@ -367,7 +389,7 @@ class MutableStore:
 
         for op in ops:
             if op.kind == "insert":
-                j = self._pick_shard_locked()
+                j = self._pick_shard_locked(op.point)
                 if j < 0:
                     # Every shard is at its high-water mark but global
                     # capacity remains (staging checked it): reclaim
@@ -377,7 +399,7 @@ class MutableStore:
                     repacked = True
                     self.stats.forced_compactions += 1
                     self.stats.last_compact_reason = "forced: all shards at high-water"
-                    j = self._pick_shard_locked()
+                    j = self._pick_shard_locked(op.point)
                     assert j >= 0, "repack must free tail space"
                 slot = j * self.cap + int(self._used[j])
                 self._used[j] += 1
@@ -452,19 +474,40 @@ class MutableStore:
             valid=jax.device_put(self._valid.copy(), self._sharding),
             live=int(self._live.sum()))
 
-    def _pick_shard_locked(self) -> int:
-        """Balance-aware placement: the least-loaded shard with tail space
-        (Duan/Qiao-style shard balance), smallest index on ties; -1 if no
-        shard has tail space."""
-        open_mask = self._used < self.cap
-        if not open_mask.any():
-            return -1
-        live = np.where(open_mask, self._live, np.iinfo(np.int64).max)
-        return int(np.argmin(live))
+    def _pick_shard_locked(self, point=None) -> int:
+        """Policy-dispatched placement (store/placement.py): hand the
+        configured policy the live/used counts — plus the summary
+        maintainer's centroid view, if the policy pays attention to it —
+        and get back a destination shard; -1 if no shard has tail space
+        (the caller then repacks and retries)."""
+        if self._placement.uses_centroids:
+            centroids, radii, occupied = self._summ.placement_view()
+        else:
+            centroids = radii = occupied = None
+        return self._placement.pick(point, placement_mod.PlacementView(
+            live=self._live, used=self._used, cap=self.cap,
+            centroids=centroids, radii=radii, occupied=occupied))
 
     def _repack_locked(self):
-        res = compaction.repack(self._pts, self._ids, self._valid,
-                                self.k, self.cap, id_sentinel=ID_SENTINEL)
+        if self.redeal == "proximity":
+            centroids, _, occupied = self._summ.placement_view()
+            # Quota slack shares the placement guardrail knob, clamped so
+            # a re-deal can never leave a skew that would immediately
+            # re-arm the compactor: post-redeal max-min is bounded by
+            # k*(slack+1), so slack < imbalance_frac*cap/k - 1 keeps the
+            # worst case under the trigger.
+            slack = min(self.placement_guard_slack,
+                        max(0, int(self.compact_imbalance_frac * self.cap
+                                   / self.k) - 1))
+            res = placement_mod.repack_proximity(
+                self._pts, self._ids, self._valid, self.k, self.cap,
+                id_sentinel=ID_SENTINEL, balance_slack=slack,
+                seed_centroids=centroids[occupied] if occupied.any()
+                else None)
+        else:
+            res = compaction.repack(self._pts, self._ids, self._valid,
+                                    self.k, self.cap,
+                                    id_sentinel=ID_SENTINEL)
         self._pts, self._ids, self._valid = res.points, res.ids, res.valid
         self._slot_of = res.slot_of
         self._live, self._used = res.live, res.used

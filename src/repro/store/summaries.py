@@ -183,6 +183,14 @@ class SummaryMaintainer:
             self._lo[j] = pr.min(0)
             self._hi[j] = pr.max(0)
 
+    def placement_view(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(centroids (k, dim), radii (k,), occupied (k,) bool) of the
+        applied state — what the affinity placement policy and the
+        proximity re-deal consult (store/placement.py; store lock
+        held)."""
+        n = np.maximum(self._n, 1)[:, None]
+        return self._sum / n, self._radius.copy(), self._n > 0
+
     def freeze(self, generation: int) -> ShardSummaries:
         n = np.maximum(self._n, 1)[:, None]
         return ShardSummaries(

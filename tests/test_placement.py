@@ -1,0 +1,388 @@
+"""Locality-aware placement (store/placement.py) — the invariants.
+
+Three contracts under test (DESIGN.md Section 9):
+
+* **Placement never changes answers.**  Where a point lives only decides
+  how much routing can prune, never what the service returns: under
+  interleaved insert/delete/update/compact histories, answers stay
+  bit-identical across ``placement`` in {balance, affinity} x ``redeal``
+  in {round_robin, proximity}, and identical to ``route="exact"``.
+* **The affinity guardrail bounds skew.**  Insert-only histories keep
+  ``max_live - min_live <= guard_slack + 1`` after every flush — the
+  balance condition (Duan/Qiao/Cheng) the policy may never trade away
+  for locality.
+* **Proximity re-deal preserves the repack contract.**  Ids stable,
+  dense per-shard prefixes, quota-bounded balance, deterministic — and
+  cluster-coherent where round-robin smears.
+
+Property-based via hypothesis when installed (requirements-dev.txt);
+otherwise the same case bodies run over a seeded parameter grid, so the
+properties are exercised either way (never bare-skipped).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.data import sharded_clusters
+from repro.runtime import KnnServer
+from repro.store import (AffinityPlacement, BalancePlacement, MutableStore,
+                         PlacementView, make_placement, repack_proximity,
+                         route_shards)
+from repro.store.placement import lloyd_centroids
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    given = None
+
+K = 8
+DIM = 8
+CAP = 128
+B = 4
+L_MAX = 256
+COMBOS = (("balance", "round_robin"), ("balance", "proximity"),
+          ("affinity", "round_robin"), ("affinity", "proximity"))
+
+
+def _view(live, used, cap, centroids=None, radii=None):
+    k = len(live)
+    live = np.asarray(live, np.int64)
+    used = np.asarray(used, np.int64)
+    if centroids is None:
+        centroids = np.zeros((k, DIM))
+        occupied = np.zeros(k, bool)
+    else:
+        centroids = np.asarray(centroids, np.float64)
+        occupied = live > 0
+    radii = np.zeros(k) if radii is None else np.asarray(radii, np.float64)
+    return PlacementView(live=live, used=used, cap=cap, centroids=centroids,
+                         radii=radii, occupied=occupied)
+
+
+# ---- answers are placement-invariant (the tentpole property) -------------
+
+def test_answers_bit_identical_across_placement_and_redeal(mesh8):
+    """One long interleaved insert/delete/update/compact history, applied
+    identically to one store per placement x redeal combination; after
+    every phase all pruned servers must answer bit-identically, and
+    identically to a route="exact" reference — placement decides the
+    layout, the layout decides the pruning, and neither may reach the
+    answer bytes."""
+    rng = np.random.default_rng(42)
+    clusters, centers = sharded_clusters(K, 40, DIM, rng=rng)
+    stores = {c: MutableStore(DIM, capacity_per_shard=CAP, axis_name="x",
+                              staging_size=64, placement=c[0], redeal=c[1],
+                              placement_guard_slack=8)
+              for c in COMBOS}
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=(B,))
+    servers = {c: KnnServer(store=s, cfg=cfg.replace(route="pruned"))
+               for c, s in stores.items()}
+    exact = KnnServer(store=stores[COMBOS[0]], cfg=cfg.replace(route="exact"))
+
+    def everybody(fn):
+        for s in stores.values():
+            fn(s)
+
+    def check(tag):
+        q = np.concatenate([
+            (centers[rng.integers(0, K, B - 1)]
+             + rng.normal(size=(B - 1, DIM))),
+            rng.normal(size=(1, DIM))]).astype(np.float32)
+        ls = [1, 8, 256, 33]
+        ref = exact.query_batch(q, ls)
+        for combo, srv in servers.items():
+            res = srv.query_batch(q, ls)
+            for a, b in zip(ref, res):
+                assert a.dists.tobytes() == b.dists.tobytes(), (tag, combo)
+                assert np.array_equal(a.ids, b.ids), (tag, combo)
+                assert a.generation == b.generation, (tag, combo)
+
+    # phase 1: clustered streaming ingest (cluster-interleaved order)
+    stream = clusters[rng.permutation(len(clusters))]
+    for i in range(0, len(stream), 80):
+        everybody(lambda s: (s.insert(stream[i:i + 80]), s.flush()))
+    check("ingest")
+
+    # phase 2: interleaved deletes + inserts + updates in one flush
+    ids = stores[COMBOS[0]].live_arrays()[0]
+    victims, moved = ids[::3][:50], ids[1::3][:20]
+    fresh = (centers[rng.integers(0, K, 60)]
+             + rng.normal(size=(60, DIM))).astype(np.float32)
+    new_pos = rng.normal(size=(len(moved), DIM)).astype(np.float32)
+
+    def phase2(s):
+        s.delete(victims)
+        s.insert(fresh)
+        s.update(moved, new_pos)
+        s.flush()
+    everybody(phase2)
+    check("churn")
+
+    # phase 3: forced compaction — the point where the redeal modes
+    # diverge most (round-robin smears, proximity re-clusters)
+    everybody(lambda s: s.compact())
+    check("compact")
+
+    # phase 4: post-redeal inserts land through the policy again
+    tail = (centers[rng.integers(0, K, 48)]
+            + rng.normal(size=(48, DIM))).astype(np.float32)
+    everybody(lambda s: (s.insert(tail), s.flush()))
+    check("post-redeal ingest")
+
+    # and the locality the whole subsystem exists for: on the clustered
+    # workload the affinity+proximity store prunes at least as hard as
+    # every other combo (strictly harder than balance in practice)
+    q = (centers[rng.integers(0, K, B)]
+         + rng.normal(size=(B, DIM))).astype(np.float32)
+    touched = {c: route_shards(stores[c].summaries(), q,
+                               np.full(B, 8)).sum(1).mean()
+               for c in COMBOS}
+    assert touched[("affinity", "proximity")] <= min(touched.values()) + 1e-9
+
+
+# ---- the guardrail bound --------------------------------------------------
+
+def _guardrail_case(g, seed, redeal):
+    rng = np.random.default_rng(seed)
+    clusters, _ = sharded_clusters(K, 40, DIM, rng=rng)
+    stream = clusters[rng.permutation(len(clusters))]
+    store = MutableStore(DIM, capacity_per_shard=CAP, axis_name="x",
+                         staging_size=16, placement="affinity",
+                         placement_guard_slack=g, redeal=redeal,
+                         auto_compact=False)
+    for i in range(0, len(stream), 16):
+        store.insert(stream[i:i + 16])
+        store.flush()
+        live = store.live_per_shard
+        assert live.max() - live.min() <= g + 1, (g, seed, i)
+    # the bound survives a re-deal: post-compact inserts flow through the
+    # guardrail again, and the proximity quota itself is slack-bounded
+    store.compact()
+    n = store.live_count
+    assert store.live_per_shard.max() <= -(-n // K) + g + 1
+    store.insert(stream[:16] * 0.5)
+    store.flush()
+    if redeal == "round_robin":       # compact left max-min <= 1
+        live = store.live_per_shard
+        assert live.max() - live.min() <= g + 1
+
+
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(g=st.integers(min_value=0, max_value=12),
+           seed=st.integers(min_value=0, max_value=99),
+           redeal=st.sampled_from(("round_robin", "proximity")))
+    def test_affinity_guardrail_bound(g, seed, redeal):
+        _guardrail_case(g, seed, redeal)
+else:
+    @pytest.mark.parametrize("redeal", ("round_robin", "proximity"))
+    @pytest.mark.parametrize("g", (0, 3, 8))
+    def test_affinity_guardrail_bound(g, redeal):
+        for seed in (0, 7):
+            _guardrail_case(g, seed, redeal)
+
+
+# ---- proximity re-deal: the repack contract -------------------------------
+
+def _redeal_case(seed, n_live, slack):
+    rng = np.random.default_rng(seed)
+    cap = max(2, -(-n_live // K) + 3)
+    total = K * cap
+    pts = np.zeros((total, DIM), np.float32)
+    ids = np.full(total, 2**31 - 1, np.int32)
+    valid = np.zeros(total, bool)
+    slots = rng.choice(total, size=n_live, replace=False)
+    pts[slots] = rng.normal(scale=4.0, size=(n_live, DIM))
+    ids[slots] = rng.permutation(10 * total)[:n_live]
+    valid[slots] = True
+    before = {int(i): pts[s].copy() for i, s in zip(ids[slots], slots)}
+
+    res = repack_proximity(pts, ids, valid, K, cap, id_sentinel=2**31 - 1,
+                           balance_slack=slack)
+    # id set preserved, each id still naming the same point
+    assert set(res.slot_of) == set(before)
+    for i, s in res.slot_of.items():
+        assert res.valid[s] and res.ids[s] == i
+        assert np.array_equal(res.points[s], before[i])
+    # dense prefixes, used == live, quota-bounded balance
+    for j in range(K):
+        sl = slice(j * cap, (j + 1) * cap)
+        assert res.valid[sl][:res.live[j]].all()
+        assert not res.valid[sl][res.live[j]:].any()
+        assert (res.ids[sl][res.live[j]:] == 2**31 - 1).all()
+    assert np.array_equal(res.used, res.live)
+    assert res.live.sum() == n_live
+    if n_live:
+        assert res.live.max() <= min(cap, -(-n_live // K) + slack)
+    # deterministic: same inputs, same layout
+    res2 = repack_proximity(pts, ids, valid, K, cap, id_sentinel=2**31 - 1,
+                            balance_slack=slack)
+    assert np.array_equal(res.points, res2.points)
+    assert np.array_equal(res.ids, res2.ids)
+
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=999),
+           n_live=st.integers(min_value=0, max_value=200),
+           slack=st.integers(min_value=0, max_value=16))
+    def test_repack_proximity_contract(seed, n_live, slack):
+        _redeal_case(seed, n_live, slack)
+else:
+    @pytest.mark.parametrize("seed,n_live,slack", [
+        (0, 0, 0), (1, 1, 0), (2, 7, 2), (3, 64, 0), (4, 173, 5),
+        (5, 200, 16), (6, 99, 1)])
+    def test_repack_proximity_contract(seed, n_live, slack):
+        _redeal_case(seed, n_live, slack)
+
+
+def test_repack_proximity_single_shard():
+    """k=1 degenerates to a dense repack (no second-best centroid to
+    regret over); the contract must hold all the same."""
+    rng = np.random.default_rng(3)
+    cap = 16
+    pts = rng.normal(size=(cap, DIM)).astype(np.float32)
+    ids = np.arange(cap, dtype=np.int32)
+    valid = np.ones(cap, bool)
+    valid[::4] = False
+    res = repack_proximity(pts, ids, valid, 1, cap, id_sentinel=2**31 - 1)
+    assert res.live[0] == valid.sum()
+    assert res.valid[:res.live[0]].all() and not res.valid[res.live[0]:].any()
+    assert set(res.slot_of) == set(ids[valid].tolist())
+
+
+def test_repack_proximity_is_cluster_coherent():
+    """Equal-size well-separated clusters re-deal to exactly one cluster
+    per shard (the locality round-robin destroys), even from scratch —
+    farthest-point seeding plus Lloyd must find them without shard-summary
+    seeds."""
+    per = 24
+    pts32, centers = sharded_clusters(K, per, DIM, seed=9)
+    rng = np.random.default_rng(9)
+    order = rng.permutation(K * per)           # scatter clusters over slots
+    cap = per + 4
+    total = K * cap
+    pts = np.zeros((total, DIM), np.float32)
+    ids = np.full(total, 2**31 - 1, np.int32)
+    valid = np.zeros(total, bool)
+    pts[:K * per] = pts32[order]
+    ids[:K * per] = np.arange(K * per)
+    valid[:K * per] = True
+
+    res = repack_proximity(pts, ids, valid, K, cap, id_sentinel=2**31 - 1,
+                           balance_slack=0)
+    for j in range(K):
+        pj = res.points[j * cap:(j + 1) * cap][:res.live[j]]
+        labels = np.argmin(((pj[:, None, :].astype(np.float64)
+                             - centers[None]) ** 2).sum(-1), axis=1)
+        assert len(set(labels.tolist())) == 1, j
+
+
+def test_lloyd_centroids_deterministic_and_degenerate_safe():
+    rng = np.random.default_rng(1)
+    pts = rng.normal(size=(50, DIM))
+    a = lloyd_centroids(pts, K, iters=3)
+    b = lloyd_centroids(pts, K, iters=3)
+    assert np.array_equal(a, b)
+    # identical seeds may not collapse the iteration: all-equal seed rows
+    # must still yield k usable centroids
+    seeds = np.zeros((K, DIM))
+    c = lloyd_centroids(pts, K, seed_centroids=seeds, iters=4)
+    assert c.shape == (K, DIM)
+    assert np.isfinite(c).all()
+    # fewer points than centroids: every point is still owned
+    few = rng.normal(size=(3, DIM))
+    c = lloyd_centroids(few, K, iters=2)
+    assert np.isfinite(c).all()
+
+
+# ---- policy units ---------------------------------------------------------
+
+def test_make_placement_factory():
+    assert isinstance(make_placement("balance"), BalancePlacement)
+    aff = make_placement("affinity", guard_slack=5)
+    assert isinstance(aff, AffinityPlacement) and aff.guard_slack == 5
+    custom = BalancePlacement()
+    assert make_placement(custom) is custom            # pluggable path
+    with pytest.raises(ValueError, match="unknown placement"):
+        make_placement("proximity")
+    with pytest.raises(ValueError, match="guard_slack"):
+        AffinityPlacement(guard_slack=-1)
+
+
+def test_balance_policy_matches_original_rule():
+    pol = BalancePlacement()
+    v = _view(live=[3, 1, 1, 5], used=[3, 1, 1, 5], cap=8)
+    assert pol.pick(None, v) == 1                      # emptiest, lowest idx
+    v = _view(live=[0, 0], used=[2, 2], cap=2)
+    assert pol.pick(None, v) == -1                     # no tail anywhere
+
+
+def test_affinity_policy_guardrail_and_fallbacks():
+    cents = np.zeros((4, DIM))
+    cents[:, 0] = [0.0, 10.0, 20.0, 30.0]
+    radii = np.full(4, 1.0)
+    pol = AffinityPlacement(guard_slack=2)
+    p = np.zeros(DIM)
+    p[0] = 19.0                                        # nearest: shard 2
+    v = _view(live=[4, 4, 4, 4], used=[4, 4, 4, 4], cap=16,
+              centroids=cents, radii=radii)
+    assert pol.pick(p, v) == 2
+    # guardrail: shard 2 too far above the minimum -> next-nearest wins
+    v = _view(live=[4, 4, 7, 4], used=[4, 4, 7, 4], cap=16,
+              centroids=cents, radii=radii)
+    assert pol.pick(p, v) == 1
+    # high-water mark: a full shard is never picked, however near
+    v = _view(live=[4, 4, 4, 4], used=[4, 4, 16, 4], cap=16,
+              centroids=cents, radii=radii)
+    assert pol.pick(p, v) != 2
+    # tombstone corner: the min-live shard has no tail and the guardrail
+    # empties the eligible set -> balance fallback over open shards
+    v = _view(live=[0, 9, 9, 9], used=[16, 9, 9, 9], cap=16,
+              centroids=cents, radii=radii)
+    assert pol.pick(p, v) == 1
+    # outsider + empty eligible shard -> seed the empty one
+    v = _view(live=[4, 4, 4, 0], used=[4, 4, 4, 0], cap=16,
+              centroids=cents, radii=radii)
+    far = np.zeros(DIM)
+    far[0] = 100.0
+    assert pol.pick(far, v) == 3
+
+
+def test_store_rejects_bad_placement_config():
+    with pytest.raises(ValueError, match="unknown placement"):
+        MutableStore(DIM, capacity_per_shard=8, axis_name="x",
+                     placement="nearest")
+    with pytest.raises(ValueError, match="redeal"):
+        MutableStore(DIM, capacity_per_shard=8, axis_name="x",
+                     redeal="lloyd")
+
+
+def test_store_accepts_custom_policy_instance():
+    class FirstOpen(BalancePlacement):
+        name = "first-open"
+
+        def pick(self, point, view):
+            open_ = np.flatnonzero(view.used < view.cap)
+            return int(open_[0]) if len(open_) else -1
+
+    store = MutableStore(DIM, capacity_per_shard=4, axis_name="x",
+                         placement=FirstOpen(), auto_compact=False)
+    assert store.placement == "first-open"
+    store.insert(np.zeros((6, DIM), np.float32))
+    store.flush()
+    assert store.live_per_shard[0] == 4                # filled shard 0 first
+    assert store.live_per_shard[1] == 2
+
+
+def test_config_store_kwargs_round_trip():
+    cfg = CONFIG.replace(placement="affinity", redeal="proximity",
+                         placement_guard_slack=7,
+                         store_capacity_per_shard=32)
+    store = MutableStore(DIM, axis_name="x", **cfg.store_kwargs())
+    assert store.placement == "affinity"
+    assert store.redeal == "proximity"
+    assert store.placement_guard_slack == 7
+    assert store.cap == 32
+    assert store.summary_projections == cfg.route_num_projections
