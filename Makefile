@@ -11,9 +11,9 @@ test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
 
 # coverage gate for the query-path packages (ci.yml coverage job):
-# store (mutable/compaction/summaries/placement) and core (Algorithms
-# 1 & 2) must stay above the floor so the routing and placement paths
-# can't silently rot untested.
+# store (mutable/compaction/summaries/placement/adaptive) and core
+# (Algorithms 1 & 2) must stay above the floor so the routing,
+# placement, and adaptive-maintenance paths can't silently rot untested.
 test-cov:
 	$(PYTHONPATH_PREFIX) python -m pytest -q \
 		--cov=repro.store --cov=repro.core \
@@ -30,7 +30,11 @@ bench-serve:
 # proves the benchmark scripts can't silently rot (ci.yml bench-smoke step).
 # bench_serve's placement section exercises placement="affinity" +
 # redeal="proximity" (store/placement.py) in smoke mode too, so the
-# locality-aware write path and the Lloyd re-deal run in CI on every push.
+# locality-aware write path and the Lloyd re-deal run in CI on every push;
+# its adaptive section drives the drifting-cluster store with
+# summary_pivots=2 and hard-asserts one forced re-tighten and one forced
+# split on a tiny store (store/adaptive.py), so both maintenance
+# triggers fire in CI on every push.
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \

@@ -15,9 +15,16 @@ into a *mutable* store under ``placement`` in {balance, affinity} x
 ``redeal`` in {round_robin, proximity}, measured before and after a
 compaction, against a static cluster-contiguous pruned baseline — the
 section that shows store-backed serving pruning like the static layout.
-Emits CSV rows like every other bench module plus ``BENCH_serve.json``
-with sustained queries/sec, p50/p99 request latency, and mean
-rounds/messages/shards_touched per configuration.
+A fourth section runs the adaptive-maintenance A/B (store/adaptive.py)
+on a *drifting-cluster* workload (cluster centers random-walk mid-stream
+under sliding-window churn — repro.data.drifting_clusters): the same
+stream under no maintenance vs scheduled re-tightening vs
+re-tighten+split, measured *before* any compaction against a static
+cluster-contiguous baseline of the final live set — the section that
+shows pruned routing staying effective mid-stream instead of decaying
+until the next compaction.  Emits CSV rows like every other bench module
+plus ``BENCH_serve.json`` with sustained queries/sec, p50/p99 request
+latency, and mean rounds/messages/shards_touched per configuration.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
@@ -178,6 +185,158 @@ def _placement_section(bursts: int, per_shard: int, emit) -> dict:
     return section
 
 
+def _stream_drift(store, pts_steps, window: int, staging: int):
+    """Sliding-window churn: step s inserts that step's points (chunked
+    so the write-ahead buffer flushes several generations per step — the
+    cadence the one-shard-per-flush re-tightening schedule amortizes
+    over) and deletes step s-window's, so the live set is always the
+    last ``window`` steps of the walk."""
+    ids_by_step = []
+    for s, pts in enumerate(pts_steps):
+        step_ids = []
+        for i in range(0, len(pts), staging):
+            step_ids.append(store.insert(pts[i:i + staging]))
+        ids_by_step.append(np.concatenate(step_ids))
+        if s >= window:
+            store.delete(ids_by_step[s - window])
+        store.flush()
+
+
+def _adaptive_section(bursts: int, per_step: int, steps: int, window: int,
+                      retighten_every: int, emit) -> dict:
+    """Adaptive maintenance A/B on the drifting-cluster workload.
+
+    Every variant ingests the identical seeded stream (same points, same
+    sliding-window deletes) into an affinity+proximity store with
+    ``auto_compact=False`` — so the *pre_compact* measurement shows what
+    the summaries alone can still prune mid-stream, with no compaction
+    rebuild to the rescue.  Without maintenance the incremental covering
+    radii span the whole walked path and pruning decays toward all-k;
+    re-tightening shrinks them back to the live window, and the split
+    trigger re-deals shards whose homes the walk left stale.  The static
+    baseline serves the identical final live set cluster-contiguously —
+    the acceptance yardstick (ISSUE 5: adaptive pre-compact within 2x).
+    """
+    from repro.data import drifting_clusters
+    from repro.runtime import KnnServer
+    from repro.store import MutableStore
+    k = common.K_MACHINES
+    stream = list(drifting_clusters(k, per_step, DIM, steps=steps,
+                                    drift=8.0, seed=17))
+    pts_steps = [pts for pts, _ in stream]
+    final_centers = stream[-1][1]
+    cap = (steps + 2) * per_step
+    staging = max(32, per_step)
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+                         sampler="selection", route="pruned",
+                         placement="affinity", redeal="proximity",
+                         store_capacity_per_shard=cap,
+                         store_staging_size=staging, summary_pivots=2)
+    section = {"per_step": per_step, "steps": steps, "window": window,
+               "drift": 8.0, "capacity_per_shard": cap,
+               "retighten_every": retighten_every}
+
+    # static cluster-contiguous reference over the final live set (the
+    # last `window` steps of each cluster's walk, grouped by cluster)
+    static_pts = np.concatenate(
+        [np.concatenate([pts_steps[s][c * per_step:(c + 1) * per_step]
+                         for s in range(steps - window, steps)])
+         for c in range(k)])
+    srv = KnnServer(static_pts, cfg=cfg, mesh=common.kmachine_mesh(),
+                    axis_name="x")
+    srv.warmup()
+    section["static_pruned"] = _drive(
+        srv, np.random.default_rng(23), bursts, centers=final_centers)
+    static_touched = section["static_pruned"]["mean_shards_touched"]
+    emit(common.row("serve_adaptive_static_pruned",
+                    1e6 / section["static_pruned"]["qps"],
+                    f"shards_touched={static_touched:.2f}"))
+
+    variants = (
+        ("none", dict(retighten_every=0, split_radius_factor=0.0)),
+        ("retighten", dict(retighten_every=retighten_every,
+                           split_radius_factor=0.0)),
+        ("retighten_split", dict(retighten_every=retighten_every,
+                                 split_radius_factor=1.0)),
+    )
+    for name, knobs in variants:
+        vcfg = cfg.replace(**knobs)
+        store = MutableStore(DIM, mesh=common.kmachine_mesh(),
+                             axis_name="x", auto_compact=False,
+                             **vcfg.store_kwargs())
+        _stream_drift(store, pts_steps, window, staging)
+        srv = KnnServer(store=store, cfg=vcfg)
+        srv.warmup()
+        entry = {"pre_compact": _drive(srv, np.random.default_rng(23),
+                                       bursts, centers=final_centers)}
+        entry["pre_compact"]["placement_stats"] = srv.placement_stats()
+        store.compact()
+        entry["post_compact"] = _drive(srv, np.random.default_rng(23),
+                                       bursts, centers=final_centers)
+        entry["post_compact"]["placement_stats"] = srv.placement_stats()
+        entry["retightens"] = store.stats.retightens
+        entry["splits"] = store.stats.splits
+        # the pre_compact claim rests on NO other exact rebuild having
+        # run: auto_compact is off, but a full-shard mid-flush forced
+        # repack would rebuild summaries silently — fail loudly instead
+        # of recording an invalid measurement if sizing ever trips it.
+        entry["forced_compactions"] = store.stats.forced_compactions
+        assert store.stats.forced_compactions == 0, (
+            f"{name}: forced repack contaminated the pre_compact "
+            f"measurement — grow capacity_per_shard")
+        entry["pre_vs_static_touched_ratio"] = (
+            entry["pre_compact"]["mean_shards_touched"]
+            / max(static_touched, 1e-9))
+        section[name] = entry
+        emit(common.row(
+            f"serve_adaptive_{name}", 1e6 / entry["pre_compact"]["qps"],
+            f"touched_pre={entry['pre_compact']['mean_shards_touched']:.2f} "
+            f"touched_post={entry['post_compact']['mean_shards_touched']:.2f} "
+            f"ratio_vs_static={entry['pre_vs_static_touched_ratio']:.2f} "
+            f"retightens={entry['retightens']} splits={entry['splits']} "
+            f"max_slack="
+            f"{entry['pre_compact']['placement_stats']['max_summary_slack']:.2f}"))
+    section["forced_tiny"] = _forced_tiny_adaptive()
+    emit(common.row(
+        "serve_adaptive_forced_tiny", 0.0,
+        f"splits={section['forced_tiny']['splits']} "
+        f"retightens={section['forced_tiny']['retightens']}"))
+    return section
+
+
+def _forced_tiny_adaptive() -> dict:
+    """The CI smoke hook (make bench-smoke): one *forced* split and one
+    *forced* re-tightening on a tiny store, hard-asserted — two
+    interleaved far-apart lumps under balance placement smear every
+    shard (radius >> centroid gap), so split_radius_factor=1 must fire
+    on the first flush; retighten_every=1 must re-tighten on the first
+    flush of its store.  Deterministic; a silent regression of either
+    trigger fails the bench, not just a number."""
+    from repro.store import MutableStore
+    rng = np.random.default_rng(3)
+    pts = np.empty((128, DIM), np.float32)
+    pts[0::2] = (rng.normal(size=(64, DIM)) + 40).astype(np.float32)
+    pts[1::2] = (rng.normal(size=(64, DIM)) - 40).astype(np.float32)
+
+    def mk(**knobs):
+        s = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         capacity_per_shard=64, summary_pivots=2,
+                         placement="balance", auto_compact=False, **knobs)
+        s.insert(pts)
+        s.flush()
+        return s
+
+    split_store = mk(split_radius_factor=1.0)
+    tight_store = mk(retighten_every=1)
+    out = {"splits": split_store.stats.splits,
+           "retightens": tight_store.stats.retightens,
+           "post_split_max_radius": float(
+               split_store.summaries().radii.max())}
+    assert out["splits"] >= 1, "split trigger failed to fire"
+    assert out["retightens"] >= 1, "re-tighten schedule failed to fire"
+    return out
+
+
 def _drive(srv, rng, bursts: int, centers=None) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
@@ -269,6 +428,17 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
     # compaction.
     report["placement"] = _placement_section(
         bursts, per_shard=128 if smoke else 1024, emit=emit)
+    # adaptive maintenance A/B (store/adaptive.py): on a drifting-cluster
+    # stream, does pruned routing stay effective *before* any compaction?
+    # no-maintenance vs re-tighten vs re-tighten+split vs the static
+    # layout of the same final live set.
+    report["adaptive"] = _adaptive_section(
+        bursts,
+        per_step=24 if smoke else 96,
+        steps=6 if smoke else 12,
+        window=2 if smoke else 4,
+        retighten_every=16 if smoke else 64,
+        emit=emit)
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

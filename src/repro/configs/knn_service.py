@@ -94,6 +94,25 @@ class KnnServiceConfig:
     # to within one, ids stable) so a repack *restores* locality instead
     # of smearing it.
     redeal: str = "round_robin"
+    # ---- adaptive summary maintenance (store/adaptive.py) ----------------
+    # Pivot balls per shard summary: 1 is the classic single-ball form;
+    # >1 lets one shard host several small clusters without voiding its
+    # routing bounds (the lower bound becomes the min over pivots, still
+    # provably exact).  Store-backed pruned servers must match the store,
+    # like the sketch knobs above.
+    summary_pivots: int = 1
+    # Scheduled exact re-tightening: a shard that absorbs this many ops
+    # since its last exact rebuild becomes due; the store re-tightens at
+    # most ONE due shard per flush (round-robin, O(live·dim) host work) so
+    # covering radii shrink back to the live spread mid-stream instead of
+    # inflating until the next compaction.  0 disables.
+    retighten_every: int = 0
+    # Radius-triggered shard splitting: when a shard's covering radius
+    # exceeds this factor times the gap to its nearest occupied neighbor
+    # centroid (and has grown since its last exact rebuild), the store
+    # schedules its own quota-bounded proximity re-deal instead of
+    # waiting for the tombstone/imbalance compaction trigger.  0 disables.
+    split_radius_factor: float = 0.0
 
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)
@@ -101,9 +120,11 @@ class KnnServiceConfig:
     def store_kwargs(self) -> dict:
         """MutableStore construction kwargs this config pins — the single
         source of service tuning extends to the store: capacity, staging,
-        compaction triggers, placement policy, re-deal mode, and the
-        routing sketch (matched to route_num_projections/route_proj_seed
-        so a store-backed ``route="pruned"`` server always constructs)."""
+        compaction triggers, placement policy, re-deal mode, the routing
+        sketch (matched to route_num_projections/route_proj_seed so a
+        store-backed ``route="pruned"`` server always constructs), and
+        the adaptive-maintenance knobs (summary_pivots matched the same
+        way)."""
         return dict(
             capacity_per_shard=self.store_capacity_per_shard,
             staging_size=self.store_staging_size,
@@ -113,7 +134,10 @@ class KnnServiceConfig:
             placement_guard_slack=self.placement_guard_slack,
             redeal=self.redeal,
             summary_projections=self.route_num_projections,
-            summary_seed=self.route_proj_seed)
+            summary_seed=self.route_proj_seed,
+            summary_pivots=self.summary_pivots,
+            retighten_every=self.retighten_every,
+            split_radius_factor=self.split_radius_factor)
 
 
 CONFIG = KnnServiceConfig()

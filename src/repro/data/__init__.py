@@ -1,6 +1,8 @@
 from repro.data.synthetic import (MarkovTokens, uniform_points,
-                                  gaussian_clusters, sharded_clusters)
+                                  gaussian_clusters, sharded_clusters,
+                                  drifting_clusters)
 from repro.data.pipeline import Prefetcher, lm_batch_specs
 
 __all__ = ["MarkovTokens", "uniform_points", "gaussian_clusters",
-           "sharded_clusters", "Prefetcher", "lm_batch_specs"]
+           "sharded_clusters", "drifting_clusters", "Prefetcher",
+           "lm_batch_specs"]

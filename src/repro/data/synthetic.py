@@ -63,6 +63,34 @@ def gaussian_clusters(n: int, dim: int, num_classes: int, seed: int = 0):
     return pts.astype(np.float32), labels.astype(np.int32)
 
 
+def drifting_clusters(k: int, per_step: int, dim: int, *, steps: int,
+                      drift: float = 4.0, scale: float = 12.0,
+                      seed: int = 0):
+    """Drifting-cluster stream: k gaussian clusters whose centers take a
+    length-``drift`` random-walk step between emissions — the workload
+    where reactive affinity placement goes stale and incremental summary
+    radii inflate along the walked path (the adaptive-maintenance A/B,
+    benchmarks/bench_serve.py; also driven by tests/test_adaptive.py).
+
+    Yields ``steps`` pairs of (points (k·per_step, dim) f32 cluster-major
+    — rows [c·per_step, (c+1)·per_step) near that step's centers[c] —
+    and centers (k, dim) f64 *as used for that batch*).  Seeded and
+    deterministic: the same (k, per_step, dim, steps, drift, scale, seed)
+    always replays the same stream, so benchmark variants and tests can
+    ingest the identical points under different store policies.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(scale=scale, size=(k, dim))
+    for _ in range(steps):
+        pts = np.concatenate(
+            [centers[c] + rng.normal(size=(per_step, dim))
+             for c in range(k)])
+        yield pts.astype(np.float32), centers.copy()
+        step = rng.normal(size=(k, dim))
+        centers = centers + drift * step / np.maximum(
+            np.linalg.norm(step, axis=1, keepdims=True), 1e-30)
+
+
 def sharded_clusters(k: int, per_shard: int, dim: int, *, scale: float = 8.0,
                      shift: float = 0.0, seed: int = 0, rng=None):
     """One gaussian cluster per shard, laid out contiguously — the

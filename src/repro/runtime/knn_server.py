@@ -49,6 +49,15 @@ shard-coherent so routing skips shards; ``placement_stats()`` surfaces
 the per-shard live histogram and the realized prune rate.
 benchmarks/bench_serve.py runs the placement A/B on a clustered
 streaming-ingest workload.
+
+How long that pruning *stays* effective under churn is the adaptive
+maintenance subsystem's doing (store/adaptive.py, DESIGN.md Section 10):
+multi-pivot summaries (``summary_pivots``), scheduled per-shard exact
+re-tightening (``retighten_every``), and radius-triggered shard
+splitting (``split_radius_factor``) keep the covering bounds tight
+mid-stream; ``placement_stats()`` reports the per-shard
+``summary_slack`` decay probe and the maintenance counters.
+benchmarks/bench_serve.py runs the drifting-cluster adaptive A/B.
 """
 
 from __future__ import annotations
@@ -237,15 +246,19 @@ class KnnServer:
                 self._summaries = summaries_mod.build_summaries(
                     points, self.k,
                     num_projections=cfg.route_num_projections,
-                    seed=cfg.route_proj_seed)
+                    seed=cfg.route_proj_seed,
+                    num_pivots=cfg.summary_pivots)
             elif (store.summary_projections != cfg.route_num_projections
-                    or store.summary_seed != cfg.route_proj_seed):
+                    or store.summary_seed != cfg.route_proj_seed
+                    or store.summary_pivots != cfg.summary_pivots):
                 raise ValueError(
                     f"route summary sketch mismatch: store was built with "
                     f"summary_projections={store.summary_projections}"
-                    f"/summary_seed={store.summary_seed} but cfg asks for "
-                    f"route_num_projections={cfg.route_num_projections}"
-                    f"/route_proj_seed={cfg.route_proj_seed}; "
+                    f"/summary_seed={store.summary_seed}"
+                    f"/summary_pivots={store.summary_pivots} but cfg asks "
+                    f"for route_num_projections={cfg.route_num_projections}"
+                    f"/route_proj_seed={cfg.route_proj_seed}"
+                    f"/summary_pivots={cfg.summary_pivots}; "
                     f"configure the store, or match the config to it")
 
         # Pre-flight kernel-dispatch report, one row per bucket shape:
@@ -362,16 +375,24 @@ class KnnServer:
         return (self._points, self._ids), 0, self._summaries
 
     def placement_stats(self) -> dict:
-        """Locality of the layout being served, as routing sees it.
+        """Locality and bound fidelity of the layout being served, as
+        routing sees it.
 
         ``live_per_shard``: per-shard live histogram (the balance the
         placement guardrail and the compactor defend; uniform
         ``m_local`` for a static server).  ``prune_rate``: fraction of
         shard visits the summary lower-bound test avoided across all
         routed dispatches so far — ``1 − touched/(batches·k)``, 0.0
-        until a ``route="pruned"`` batch has run.  Benchmarks read this
-        after an ingest phase to report the post-ingest prune rate per
-        placement policy (DESIGN.md Section 9).
+        until a ``route="pruned"`` batch has run.  ``summary_slack``:
+        per-shard covering-radius decay (maintained radius minus exact
+        live radius, summaries.summary_slack) — how much certified
+        pruning power incremental maintenance has cost since the last
+        exact rebuild; identically 0.0 for a static server, whose
+        summaries are exact at construction forever.  ``maintenance``:
+        the adaptive subsystem's knobs and counters (re-tightenings,
+        splits — store/adaptive.py).  Benchmarks read this after an
+        ingest phase to report per-policy prune rate and bound decay
+        (DESIGN.md Sections 9 and 10).
         """
         with self._cv:
             touched = self.stats.touched_shards
@@ -380,13 +401,23 @@ class KnnServer:
             hist = [int(v) for v in self._store.live_per_shard]
             placement = self._store.placement
             redeal = self._store.redeal
+            slack = [float(v) for v in self._store.summary_slack()]
+            maintenance = self._store.maintenance_stats()
         else:
             hist = [self.m_local] * self.k
             placement = redeal = "static"
+            slack = [0.0] * self.k
+            maintenance = {"summary_pivots": self.cfg.summary_pivots,
+                           "retighten_every": 0,
+                           "split_radius_factor": 0.0,
+                           "retightens": 0, "splits": 0}
         rate = 1.0 - touched / (routed * self.k) if routed else 0.0
         return {"placement": placement, "redeal": redeal,
                 "live_per_shard": hist, "routed_batches": routed,
-                "prune_rate": rate}
+                "prune_rate": rate,
+                "summary_slack": slack,
+                "max_summary_slack": max(slack) if slack else 0.0,
+                "maintenance": maintenance}
 
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""

@@ -1,0 +1,277 @@
+"""Adaptive summary maintenance — keeping routing bounds tight mid-stream.
+
+PR 3's pruned routing and PR 4's locality placement both rest on per-shard
+summaries (store/summaries.py) whose incremental maintenance is covering
+but *loosening*: every insert/delete inflates the covering radius by the
+centroid drift and deletes never shrink anything, so the certified bounds
+decay ~log n with per-shard ops and pruning dies mid-stream until a full
+compaction re-deal (BENCH_serve.json ``placement`` pre-compact rows).
+PANDA (Patwary et al., 2016) gets its distributed-kNN pruning from
+partition metadata that is kept *tight*, and the k-machine clustering
+line (Bandyapadhyay et al., 2018) shows per-machine coreset-style
+summaries can be refreshed cheaply without global rounds.  This module is
+that subsystem for the mutable store, three mechanisms deep:
+
+* **Multi-pivot summaries** (:class:`AdaptiveMaintainer`, consumed by the
+  bound math in store/summaries.py).  Each shard carries up to ``m``
+  pivot balls whose union covers its live points, alongside the aggregate
+  centroid/radius and the projection sketch.  One shard hosting two small
+  clusters no longer voids its bounds: the aggregate ball must span the
+  inter-cluster gap, but the pivot balls hug each cluster, and the
+  routing lower bound is the min over pivots — still provably sound
+  (every source is an independent triangle-inequality bracket; routing
+  takes the max of lower bounds and min of upper bounds) under the
+  existing f32 slack machinery, so answers stay bit-identical to
+  ``route="exact"`` (tests/test_routing.py).  Pivot centers are *fixed
+  points* between exact rebuilds — an insert inflates the ball it joins
+  (or claims a free pivot slot when it sits outside every ball), a delete
+  leaves the union covering (stale-but-valid) — so per-op cost stays
+  O(m·dim) and no drift bookkeeping is needed.
+
+* **Scheduled exact re-tightening** (:meth:`AdaptiveMaintainer.retighten`
+  + the per-shard op counters behind :meth:`retighten_due`).  A shard
+  whose op count since its last exact rebuild crosses
+  ``retighten_every`` becomes due; the store re-tightens **at most one
+  due shard per flush**, round-robin, each pass an O(live·dim) host-side
+  exact recompute of that shard's aggregate ball, pivot set, and
+  projection intervals — no repack, no device work, no flush stall.
+  Amortized, every bound is at most ``k`` flushes staler than its
+  threshold, and :func:`repro.store.summaries.summary_slack` returns to
+  ~0 shard by shard instead of only at the next global compaction.
+
+* **Radius-triggered split scheduling** (:meth:`split_candidate`).  A
+  shard whose covering radius outgrows the inter-centroid gap
+  (``radius > split_radius_factor · gap-to-nearest-occupied-centroid``)
+  is a shard the layout has failed — either it hosts two clusters or its
+  members smeared along a drift path — and no amount of re-tightening
+  fixes *placement*.  The trigger schedules a quota-bounded proximity
+  re-deal through the existing ``redeal="proximity"`` machinery
+  (store/placement.py) at the current flush, instead of waiting for the
+  tombstone/imbalance compaction trigger that may be far away.  Three
+  guards keep it from thrashing or re-arming the compactor it bypasses:
+  the re-deal runs under the same clamped quota slack as a normal
+  proximity compaction (post-redeal skew stays below the imbalance
+  trigger — compaction.redeal_slack); a *growth guard* re-arms the
+  trigger only once the shard's radius exceeds its value at the last
+  exact rebuild by ``_SPLIT_GROWTH`` (a layout that is merely
+  inseparable — more clusters than shards — triggers at most once, since
+  a repack it cannot improve leaves radii at their exact values); and the
+  store enforces a ``split_cooldown`` of applies between splits.
+
+The store (store/mutable.py) owns the hook points: maintenance runs at
+the tail of ``_apply_locked`` under the store lock, after ops replay and
+only when no repack already rebuilt everything exactly, and the
+maintainer is frozen with every generation exactly like the base class —
+adaptive summaries inherit the generation-coupling invariant
+(``summaries.generation == snapshot.generation`` always).  Pivot math,
+schedule, and the split trigger's non-re-arming argument: DESIGN.md
+Section 10.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.store import summaries as summaries_mod
+
+# Growth-guard hysteresis: a shard re-arms the split trigger only when
+# its covering radius exceeds its last exactly-rebuilt value by this
+# factor — radii that a re-deal already failed to shrink cannot re-fire.
+_SPLIT_GROWTH = 1.1
+
+
+def compute_pivots(points: np.ndarray, m: int):
+    """Exact pivot set of one shard's live points: (pivots (m, dim),
+    radii (m,), count).
+
+    Farthest-point traversal picks up to ``m`` well-spread centers
+    (deterministic: argmax takes the first maximum; stops early when
+    every point coincides with a chosen pivot), then one assignment pass
+    gives each pivot the covering radius of its nearest-pivot members —
+    the union of balls covers the input by construction.  Unused slots
+    stay zero with radius 0 and are ignored by the bound math
+    (``pivot_count`` masks them).  O(m·n·dim).
+    """
+    pts = np.asarray(points, np.float64)
+    n, dim = pts.shape
+    pivots = np.zeros((m, dim))
+    radii = np.zeros(m)
+    if n == 0:
+        return pivots, radii, 0
+    chosen = [int(np.argmax(((pts - pts.mean(0)) ** 2).sum(-1)))]
+    d = ((pts - pts[chosen[0]]) ** 2).sum(-1)
+    while len(chosen) < m:
+        far = int(np.argmax(d))
+        if d[far] <= 0.0:
+            break                     # every point already a chosen pivot
+        chosen.append(far)
+        d = np.minimum(d, ((pts - pts[far]) ** 2).sum(-1))
+    count = len(chosen)
+    pivots[:count] = pts[chosen]
+    dists = np.sqrt(((pts[:, None, :] - pivots[None, :count]) ** 2).sum(-1))
+    assign = dists.argmin(1)
+    for p in range(count):
+        mine = dists[assign == p, p]
+        radii[p] = float(mine.max()) if mine.size else 0.0
+    return pivots, radii, count
+
+
+class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
+    """Summary maintainer with a pivot set per shard and a maintenance
+    schedule; drop-in for :class:`repro.store.summaries.SummaryMaintainer`
+    (the store always builds this one — with ``num_pivots=1`` and both
+    triggers at 0 it degrades to one fixed-center ball per shard and no
+    scheduled work)."""
+
+    def __init__(self, k: int, dim: int, *, num_projections: int = 8,
+                 seed: int = 0, num_pivots: int = 1,
+                 retighten_every: int = 0,
+                 split_radius_factor: float = 0.0):
+        super().__init__(k, dim, num_projections=num_projections, seed=seed)
+        if num_pivots < 1:
+            raise ValueError(f"num_pivots must be >= 1, got {num_pivots}")
+        if retighten_every < 0:
+            raise ValueError("retighten_every must be >= 0 (0 disables)")
+        if split_radius_factor < 0:
+            raise ValueError("split_radius_factor must be >= 0 (0 disables)")
+        self.num_pivots = int(num_pivots)
+        self.retighten_every = int(retighten_every)
+        self.split_radius_factor = float(split_radius_factor)
+        m = self.num_pivots
+        self._piv = np.zeros((k, m, dim))
+        self._piv_r = np.zeros((k, m))
+        self._piv_n = np.zeros(k, np.int64)
+        self._ops_since = np.zeros(k, np.int64)   # ops since exact rebuild
+        self._rr = 0                              # round-robin scan cursor
+        self._radius_at_rebuild = np.zeros(k)     # split growth guard
+
+    # ---- incremental ops (store lock held) ------------------------------
+
+    def insert(self, shard: int, point) -> None:
+        super().insert(shard, point)
+        j = int(shard)
+        p = np.asarray(point, np.float64)
+        c = int(self._piv_n[j])
+        if c == 0:
+            self._piv[j, 0] = p
+            self._piv_r[j, 0] = 0.0
+            self._piv_n[j] = 1
+        else:
+            d = np.sqrt(((self._piv[j, :c] - p) ** 2).sum(-1))
+            if (d > self._piv_r[j, :c]).all() and c < self.num_pivots:
+                # outside every ball with a slot free: claim a new pivot
+                self._piv[j, c] = p
+                self._piv_r[j, c] = 0.0
+                self._piv_n[j] = c + 1
+            else:
+                # join the ball needing the least inflation (covering
+                # either way; min-inflation keeps the union tight)
+                b = int(np.argmin(d - self._piv_r[j, :c]))
+                self._piv_r[j, b] = max(self._piv_r[j, b], float(d[b]))
+        self._ops_since[j] += 1
+
+    def delete(self, shard: int, point) -> None:
+        # Removing a point leaves the pivot-ball union covering
+        # (stale-but-valid, like the aggregate radius); emptied shards
+        # reset through _reset_shard.
+        super().delete(shard, point)
+        j = int(shard)
+        if self._n[j] > 0:
+            self._ops_since[j] += 1
+
+    def _reset_shard(self, j: int) -> None:
+        super()._reset_shard(j)
+        self._piv[j] = 0.0
+        self._piv_r[j] = 0.0
+        self._piv_n[j] = 0
+        self._ops_since[j] = 0
+        self._radius_at_rebuild[j] = 0.0
+
+    # ---- exact recompute -------------------------------------------------
+
+    def _rebuild_shard(self, j: int, pj: np.ndarray) -> None:
+        super()._rebuild_shard(j, pj)
+        piv, rad, cnt = compute_pivots(pj, self.num_pivots)
+        self._piv[j] = piv
+        self._piv_r[j] = rad
+        self._piv_n[j] = cnt
+        self._ops_since[j] = 0
+        self._radius_at_rebuild[j] = self._radius[j]
+
+    def retighten(self, j: int, points: np.ndarray, valid: np.ndarray,
+                  cap: int) -> None:
+        """Exact recompute of shard ``j`` only, from the store mirrors —
+        one shard's O(live·dim) host work, the unit the flush-path
+        schedule pays per trigger."""
+        j = int(j)
+        sl = slice(j * cap, (j + 1) * cap)
+        pts = np.asarray(points, np.float64)
+        pj = pts[sl][np.asarray(valid[sl], bool)]
+        if not len(pj):
+            self._reset_shard(j)
+            return
+        self._rebuild_shard(j, pj)
+
+    # ---- scheduling (store lock held) ------------------------------------
+
+    def retighten_due(self) -> int | None:
+        """The next shard owed an exact re-tightening, or None.
+
+        A shard is due once it has absorbed ``retighten_every`` ops since
+        its last exact rebuild; the scan is round-robin from a persistent
+        cursor, so under sustained churn every due shard is served within
+        k flushes and no shard can starve the others.
+        """
+        if self.retighten_every <= 0:
+            return None
+        for step in range(self.k):
+            j = (self._rr + step) % self.k
+            if self._n[j] > 0 and self._ops_since[j] >= self.retighten_every:
+                self._rr = (j + 1) % self.k
+                return j
+        return None
+
+    def split_candidate(self) -> int | None:
+        """The worst shard whose covering radius outgrew the layout, or
+        None.
+
+        Trigger: ``radius > split_radius_factor · gap`` where gap is the
+        distance to the nearest *other* occupied centroid — a radius that
+        spans a neighbor's territory means the summary can no longer
+        certify anything near that neighbor, which is a placement
+        failure, not a bound-staleness one.  The growth guard
+        (module docstring) only arms shards whose radius actually grew
+        past its last exactly-rebuilt value, so an inseparable layout
+        cannot re-fire the re-deal that already failed to improve it.
+        """
+        if self.split_radius_factor <= 0:
+            return None
+        occ = np.flatnonzero(self._n > 0)     # gaps measure ALL occupied
+        cand = np.flatnonzero(self._n > 1)    # singletons never fire
+        if occ.size < 2 or cand.size == 0:
+            return None
+        cents = self._sum[occ] / self._n[occ, None]
+        cand_cents = self._sum[cand] / self._n[cand, None]
+        gaps = np.sqrt(
+            ((cand_cents[:, None] - cents[None]) ** 2).sum(-1))
+        gaps[cand[:, None] == occ[None, :]] = np.inf       # self-distance
+        gap = gaps.min(1)
+        r = self._radius[cand]
+        armed = r > _SPLIT_GROWTH * self._radius_at_rebuild[cand]
+        ratio = r / np.maximum(gap, 1e-30)
+        fire = armed & (ratio > self.split_radius_factor)
+        if not fire.any():
+            return None
+        return int(cand[np.argmax(np.where(fire, ratio, -np.inf))])
+
+    def freeze(self, generation: int) -> summaries_mod.ShardSummaries:
+        # The single-pivot form freezes WITHOUT pivot fields (the
+        # documented default): one fixed-center ball adds nothing over
+        # the aggregate bound, and default stores keep the classic
+        # summary shape and routing cost.
+        if self.num_pivots == 1:
+            return super().freeze(generation)
+        return super().freeze(generation)._replace(
+            pivots=self._piv.copy(),
+            pivot_radii=self._piv_r.copy(),
+            pivot_count=self._piv_n.copy())

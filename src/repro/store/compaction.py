@@ -36,6 +36,14 @@ repack through :func:`repro.store.placement.repack_proximity` instead —
 same invariants (balance within one, dense prefixes, id stability), but
 destinations follow Lloyd centroids so clusters stay shard-coherent
 (DESIGN.md Section 9).
+
+A third force — *summary decay* (the covering radii behind pruned
+routing inflating under incremental maintenance) — is watched not here
+but by the adaptive subsystem (store/adaptive.py): its radius-triggered
+split schedules a proximity re-deal through the same repack machinery,
+under the same :func:`redeal_slack` quota clamp, so an adaptive re-deal
+can never leave a skew that would immediately re-arm :func:`evaluate`'s
+imbalance trigger (DESIGN.md Section 10).
 """
 
 from __future__ import annotations
@@ -74,6 +82,22 @@ def evaluate(live: np.ndarray, used: np.ndarray, cap: int, *,
             True, f"imbalance {imbalance:.3f} > {imbalance_frac}",
             density, imbalance)
     return CompactionDecision(False, None, density, imbalance)
+
+
+def redeal_slack(guard_slack: int, imbalance_frac: float, cap: int,
+                 k: int) -> int:
+    """Quota slack for a proximity re-deal, clamped so the repack cannot
+    re-arm the compactor it serves.
+
+    The slack shares the placement guardrail knob, but a re-deal may
+    leave a worst-case skew of ``k·(slack+1)``; keeping
+    ``slack < imbalance_frac·cap/k − 1`` bounds that below the imbalance
+    trigger, so neither a compaction-time proximity re-deal nor an
+    adaptive split (store/adaptive.py) can schedule the very repack that
+    would immediately follow it.
+    """
+    return min(int(guard_slack),
+               max(0, int(imbalance_frac * cap / k) - 1))
 
 
 class RepackResult(NamedTuple):

@@ -44,7 +44,17 @@ up the repo's static-shape discipline:
   ``redeal="proximity"`` re-deals by Lloyd-centroid affinity under the
   same balanced-within-one guarantee (``store/placement.py``).
 
-Protocol details and the trigger math: DESIGN.md Sections 7 and 9.
+* **Adaptive summary maintenance** (``store/adaptive.py``).  The routing
+  summaries the store keeps per op are covering but loosening; at the
+  tail of every apply (when no repack already rebuilt them exactly) the
+  store re-tightens at most one due shard (O(live·dim) host work,
+  ``retighten_every`` op-count trigger) and lets a shard whose covering
+  radius outgrew the inter-centroid gap schedule its own proximity
+  re-deal (``split_radius_factor`` trigger, ``split_cooldown`` applies
+  between splits) — pruned routing stays effective mid-stream instead of
+  decaying until the next compaction.
+
+Protocol details and the trigger math: DESIGN.md Sections 7, 9, and 10.
 """
 
 from __future__ import annotations
@@ -58,6 +68,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.parallel.compat import make_mesh
+from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
 from repro.store import placement as placement_mod
 from repro.store import summaries as summaries_mod
@@ -93,6 +104,8 @@ class IngestStats:
     applies: int = 0               # flushes that produced a generation
     compactions: int = 0
     forced_compactions: int = 0    # repacks forced by a full shard mid-flush
+    retightens: int = 0            # scheduled per-shard exact re-tightenings
+    splits: int = 0                # radius-triggered proximity re-deals
     last_compact_reason: Optional[str] = None
 
 
@@ -120,7 +133,10 @@ class MutableStore:
                  track_history: bool = False,
                  summary_projections: int = 8, summary_seed: int = 0,
                  placement="balance", placement_guard_slack: int = 32,
-                 redeal: str = "round_robin"):
+                 redeal: str = "round_robin",
+                 summary_pivots: int = 1, retighten_every: int = 0,
+                 split_radius_factor: float = 0.0,
+                 split_cooldown: int = 2):
         if capacity_per_shard < 1:
             raise ValueError("capacity_per_shard must be >= 1")
         if redeal not in ("round_robin", "proximity"):
@@ -177,13 +193,19 @@ class MutableStore:
             _scatter_apply,
             out_shardings=(self._sharding, self._sharding, self._sharding))
 
-        # Per-shard pivot summaries for pruned routing (store/summaries.py):
-        # updated incrementally alongside every op below, rebuilt exactly on
-        # repack, and frozen with each generation so the (snapshot,
-        # summaries) pair handed to routing_snapshot() can never disagree.
-        self._summ = summaries_mod.SummaryMaintainer(
+        # Per-shard pivot summaries for pruned routing (store/summaries.py),
+        # in the adaptive form (store/adaptive.py): updated incrementally
+        # alongside every op below, rebuilt exactly on repack, re-tightened
+        # on schedule / split on radius decay at the tail of each apply,
+        # and frozen with each generation so the (snapshot, summaries)
+        # pair handed to routing_snapshot() can never disagree.
+        self._summ = adaptive_mod.AdaptiveMaintainer(
             self.k, self.dim, num_projections=summary_projections,
-            seed=summary_seed)
+            seed=summary_seed, num_pivots=summary_pivots,
+            retighten_every=retighten_every,
+            split_radius_factor=split_radius_factor)
+        self.split_cooldown = int(split_cooldown)
+        self._applies_at_split = -(1 << 30)   # no split yet: first may fire
 
         self._history: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._track_history = bool(track_history)
@@ -222,6 +244,33 @@ class MutableStore:
     def summary_seed(self) -> int:
         """Direction-matrix seed of this store's routing summaries."""
         return self._summ.seed
+
+    @property
+    def summary_pivots(self) -> int:
+        """Pivot balls per shard of this store's routing summaries
+        (servers with route="pruned" must be configured to match)."""
+        return self._summ.num_pivots
+
+    def summary_slack(self) -> np.ndarray:
+        """(k,) covering-radius slack of the current generation's
+        summaries vs the exact live spread (summaries.summary_slack) —
+        the bound-decay observable KnnServer.placement_stats() reports.
+        O(live·dim) host probe; never on the dispatch path."""
+        with self._lock:
+            return summaries_mod.summary_slack(
+                self._summaries, self._pts, self._valid, self.cap)
+
+    def maintenance_stats(self) -> dict:
+        """Adaptive-maintenance counters and knobs, one dict (the
+        placement_stats() payload)."""
+        with self._lock:
+            return {
+                "summary_pivots": self._summ.num_pivots,
+                "retighten_every": self._summ.retighten_every,
+                "split_radius_factor": self._summ.split_radius_factor,
+                "retightens": self.stats.retightens,
+                "splits": self.stats.splits,
+            }
 
     @property
     def generation(self) -> int:
@@ -443,6 +492,28 @@ class MutableStore:
                 repacked = True
                 self.stats.last_compact_reason = decision.reason
 
+        # Adaptive maintenance (store/adaptive.py, DESIGN.md Section 10):
+        # runs only when no repack already rebuilt every bound exactly.
+        # A radius-triggered split schedules its own proximity re-deal —
+        # the quota clamp and the maintainer's growth guard keep it from
+        # re-arming the compactor — else at most ONE due shard gets an
+        # O(live·dim) exact re-tightening, round-robin, off any stall
+        # path.
+        if not repacked:
+            j = self._split_due_locked()
+            if j is not None:
+                self._repack_locked(redeal="proximity")
+                repacked = True
+                self.stats.splits += 1
+                self._applies_at_split = self.stats.applies
+                self.stats.last_compact_reason = (
+                    f"split: shard {j} radius outgrew the centroid gap")
+        if not repacked:
+            j = self._summ.retighten_due()
+            if j is not None:
+                self._summ.retighten(j, self._pts, self._valid, self.cap)
+                self.stats.retightens += 1
+
         self._projected_live = int(self._live.sum())
         gen = self._snap.generation + 1
         if repacked:
@@ -488,17 +559,28 @@ class MutableStore:
             live=self._live, used=self._used, cap=self.cap,
             centroids=centroids, radii=radii, occupied=occupied))
 
-    def _repack_locked(self):
-        if self.redeal == "proximity":
+    def _split_due_locked(self) -> Optional[int]:
+        """Shard the adaptive split trigger fires on this apply, or None;
+        the cooldown (applies between splits) is the store's guard, the
+        radius/growth conditions are the maintainer's."""
+        if (self._summ.split_radius_factor <= 0
+                or self.stats.applies - self._applies_at_split
+                < self.split_cooldown):
+            return None
+        return self._summ.split_candidate()
+
+    def _repack_locked(self, redeal: Optional[str] = None):
+        """Repack under ``redeal`` (default: the store's configured mode;
+        adaptive splits pass "proximity" explicitly — a split exists to
+        separate clusters, whatever the compaction-time deal is)."""
+        if (redeal or self.redeal) == "proximity":
             centroids, _, occupied = self._summ.placement_view()
-            # Quota slack shares the placement guardrail knob, clamped so
-            # a re-deal can never leave a skew that would immediately
-            # re-arm the compactor: post-redeal max-min is bounded by
-            # k*(slack+1), so slack < imbalance_frac*cap/k - 1 keeps the
-            # worst case under the trigger.
-            slack = min(self.placement_guard_slack,
-                        max(0, int(self.compact_imbalance_frac * self.cap
-                                   / self.k) - 1))
+            # Quota slack shares the placement guardrail knob, clamped
+            # (compaction.redeal_slack) so a re-deal can never leave a
+            # skew that would immediately re-arm the compactor.
+            slack = compaction.redeal_slack(
+                self.placement_guard_slack, self.compact_imbalance_frac,
+                self.cap, self.k)
             res = placement_mod.repack_proximity(
                 self._pts, self._ids, self._valid, self.k, self.cap,
                 id_sentinel=ID_SENTINEL, balance_slack=slack,

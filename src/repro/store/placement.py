@@ -2,7 +2,9 @@
 
 PR 3's pruned routing (store/summaries.py) only pays when clusters are
 *confined* to few shards: the lower-bound test can rule a shard out only
-if its covering ball sits far from the query.  The store's original
+if its pivot set — one covering ball in the default single-pivot form,
+up to ``summary_pivots`` balls under the adaptive maintainer
+(store/adaptive.py) — sits far from the query.  The store's original
 balance-first insert rule and round-robin repack smear every cluster
 across all k shards, so covering radii overlap and routing proves almost
 nothing — the static cluster-contiguous layout prunes to one shard while
@@ -12,8 +14,10 @@ subsystem so the streaming store can earn the same locality:
 * **Placement policies** (:func:`make_placement`) decide the destination
   shard of each applied insert.  ``balance`` is the original emptiest-
   shard rule, extracted verbatim.  ``affinity`` routes a point to the
-  nearest live summary centroid — reusing the :class:`SummaryMaintainer`
-  state the store already keeps incrementally for routing — under a
+  nearest live summary centroid (the *aggregate* mean of the shard's
+  pivot state — placement wants one mean per shard even when routing
+  carries several pivot balls) — reusing the maintainer state the store
+  already keeps incrementally for routing — under a
   balance guardrail: only shards whose live count is within
   ``guard_slack`` of the global minimum are eligible, so an insert-only
   history can never skew live counts beyond ``guard_slack + 1``

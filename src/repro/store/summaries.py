@@ -10,18 +10,32 @@ module maintains that summary per shard and derives the routing decision;
 distance+top-l kernel) and ``runtime/knn_server.py`` computes the
 touched-shard set per micro-batch.
 
-**Summary contents** (one row per shard, host-resident, O(k·(dim+r))):
+**Summary contents** (one row per shard, host-resident, O(k·(m·dim+r))):
 
 * ``centroids``/``radii`` — the live-point mean and a *covering* radius
   (every live point of shard j lies within ``radii[j]`` of
   ``centroids[j]``).  Triangle inequality gives both sides of the bound:
   ``max(0, |q−c| − r)`` lower-bounds and ``|q−c| + r`` upper-bounds the
   distance from q to any point of the shard.
+* ``pivots``/``pivot_radii``/``pivot_count`` (optional; maintained by
+  :class:`repro.store.adaptive.AdaptiveMaintainer`) — up to ``m`` pivot
+  balls per shard whose *union* covers the shard's live points.  Every
+  pivot ball gives the same triangle-inequality bracket as the aggregate
+  ball, so ``min_p max(0, |q−pivot_p| − r_p)`` lower-bounds and
+  ``max_p (|q−pivot_p| + r_p)`` upper-bounds the distance from q to any
+  live point of the shard — tight when one shard hosts two small
+  clusters, where the single aggregate ball must span the gap between
+  them and proves nothing.  In the default single-pivot form these
+  fields are absent and only the aggregate ball applies.
 * ``proj_lo``/``proj_hi`` — a small random-projection sketch: for ``r``
   fixed unit directions u, the interval ``[min_p u·p, max_p u·p]`` over
   the shard's live points.  For any unit u, ``|u·q − u·p| <= |q − p|``,
   so the distance from ``u·q`` to the interval is a second, independent
   lower bound (tight for elongated shards where the ball bound is loose).
+
+All bound sources are individually sound, so the routing lower bound
+takes their maximum and the upper bound their minimum — the pivot-set
+generalization can only tighten the decision, never change an answer.
 
 **Routing decision** (:func:`route_shards`), per query row with its own l:
 sort shards by their upper bound, accumulate live counts until >= l — the
@@ -58,11 +72,15 @@ Incremental updates keep the *covering* property while the centroid
 drifts — an insert/delete moves the centroid by δ, so every previously
 covered point is still within ``radius + δ`` of the new centroid; deletes
 never shrink the radius or the projection intervals (stale-but-valid).
+That staleness compounds (~log n radius inflation with per-shard ops);
+:mod:`repro.store.adaptive` is the subsystem that re-tightens bounds
+between compactions and splits shards whose radii outgrow the layout —
+:func:`summary_slack` is the probe that makes the decay observable.
 Every generation's summaries are frozen to an immutable
 :class:`ShardSummaries` stamped with the snapshot generation, and
 ``MutableStore.routing_snapshot()`` hands out the (snapshot, summaries)
 pair under one lock — routing metadata can never be stale relative to the
-epoch that answers (DESIGN.md Section 8).
+epoch that answers (DESIGN.md Sections 8 and 10).
 """
 
 from __future__ import annotations
@@ -81,6 +99,13 @@ class ShardSummaries(NamedTuple):
     shards; ``proj_lo``/``proj_hi``: (k, r) per-shard projection
     intervals (+inf/−inf for empty shards).  ``generation`` matches the
     :class:`~repro.store.StoreSnapshot` these summaries describe.
+
+    The optional pivot-set trailing fields (``None`` for single-pivot
+    summaries) carry the multi-pivot generalization
+    (:mod:`repro.store.adaptive`): ``pivots``: (k, m, dim) ball centers,
+    ``pivot_radii``: (k, m) ball radii, ``pivot_count``: (k,) occupied
+    pivot slots per shard — the union of shard j's first
+    ``pivot_count[j]`` balls covers its live points.
     """
 
     generation: int
@@ -90,6 +115,9 @@ class ShardSummaries(NamedTuple):
     directions: np.ndarray
     proj_lo: np.ndarray
     proj_hi: np.ndarray
+    pivots: np.ndarray | None = None
+    pivot_radii: np.ndarray | None = None
+    pivot_count: np.ndarray | None = None
 
 
 def projection_directions(dim: int, num_projections: int,
@@ -174,14 +202,20 @@ class SummaryMaintainer:
             if not len(pj):
                 self._reset_shard(j)
                 continue
-            self._sum[j] = pj.sum(0)
-            self._n[j] = len(pj)
-            c = self._centroid(j)
-            self._radius[j] = float(
-                np.sqrt(((pj - c) ** 2).sum(-1)).max())
-            pr = pj @ self.directions.T
-            self._lo[j] = pr.min(0)
-            self._hi[j] = pr.max(0)
+            self._rebuild_shard(j, pj)
+
+    def _rebuild_shard(self, j: int, pj: np.ndarray) -> None:
+        """Exact per-shard recompute from its live points ``pj`` (nonempty
+        float64) — the unit of work one scheduled re-tightening pass pays
+        (repro.store.adaptive overrides it to refresh the pivot set too)."""
+        self._sum[j] = pj.sum(0)
+        self._n[j] = len(pj)
+        c = self._centroid(j)
+        self._radius[j] = float(
+            np.sqrt(((pj - c) ** 2).sum(-1)).max())
+        pr = pj @ self.directions.T
+        self._lo[j] = pr.min(0)
+        self._hi[j] = pr.max(0)
 
     def placement_view(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(centroids (k, dim), radii (k,), occupied (k,) bool) of the
@@ -205,19 +239,29 @@ class SummaryMaintainer:
 
 def build_summaries(points: np.ndarray, k: int, *, valid=None,
                     num_projections: int = 8, seed: int = 0,
-                    generation: int = 0) -> ShardSummaries:
+                    generation: int = 0,
+                    num_pivots: int = 1) -> ShardSummaries:
     """Summaries for a contiguously sharded static point set.
 
     ``points``: (n, dim) host array; shard j owns rows
     ``[j·n/k, (j+1)·n/k)`` — the static :class:`KnnServer` layout.
     ``valid`` (optional (n,) bool) masks dead rows (store mirrors).
+    ``num_pivots > 1`` builds the multi-pivot form (exact pivot sets —
+    repro.store.adaptive; imported lazily, it builds on this module).
     """
     points = np.asarray(points)
     n, dim = points.shape
     if n % k:
         raise ValueError(f"n={n} must be divisible by k={k}")
     cap = n // k
-    m = SummaryMaintainer(k, dim, num_projections=num_projections, seed=seed)
+    if num_pivots > 1:
+        from repro.store import adaptive as adaptive_mod
+        m = adaptive_mod.AdaptiveMaintainer(
+            k, dim, num_projections=num_projections, seed=seed,
+            num_pivots=num_pivots)
+    else:
+        m = SummaryMaintainer(k, dim, num_projections=num_projections,
+                              seed=seed)
     m.rebuild(points, np.ones(n, bool) if valid is None else valid, cap)
     return m.freeze(generation)
 
@@ -230,15 +274,46 @@ def _centroid_distances(s: ShardSummaries, q: np.ndarray) -> np.ndarray:
     return np.sqrt(((q[:, None, :] - s.centroids[None]) ** 2).sum(-1))
 
 
+def _pivot_bounds(s: ShardSummaries, q: np.ndarray):
+    """(lb, ub) — (B, k) *distance*-unit brackets from the per-shard pivot
+    ball sets, or (None, None) when the summaries carry none.
+
+    Shard j's live points lie in the union of its occupied pivot balls,
+    so ``min_p max(0, d(q, pivot_p) − r_p)`` lower-bounds and
+    ``max_p (d(q, pivot_p) + r_p)`` upper-bounds the distance to any of
+    them.  Shards with no occupied pivot contribute nothing (lb 0,
+    ub +inf) — never a prune.
+    """
+    if s.pivots is None:
+        return None, None
+    m = s.pivots.shape[1]
+    dp = np.sqrt(((q[:, None, None, :] - s.pivots[None]) ** 2).sum(-1))
+    occ = np.arange(m)[None, :] < s.pivot_count[:, None]     # (k, m)
+    lb = np.where(occ[None], np.maximum(dp - s.pivot_radii[None], 0.0),
+                  np.inf).min(-1)
+    ub = np.where(occ[None], dp + s.pivot_radii[None], -np.inf).max(-1)
+    has = s.pivot_count > 0
+    return (np.where(has[None], lb, 0.0),
+            np.where(has[None], ub, np.inf))
+
+
 def lower_bounds(s: ShardSummaries, queries: np.ndarray,
-                 dc: np.ndarray | None = None) -> np.ndarray:
+                 dc: np.ndarray | None = None,
+                 pb: tuple | None = None) -> np.ndarray:
     """(B, k) *squared*-distance lower bound from each query to each
     shard's nearest live point; +inf for empty shards.  ``dc`` (optional)
-    is a precomputed :func:`_centroid_distances` result."""
+    is a precomputed :func:`_centroid_distances` result; ``pb``
+    (optional) a precomputed :func:`_pivot_bounds` pair — route_shards
+    computes each once and shares them across both bound directions.
+    All bound sources — aggregate ball, pivot set, projection sketch —
+    are individually sound, so the result is their maximum."""
     q = np.atleast_2d(np.asarray(queries, np.float64))
     if dc is None:
         dc = _centroid_distances(s, q)
     lb = np.maximum(dc - s.radii[None], 0.0)
+    plb, _ = _pivot_bounds(s, q) if pb is None else pb
+    if plb is not None:
+        lb = np.maximum(lb, plb)
     empty = s.live == 0
     if s.directions.size:
         qp = q @ s.directions.T                              # (B, r)
@@ -253,14 +328,20 @@ def lower_bounds(s: ShardSummaries, queries: np.ndarray,
 
 
 def upper_bounds(s: ShardSummaries, queries: np.ndarray,
-                 dc: np.ndarray | None = None) -> np.ndarray:
+                 dc: np.ndarray | None = None,
+                 pb: tuple | None = None) -> np.ndarray:
     """(B, k) *squared*-distance upper bound covering every live point of
-    each shard; +inf for empty shards.  ``dc`` as in
-    :func:`lower_bounds`."""
+    each shard; +inf for empty shards.  ``dc``/``pb`` as in
+    :func:`lower_bounds`.  Both covers — aggregate ball and pivot-ball
+    union — are sound, so the result is their minimum."""
     q = np.atleast_2d(np.asarray(queries, np.float64))
     if dc is None:
         dc = _centroid_distances(s, q)
-    out = (dc + s.radii[None]) ** 2
+    ub = dc + s.radii[None]
+    _, pub = _pivot_bounds(s, q) if pb is None else pb
+    if pub is not None:
+        ub = np.minimum(ub, pub)
+    out = ub ** 2
     out[:, s.live == 0] = np.inf
     return out
 
@@ -310,8 +391,9 @@ def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
     B = q.shape[0]
     ls = np.broadcast_to(np.asarray(ls, np.int64), (B,))
     dc = _centroid_distances(s, q)
-    lb = lower_bounds(s, q, dc)
-    ub = upper_bounds(s, q, dc)
+    pb = _pivot_bounds(s, q)       # (B, k, m, dim) pass — computed once
+    lb = lower_bounds(s, q, dc, pb)
+    ub = upper_bounds(s, q, dc, pb)
     order = np.argsort(ub, axis=1, kind="stable")
     csum = np.cumsum(s.live[order], axis=1)
     reached = csum >= ls[:, None]
@@ -347,3 +429,29 @@ def summary_invariants(s: ShardSummaries, points: np.ndarray,
     return {"radius_violation": radius_viol,
             "projection_violation": proj_viol,
             "live_mismatch": live_mismatch}
+
+
+def summary_slack(s: ShardSummaries, points: np.ndarray, valid: np.ndarray,
+                  cap: int) -> np.ndarray:
+    """(k,) covering-radius slack: the maintained radius minus the exact
+    live radius about the maintained centroid (0.0 for empty shards).
+
+    The bound-decay observable (ISSUE 5 / ROADMAP "Adaptive placement"):
+    incremental maintenance inflates the covering radius ~log n with
+    per-shard ops while the live spread stays put, so this gap is exactly
+    the pruning power lost since the last exact rebuild — ~0 right after
+    a compaction or a scheduled re-tightening, growing with churn
+    otherwise.  O(live·dim) host work; a fidelity probe for stats and
+    benchmarks (``KnnServer.placement_stats()``), never on the dispatch
+    path.
+    """
+    pts = np.asarray(points, np.float64)
+    out = np.zeros(s.live.shape[0])
+    for j in range(s.live.shape[0]):
+        sl = slice(j * cap, (j + 1) * cap)
+        pj = pts[sl][np.asarray(valid[sl], bool)]
+        if not len(pj):
+            continue
+        exact = float(np.sqrt(((pj - s.centroids[j]) ** 2).sum(-1)).max())
+        out[j] = float(s.radii[j]) - exact
+    return out

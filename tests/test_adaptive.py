@@ -1,0 +1,338 @@
+"""Adaptive summary maintenance (store/adaptive.py) — unit and store-level
+contracts.
+
+What this file pins (DESIGN.md Section 10):
+
+* pivot sets are exact covers, deterministic, and tighter than the single
+  aggregate ball on multi-cluster shards — without ever loosening a bound;
+* the re-tightening schedule pays at most ONE shard's O(live·dim) exact
+  recompute per flush, round-robin, and drives ``summary_slack`` back to
+  ~0 where the purely incremental path lets it grow without bound;
+* the radius-triggered split schedules a proximity re-deal through the
+  existing repack machinery, cannot re-arm the tombstone/imbalance
+  compactor, and cannot re-fire on a layout it already failed to improve
+  (growth guard + cooldown);
+* the knobs thread from KnnServiceConfig.store_kwargs() into the store
+  and a mismatched store-backed pruned server fails loudly.
+
+Answer exactness under maintenance lives in tests/test_routing.py (the
+multi-pivot extension of the property harness).
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.data import drifting_clusters
+from repro.store import (AdaptiveMaintainer, MutableStore, build_summaries,
+                         compute_pivots, evaluate, lower_bounds,
+                         redeal_slack, summary_slack, upper_bounds)
+from repro.runtime import KnnServer
+
+DIM = 8
+K = 8
+
+
+def _two_lump_points(rng, n=128, gap=40.0):
+    """Interleaved far-apart lumps: under balance placement every shard
+    hosts both, the adversarial instance for single-ball summaries."""
+    pts = np.empty((n, DIM), np.float32)
+    pts[0::2] = (rng.normal(size=(n // 2, DIM)) + gap).astype(np.float32)
+    pts[1::2] = (rng.normal(size=(n // 2, DIM)) - gap).astype(np.float32)
+    return pts
+
+
+# ---- pivot math ----------------------------------------------------------
+
+def test_compute_pivots_covers_and_is_deterministic(rng):
+    pts = rng.normal(scale=5.0, size=(100, DIM))
+    for m in (1, 2, 4, 7):
+        piv, rad, cnt = compute_pivots(pts, m)
+        assert 1 <= cnt <= m
+        d = np.sqrt(((pts[:, None] - piv[None, :cnt]) ** 2).sum(-1))
+        # the union of balls covers: every point inside its nearest ball
+        assert (d.min(1) <= rad[d.argmin(1)] + 1e-9).all()
+        piv2, rad2, cnt2 = compute_pivots(pts, m)
+        assert cnt2 == cnt
+        assert np.array_equal(piv, piv2) and np.array_equal(rad, rad2)
+
+
+def test_compute_pivots_degenerate_inputs():
+    piv, rad, cnt = compute_pivots(np.zeros((0, DIM)), 4)
+    assert cnt == 0
+    # all-identical points: traversal stops early, one zero-radius ball
+    piv, rad, cnt = compute_pivots(np.ones((10, DIM)), 4)
+    assert cnt == 1 and rad[0] == 0.0
+
+
+def test_multi_pivot_tightens_two_lump_shard(rng):
+    """One shard holding two lumps: the aggregate ball spans the gap and
+    proves nothing for a query between them; two pivot balls restore the
+    bound.  Tightening is one-directional — multi-pivot lb >= single lb,
+    ub <= single ub, on every query."""
+    pts = _two_lump_points(rng)
+    s1 = build_summaries(pts, 1)
+    s2 = build_summaries(pts, 1, num_pivots=2)
+    q_mid = np.zeros((1, DIM))
+    assert lower_bounds(s1, q_mid)[0, 0] <= 1e-9          # inside the ball
+    assert lower_bounds(s2, q_mid)[0, 0] > 30.0 ** 2      # outside both
+    qs = np.concatenate([q_mid, rng.normal(scale=20.0, size=(8, DIM))])
+    assert (lower_bounds(s2, qs) >= lower_bounds(s1, qs) - 1e-9).all()
+    assert (upper_bounds(s2, qs) <= upper_bounds(s1, qs) + 1e-9).all()
+
+
+def test_multi_pivot_bounds_sound_through_store_ops(rng):
+    """Frozen adaptive summaries bracket the true per-shard extremes at
+    every generation of an interleaved history, for every pivot count."""
+    for m in (1, 2, 4):
+        store = MutableStore(DIM, capacity_per_shard=64, axis_name="x",
+                             summary_pivots=m, placement="affinity",
+                             staging_size=10 ** 9)
+        pts = _two_lump_points(rng, n=96)
+        ids = store.insert(pts)
+        store.flush()
+        store.delete(ids[::3])
+        keep = ids[1::3][:20]
+        store.update(keep, rng.normal(size=(20, DIM)).astype(np.float32))
+        store.flush()
+        s = store.summaries()
+        q = rng.normal(scale=10.0, size=(4, DIM))
+        lb, ub = lower_bounds(s, q), upper_bounds(s, q)
+        live_ids, live_pts = store.live_arrays()
+        d = ((q[:, None].astype(np.float64) - live_pts[None]) ** 2).sum(-1)
+        slot = np.array([store._slot_of[int(i)] for i in live_ids])
+        shard = slot // store.cap
+        for j in range(store.k):
+            mine = shard == j
+            if not mine.any():
+                continue
+            assert (lb[:, j] <= d[:, mine].min(1) + 1e-6).all(), (m, j)
+            assert (ub[:, j] >= d[:, mine].max(1) - 1e-6).all(), (m, j)
+
+
+# ---- re-tightening schedule ---------------------------------------------
+
+def test_retighten_at_most_one_shard_per_flush(rng):
+    store = MutableStore(DIM, capacity_per_shard=128, axis_name="x",
+                         retighten_every=1, staging_size=10 ** 9,
+                         auto_compact=False)
+    ids = store.insert(rng.normal(size=(400, DIM)).astype(np.float32))
+    store.flush()
+    assert store.stats.retightens == 1     # every shard due; only one paid
+    for i in range(5):
+        store.delete(ids[i * 10:(i + 1) * 10])
+        store.flush()
+    assert store.stats.retightens == 6     # exactly one more per apply
+
+
+def test_retighten_round_robin_serves_every_shard(rng):
+    m = AdaptiveMaintainer(K, DIM, retighten_every=1)
+    pts = rng.normal(size=(K * 4, DIM))
+    valid = np.ones(K * 4, bool)
+    for j in range(K):
+        for t in range(4):
+            m.insert(j, pts[j * 4 + t])
+    served = []
+    for _ in range(K):
+        j = m.retighten_due()
+        assert j is not None
+        m.retighten(j, pts, valid, 4)
+        served.append(j)
+    assert sorted(served) == list(range(K))  # nobody starves, nobody twice
+    assert m.retighten_due() is None         # all counters reset
+
+
+def test_retighten_restores_slack_where_incremental_decays(rng):
+    """The headline contract: under identical churn, the maintained
+    store's covering slack returns to ~0 shard by shard while the
+    unmaintained one's only grows."""
+    def churn(store):
+        ids = store.insert(
+            rng_local.normal(size=(240, DIM)).astype(np.float32))
+        store.flush()
+        for i in range(8):
+            store.delete(ids[i * 20:(i + 1) * 20])
+            store.insert(
+                rng_local.normal(size=(20, DIM)).astype(np.float32))
+            store.flush()
+
+    slacks = {}
+    for every in (0, 1):
+        rng_local = np.random.default_rng(7)   # identical stream for both
+        store = MutableStore(DIM, capacity_per_shard=128, axis_name="x",
+                             retighten_every=every, staging_size=10 ** 9,
+                             auto_compact=False)
+        churn(store)
+        slacks[every] = store.summary_slack()
+    assert (slacks[0] >= -1e-9).all() and (slacks[1] >= -1e-9).all()
+    assert slacks[0].max() > 0.5               # incremental decay is real
+    assert slacks[1].max() < slacks[0].max()   # maintenance beats it
+    # a shard tightened on the very last flush is exactly tight
+    assert slacks[1].min() < 1e-9
+
+
+def test_summary_slack_probe_matches_rebuild(rng):
+    store = MutableStore(DIM, capacity_per_shard=64, axis_name="x",
+                         staging_size=10 ** 9, auto_compact=False)
+    ids = store.insert(rng.normal(scale=4.0, size=(200, DIM))
+                       .astype(np.float32))
+    store.flush()
+    store.delete(ids[::2])
+    store.flush()
+    assert store.summary_slack().max() > 0.0   # deletes left stale radii
+    store.compact()                            # exact rebuild everywhere
+    assert store.summary_slack().max() <= 1e-9
+    s = store.summaries()
+    direct = summary_slack(s, store._pts, store._valid, store.cap)
+    assert np.allclose(direct, store.summary_slack())
+
+
+# ---- split trigger -------------------------------------------------------
+
+def _split_store(rng, **kw):
+    kw.setdefault("split_cooldown", 0)
+    store = MutableStore(DIM, capacity_per_shard=64, axis_name="x",
+                         summary_pivots=2, split_radius_factor=1.0,
+                         placement="balance", auto_compact=False, **kw)
+    store.insert(_two_lump_points(rng))
+    store.flush()
+    return store
+
+
+def test_split_fires_separates_and_does_not_refire(rng):
+    store = _split_store(rng)
+    assert store.stats.splits == 1
+    assert store.stats.compactions == 1
+    assert "split" in store.stats.last_compact_reason
+    # the proximity re-deal separated the lumps: every shard's covering
+    # radius is now cluster-sized, nowhere near the inter-lump gap
+    assert store.summaries().radii.max() < 10.0
+    # growth guard: radii did not grow since the rebuild, so further
+    # flushes (even with cooldown 0) must not re-fire on the same layout
+    ids, _ = store.live_arrays()
+    store.delete(ids[:4])
+    store.flush()
+    assert store.stats.splits == 1
+
+
+def test_split_respects_cooldown(rng):
+    store = MutableStore(DIM, capacity_per_shard=128, axis_name="x",
+                         summary_pivots=2, split_radius_factor=1.0,
+                         split_cooldown=10 ** 6, placement="balance",
+                         auto_compact=False, staging_size=10 ** 9)
+    store.insert(_two_lump_points(rng))
+    store.flush()
+    assert store.stats.splits == 1      # the first split is always allowed
+    store.insert(_two_lump_points(rng))
+    store.flush()                       # same smear again, but inside the
+    assert store.stats.splits == 1      # cooldown window: held
+    assert store.stats.retightens == 0  # split config without retighten
+
+
+def test_split_uses_proximity_even_with_round_robin_redeal(rng):
+    """A split exists to separate clusters; it must go through the
+    proximity re-deal even when compaction-time redeal is round_robin."""
+    store = _split_store(rng, redeal="round_robin")
+    assert store.stats.splits == 1
+    _, live_pts = store.live_arrays()
+    # post-split shards are lump-pure: a round-robin deal would leave
+    # every shard spanning both lumps (radius ~ gap)
+    assert store.summaries().radii.max() < 10.0
+
+
+def test_split_cannot_rearm_compactor(rng):
+    store = _split_store(rng)
+    decision = evaluate(store._live, store._used, store.cap,
+                        tombstone_frac=store.compact_tombstone_frac,
+                        imbalance_frac=store.compact_imbalance_frac)
+    assert not decision.compact
+    # and the quota clamp it ran under is the compaction-safe one
+    assert redeal_slack(store.placement_guard_slack,
+                        store.compact_imbalance_frac, store.cap,
+                        store.k) * store.k < (
+        store.compact_imbalance_frac * store.cap)
+
+
+def test_singleton_and_empty_shards_never_split():
+    m = AdaptiveMaintainer(K, DIM, num_pivots=2, split_radius_factor=0.1)
+    assert m.split_candidate() is None          # empty store
+    m.insert(0, np.zeros(DIM))
+    m.insert(1, np.full(DIM, 100.0))
+    assert m.split_candidate() is None          # singletons only
+
+
+# ---- config / server threading ------------------------------------------
+
+def test_store_kwargs_threads_adaptive_knobs(mesh8):
+    cfg = CONFIG.replace(summary_pivots=3, retighten_every=5,
+                         split_radius_factor=1.5,
+                         store_capacity_per_shard=8)
+    store = MutableStore(4, mesh=mesh8, axis_name="x",
+                         **cfg.store_kwargs())
+    assert store.summary_pivots == 3
+    assert store._summ.retighten_every == 5
+    assert store._summ.split_radius_factor == 1.5
+    ms = store.maintenance_stats()
+    assert ms["summary_pivots"] == 3 and ms["retighten_every"] == 5
+
+
+def test_server_rejects_pivot_mismatch_with_store(mesh8):
+    store = MutableStore(DIM, capacity_per_shard=16, mesh=mesh8,
+                         axis_name="x", summary_pivots=2)
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=8, bucket_sizes=(1,),
+                         route="pruned")          # asks for 1 pivot
+    with pytest.raises(ValueError, match="sketch mismatch"):
+        KnnServer(store=store, cfg=cfg, mesh=mesh8)
+    KnnServer(store=store, cfg=cfg.replace(summary_pivots=2), mesh=mesh8)
+
+
+def test_invalid_knobs_raise():
+    with pytest.raises(ValueError, match="num_pivots"):
+        AdaptiveMaintainer(K, DIM, num_pivots=0)
+    with pytest.raises(ValueError, match="retighten_every"):
+        AdaptiveMaintainer(K, DIM, retighten_every=-1)
+    with pytest.raises(ValueError, match="split_radius_factor"):
+        AdaptiveMaintainer(K, DIM, split_radius_factor=-0.5)
+
+
+# ---- end-to-end under drift ----------------------------------------------
+
+def test_drift_stream_served_identical_with_maintenance_on(mesh8):
+    """The drifting-cluster workload end to end: with every maintenance
+    trigger armed on both stores, a route="pruned" server agrees
+    bit-identically with route="exact" at every step of the walk — the
+    re-tightens and splits firing mid-stream never change an answer
+    (the generator is the bench's — repro.data.drifting_clusters)."""
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=16, bucket_sizes=(4,),
+                         placement="affinity", redeal="proximity",
+                         store_capacity_per_shard=256, summary_pivots=2,
+                         retighten_every=8, split_radius_factor=1.0)
+    stores = [MutableStore(DIM, mesh=mesh8, axis_name="x",
+                           auto_compact=False, **cfg.store_kwargs())
+              for _ in range(2)]
+    ex = KnnServer(store=stores[0], cfg=cfg.replace(route="exact"),
+                   mesh=mesh8)
+    pr = KnnServer(store=stores[1], cfg=cfg.replace(route="pruned"),
+                   mesh=mesh8)
+    ids_by_step = []
+    for s, (pts, centers) in enumerate(
+            drifting_clusters(8, 8, DIM, steps=5, drift=6.0, seed=11)):
+        step_ids = []
+        for st in stores:
+            step_ids.append(st.insert(pts))
+            if s >= 2:
+                st.delete(ids_by_step[s - 2])
+            st.flush()
+        assert np.array_equal(step_ids[0], step_ids[1])
+        ids_by_step.append(step_ids[0])
+        q = (centers[np.arange(4) % 8]
+             + np.random.default_rng(s).normal(size=(4, DIM))
+             ).astype(np.float32)
+        ra = ex.query_batch(q, [1, 4, 16, 7])
+        rb = pr.query_batch(q, [1, 4, 16, 7])
+        for a, b in zip(ra, rb):
+            assert a.dists.tobytes() == b.dists.tobytes()
+            assert np.array_equal(a.ids, b.ids)
+            assert a.generation == b.generation
+    # maintenance actually ran on this stream
+    assert stores[1].stats.retightens > 0

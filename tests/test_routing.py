@@ -334,6 +334,104 @@ def test_server_rejects_sketch_mismatch_with_store(mesh8):
               cfg=cfg.replace(route_num_projections=4), mesh=mesh8)
 
 
+# ---- adaptive multi-pivot exactness (store/adaptive.py) -------------------
+
+ADAPTIVE_PIVOTS = (1, 2, 4)
+ADAPTIVE_SHIFTS = (0.0, 2000.0)
+
+
+@pytest.fixture(scope="module")
+def adaptive_fn(mesh8):
+    """One compile for the adaptive harness: exact and pruned Algorithm 2
+    side by side over a store snapshot's capacity-padded, valid-masked
+    buffers (every case re-uses this executable; only the host-side
+    routing decision and the store history vary)."""
+    def fn(p, i, v, q, la, key, active):
+        ex = core.knn_query_batched(p, i, q, L_MAX, la, key, axis_name="x",
+                                    point_valid=v)
+        pr = core.knn_query_batched(p, i, q, L_MAX, la, key, axis_name="x",
+                                    point_valid=v, shard_active=active)
+        return ex.dists, ex.ids, pr.dists, pr.ids
+
+    return jax.jit(shard_map(
+        fn, mesh=mesh8,
+        in_specs=(P("x"), P("x"), P("x"), P(None), P(None), P(None),
+                  P("x")),
+        out_specs=(P(None),) * 4))
+
+
+def _adaptive_routing_case(adaptive_fn, pivots, seed, shift):
+    """Multi-pivot exactness at the f32 edge: 2k clusters over k shards
+    (so shards host two clusters — the layout pivot sets exist for),
+    optionally far from the origin (where computed distances quantize to
+    multiples of ulp(|q|²) and the magnitude-absolute error margin must
+    hold the line), with every maintenance trigger armed — answers must
+    stay bit-identical to route="exact" after every phase of an
+    interleaved insert/delete/update/compact history."""
+    rng = np.random.default_rng(seed)
+    clusters = 2 * K
+    centers = rng.normal(scale=8.0, size=(clusters, DIM)) + shift
+    store = MutableStore(DIM, capacity_per_shard=M, axis_name="x",
+                         placement="affinity", redeal="proximity",
+                         summary_pivots=pivots, retighten_every=6,
+                         split_radius_factor=1.2, staging_size=10 ** 9)
+    q = (centers[rng.integers(0, clusters, B)]
+         + rng.normal(size=(B, DIM))).astype(np.float32)
+    la = np.array([1, 8, 256, 40], np.int32)
+
+    def check():
+        snap, summ = store.routing_snapshot()
+        assert summ.generation == snap.generation
+        if pivots > 1:
+            assert summ.pivots is not None
+        active = route_shards(summ, q, la, slack=CONFIG.route_slack).any(0)
+        d_ex, i_ex, d_pr, i_pr = map(np.asarray, adaptive_fn(
+            snap.points, snap.ids, snap.valid, q, la,
+            jax.random.PRNGKey(seed), active))
+        assert d_ex.tobytes() == d_pr.tobytes(), (pivots, seed, shift)
+        assert np.array_equal(i_ex, i_pr), (pivots, seed, shift)
+
+    # phase 1: two-clusters-per-shard ingest, flushed in waves so the
+    # re-tightening schedule and (when armed) the split trigger run
+    for c in range(clusters):
+        store.insert((centers[c]
+                      + rng.normal(size=(24, DIM))).astype(np.float32))
+        if c % 4 == 3:
+            store.flush()
+    store.flush()
+    check()
+
+    # phase 2: interleaved deletes + inserts + updates
+    ids = store.live_arrays()[0]
+    store.delete(ids[::3])
+    store.insert((centers[rng.integers(0, clusters)]
+                  + rng.normal(size=(30, DIM))).astype(np.float32))
+    moved = ids[1::3][:16]
+    store.update(moved, (centers[rng.integers(0, clusters, 16)]
+                         + rng.normal(size=(16, DIM))).astype(np.float32))
+    store.flush()
+    check()
+
+    # phase 3: forced compaction (exact rebuild of every pivot set)
+    store.compact()
+    check()
+
+
+if given is not None:
+    @settings(max_examples=10, deadline=None)
+    @given(pivots=st.sampled_from(ADAPTIVE_PIVOTS),
+           seed=st.integers(min_value=0, max_value=999),
+           shift=st.sampled_from(ADAPTIVE_SHIFTS))
+    def test_adaptive_multipivot_exactness(adaptive_fn, pivots, seed, shift):
+        _adaptive_routing_case(adaptive_fn, pivots, seed, shift)
+else:
+    @pytest.mark.parametrize("shift", ADAPTIVE_SHIFTS)
+    @pytest.mark.parametrize("pivots", ADAPTIVE_PIVOTS)
+    def test_adaptive_multipivot_exactness(adaptive_fn, pivots, shift):
+        for seed in (0, 7):
+            _adaptive_routing_case(adaptive_fn, pivots, seed, shift)
+
+
 def test_summary_covering_invariants_under_mutation(rng):
     """The maintainer's bounds stay *covering* through any op sequence:
     every live point within the shard radius, every projection inside its
