@@ -1,7 +1,7 @@
 # Local fallback for the CI entrypoints (.github/workflows/ci.yml).
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-cov deps bench bench-serve bench-smoke examples
+.PHONY: test test-cov test-threads deps bench bench-serve bench-smoke examples
 
 deps:
 	pip install -r requirements-dev.txt
@@ -19,6 +19,19 @@ test-cov:
 		--cov=repro.store --cov=repro.core \
 		--cov-report=term-missing --cov-fail-under=85
 
+# thread-sanity gate (ci.yml thread-sanity job): the concurrency suites
+# — background-maintenance harness, stop()-drain contract, ServerStats
+# hammer, device-routing parity — run 3x under a faulthandler timeout,
+# so a rare-interleaving deadlock dumps every thread's stack instead of
+# hanging CI silently.
+test-threads:
+	for i in 1 2 3; do \
+		$(PYTHONPATH_PREFIX) python -m pytest -q \
+			-o faulthandler_timeout=300 \
+			tests/test_async_maintenance.py tests/test_knn_server.py \
+			tests/test_routing.py || exit 1; \
+	done
+
 bench:
 	$(PYTHONPATH_PREFIX):. python -m benchmarks.run
 
@@ -34,7 +47,10 @@ bench-serve:
 # its adaptive section drives the drifting-cluster store with
 # summary_pivots=2 and hard-asserts one forced re-tighten and one forced
 # split on a tiny store (store/adaptive.py), so both maintenance
-# triggers fire in CI on every push.
+# triggers fire in CI on every push.  bench_ingest's under_ingest
+# section is the quiet-vs-ingest serve-latency A/B over a
+# maintenance="background" store with device-side routing — it
+# hard-asserts that a background re-tighten AND split fired mid-run.
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \

@@ -8,14 +8,18 @@ Two phases against ``store.MutableStore`` (DESIGN.md Section 7):
      Runs twice: once with the default balance/round-robin store and
      once with ``placement="affinity"`` + ``redeal="proximity"``
      (store/placement.py), pricing the locality-aware write path.
-  2. **Query latency under ingest** — a store-backed ``KnnServer`` with
-     the micro-batcher thread running, a background ingest thread
-     streaming insert+delete batches (epoch swaps land continuously),
-     and a closed-loop query driver measuring p50/p99 — the serving-path
-     cost of mutability, directly comparable to BENCH_serve.json's
-     static-store numbers.  Also reported: how many generations the
-     measured queries spanned, and that zero in-flight queries were
-     dropped across every swap.
+  2. **Query latency under ingest** — the serving-plane A/B (DESIGN.md
+     Section 11): one store-backed ``KnnServer`` with pruned device-side
+     routing and ``maintenance="background"`` is measured twice with the
+     same closed-loop query driver — first against a quiet store, then
+     while a drifting-cluster ingest thread streams insert+delete waves
+     (epoch swaps land continuously and the background worker re-tightens,
+     splits, and compacts mid-run; the phase asserts at least one
+     re-tighten AND one split actually fired).  The headline number is
+     ``p99_ratio_vs_quiet``: how much serve-path tail latency concurrent
+     ingest costs when maintenance runs off the flush path.  Also
+     reported: generations spanned, worker counters, and that zero
+     in-flight queries were dropped across every swap.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_ingest.py --out BENCH_ingest.json
@@ -115,56 +119,124 @@ def _phase_ingest(rng, cap, staging, batches, placement="balance",
 
 
 def _phase_under_ingest(rng, cap, staging, n_queries) -> dict:
-    """Closed-loop query latency while an ingest thread streams mutations."""
+    """Quiet-vs-ingest serve-latency A/B with background maintenance.
+
+    One pruned, device-routed server over a ``maintenance="background"``
+    store: phase A measures closed-loop p50/p99 against the quiet store;
+    phase B repeats the measurement while a drifting-cluster ingest
+    thread streams insert+delete waves — drift inflates covering radii,
+    so the background worker's re-tighten AND split paths both fire
+    mid-run (asserted), not just the scatter apply.
+    """
     from repro.runtime import KnnServer
-    store = _mk_store(rng, cap, staging, prefill=(cap * common.K_MACHINES) // 2)
-    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS)
+    from repro.store import MutableStore
+
+    k = common.K_MACHINES
+    n_clusters = 2 * k
+    centers = rng.normal(scale=25.0, size=(n_clusters, DIM))
+    cfg = CONFIG.replace(
+        dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+        route="pruned", route_compute="device", summary_pivots=2,
+        placement="affinity", redeal="proximity",
+        retighten_every=4, split_radius_factor=1.2,
+        maintenance="background",
+        store_capacity_per_shard=cap, store_staging_size=staging)
+    store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         **cfg.store_kwargs())
+    prefill_per = (cap * k // 2) // n_clusters
+    for c in range(n_clusters):
+        store.insert((centers[c] + rng.normal(size=(prefill_per, DIM)))
+                     .astype(np.float32))
+    store.flush()
     srv = KnnServer(store=store, cfg=cfg)
     srv.warmup()
+
+    def measure(qrng):
+        lat, gens = [], []
+        for _ in range(8):       # warmup queries outside the window
+            c = int(qrng.integers(0, n_clusters))
+            srv.submit((centers[c] + qrng.normal(size=DIM))
+                       .astype(np.float32), 8).result(timeout=120)
+        t0 = time.perf_counter()
+        for _ in range(n_queries):
+            c = int(qrng.integers(0, n_clusters))
+            res = srv.submit((centers[c] + qrng.normal(size=DIM))
+                             .astype(np.float32), 8).result(timeout=120)
+            lat.append(res.latency_s)
+            gens.append(res.generation)
+        wall = time.perf_counter() - t0
+        lat = np.asarray(lat)
+        return {"qps": n_queries / wall,
+                "p50_ms": float(np.percentile(lat, 50) * 1e3),
+                "p99_ms": float(np.percentile(lat, 99) * 1e3),
+                "generations_spanned": int(max(gens) - min(gens))}
 
     stop = threading.Event()
     mutations = {"applied": 0}
 
     def ingest_loop():
-        # net-zero churn (delete everything inserted): the stream can
-        # never fill the store, so ingest provably runs for the whole
-        # measured window — two epoch swaps per cycle, forever.
+        # Net-zero drifting churn: each cycle inserts a wave into one
+        # cluster whose center has moved, then deletes the oldest live
+        # wave — the store can never fill, radii inflate under the
+        # drift (arming split), and deletes make shards due for
+        # re-tightening.  Two epoch swaps per cycle.  The cycle is
+        # paced (a short sleep between waves) so the A/B measures
+        # serving-plane interference — lock windows, epoch swaps,
+        # maintenance commits — rather than raw CPU oversubscription
+        # of the host-thread "machines"; an unthrottled busy-loop
+        # ingester on the 8-device host simulation just measures the
+        # scheduler.
         r = np.random.default_rng(11)
+        drifted = centers.copy()
+        step = r.normal(size=(n_clusters, DIM))
+        step *= 3.0 / np.linalg.norm(step, axis=1, keepdims=True)
+        waves = []          # FIFO of inserted-wave ids (oldest deleted)
         while not stop.is_set():
-            ids = store.insert(r.normal(size=(staging // 2, DIM))
-                               .astype(np.float32))
+            c = mutations["applied"] % n_clusters
+            drifted[c] += step[c]
+            waves.append(store.insert(
+                (drifted[c] + r.normal(size=(staging // 4, DIM)))
+                .astype(np.float32)))
             store.flush()
-            store.delete(ids)
-            store.flush()
+            if len(waves) > 1:
+                store.delete(waves.pop(0))
+                store.flush()
             mutations["applied"] += 1
+            time.sleep(0.1)
 
-    lat, gens = [], []
-    t = threading.Thread(target=ingest_loop, daemon=True)
     with srv.serving():
+        quiet = measure(np.random.default_rng(21))
+        t = threading.Thread(target=ingest_loop, daemon=True)
         t.start()
-        # warmup queries outside the measured window
-        for _ in range(8):
-            srv.submit(rng.normal(size=DIM).astype(np.float32), 8).result(
-                timeout=60)
-        t0 = time.perf_counter()
-        for _ in range(n_queries):
-            res = srv.submit(rng.normal(size=DIM).astype(np.float32),
-                             8).result(timeout=60)
-            lat.append(res.latency_s)
-            gens.append(res.generation)
-        wall = time.perf_counter() - t0
+        under = measure(np.random.default_rng(22))
+        # the A/B is only meaningful if maintenance actually churned:
+        # hold the ingest open (bounded) until both paths have fired
+        deadline = time.perf_counter() + 120
+        while ((store.stats.retightens == 0 or store.stats.splits == 0)
+               and time.perf_counter() < deadline):
+            time.sleep(0.02)
         stop.set()
         t.join()
+    store.close()
 
-    lat = np.asarray(lat)
+    assert store.stats.retightens > 0, "no re-tighten fired mid-run"
+    assert store.stats.splits > 0, "no split fired mid-run"
+    worker = store.maintenance_stats()["worker"]
+    assert worker["errors"] == 0, worker["error"]
+
     return {
         "queries": n_queries,
-        "qps": n_queries / wall,
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
-        "generations_spanned": int(max(gens) - min(gens)),
+        "maintenance": "background",
+        "route": cfg.route,
+        "route_compute": cfg.route_compute,
+        "quiet": quiet,
+        "under_ingest": under,
+        "p99_ratio_vs_quiet": under["p99_ms"] / quiet["p99_ms"],
         "ingest_cycles": mutations["applied"],
         "dropped_queries": 0,   # every submit() above resolved (else: raise)
+        "retightens": store.stats.retightens,
+        "splits": store.stats.splits,
+        "worker": worker,
         "final_live": store.live_count,
         "compactions": store.stats.compactions,
     }
@@ -202,9 +274,18 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
         f"pts_per_s={aff['insert_pts_per_s']:.0f} "
         f"compact_s={aff['compact_s']:.3f} (redeal=proximity)"))
     emit(common.row(
-        "query_under_ingest", 1e6 / und["qps"],
-        f"qps={und['qps']:.1f} p50={und['p50_ms']:.2f}ms "
-        f"p99={und['p99_ms']:.2f}ms gens={und['generations_spanned']}"))
+        "query_quiet_store", 1e6 / und["quiet"]["qps"],
+        f"qps={und['quiet']['qps']:.1f} "
+        f"p50={und['quiet']['p50_ms']:.2f}ms "
+        f"p99={und['quiet']['p99_ms']:.2f}ms"))
+    emit(common.row(
+        "query_under_ingest", 1e6 / und["under_ingest"]["qps"],
+        f"qps={und['under_ingest']['qps']:.1f} "
+        f"p50={und['under_ingest']['p50_ms']:.2f}ms "
+        f"p99={und['under_ingest']['p99_ms']:.2f}ms "
+        f"p99_ratio={und['p99_ratio_vs_quiet']:.2f} "
+        f"gens={und['under_ingest']['generations_spanned']} "
+        f"retightens={und['retightens']} splits={und['splits']}"))
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

@@ -66,6 +66,14 @@ class KnnServiceConfig:
     # summary_seed); a mismatch with these values raises at construction.
     route_num_projections: int = 8
     route_proj_seed: int = 0
+    # Where the route="pruned" decision is computed: "host" runs the f64
+    # numpy route_shards per dispatch (a serial host pass ahead of the
+    # launch); "device" folds the identical decision into the service
+    # executable's prologue (kernels/routing.py — f32, bit-identical
+    # masks on every tested instance, tests/test_routing.py) so routing
+    # rides the batch's own launch and the touched-shard set returns
+    # with the answers.  Ignored under route="exact".
+    route_compute: str = "host"
 
     # ---- mutable sharded store (store/mutable.py) -----------------------
     # Slots per shard of the capacity-padded buffers; fixes every compiled
@@ -113,6 +121,16 @@ class KnnServiceConfig:
     # schedules its own quota-bounded proximity re-deal instead of
     # waiting for the tombstone/imbalance compaction trigger.  0 disables.
     split_radius_factor: float = 0.0
+    # Maintenance execution plane (store/maintenance.py): "inline" runs
+    # re-tightening / splits / auto-compaction at the tail of every flush
+    # under the store lock (today's exact behavior); "background" moves
+    # them to a worker thread that plans by a sampled summary-slack
+    # probe, prepares repacked buffers off-lock, and commits via the
+    # epoch swap under a short lock window — flushes stop paying for
+    # maintenance and in-flight micro-batches keep serving their
+    # snapshot.  Answers are bit-identical either way at every
+    # generation (tests/test_async_maintenance.py).
+    maintenance: str = "inline"
 
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)
@@ -137,7 +155,8 @@ class KnnServiceConfig:
             summary_seed=self.route_proj_seed,
             summary_pivots=self.summary_pivots,
             retighten_every=self.retighten_every,
-            split_radius_factor=self.split_radius_factor)
+            split_radius_factor=self.split_radius_factor,
+            maintenance=self.maintenance)
 
 
 CONFIG = KnnServiceConfig()

@@ -23,6 +23,7 @@ from repro.kernels import ref
 from repro.kernels import l2_distance as _l2
 from repro.kernels import distance_topk as _dtk
 from repro.kernels import local_topk as _ltk
+from repro.kernels import routing as _routing
 
 # kernel  : pl.pallas_call compiled for the backend (TPU target)
 # interpret: kernel body executed in Python (CPU-correctness mode)
@@ -215,3 +216,52 @@ def local_topk(values, l, *, block_b=None, block_m=None):
     bb = block_b or _ltk.DEFAULT_BLOCK_B
     bm = block_m or _ltk.DEFAULT_BLOCK_M
     return _ltk_padded(values, l, bb, bm, mode == "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("dim_real", "slack"))
+def _route_ref_jit(q, ls2, *packed, dim_real, slack):
+    return _routing.route_mask_ref(q, ls2, *packed, dim_real=dim_real,
+                                   slack=slack)
+
+
+@functools.partial(jax.jit, static_argnames=("dim_real", "slack",
+                                             "block_b", "interpret"))
+def _route_padded(q, ls2, *packed, dim_real, slack, block_b, interpret):
+    B = q.shape[0]
+    # padding rows carry l=0 and route nowhere, exactly like the
+    # micro-batcher's own bucket padding
+    qp = _pad_to(q, block_b, 0, 0.0)
+    lp = _pad_to(ls2, block_b, 0, 0)
+    out = _routing.route_mask(qp, lp, *packed, dim_real=dim_real,
+                              slack=slack, block_b=block_b,
+                              interpret=interpret)
+    return out[:B]
+
+
+def route_mask(queries, ls, packed, *, slack=1e-4):
+    """(B, k) bool active mask — the route_shards decision on device
+    (see kernels/routing.py).
+
+    ``packed`` is the operand tuple from ``routing.pack_summaries`` (one
+    pack per store generation; the server caches it).  Traceable: the
+    service executable calls this in its prologue so routing rides the
+    batch's own launch.  Mode routing mirrors the other entry points —
+    oracle runs the shared jnp math core directly; a Mosaic-hostile
+    shape (lane dims not 128-aligned — always true at the repo's k=8)
+    ALSO takes the jnp core, which still fuses into the same XLA program
+    and stays device-side; only the aligned case pays a pallas_call.
+    """
+    mode = _mode()
+    q = jnp.asarray(queries, jnp.float32)
+    ls2 = jnp.asarray(ls, jnp.int32).reshape(-1, 1)
+    dim_real = q.shape[1]
+    k = packed[1].shape[1]
+    if mode != "interpret" and (mode == "oracle"
+                                or dim_real % 128 or k % 128):
+        out = _route_ref_jit(q, ls2, *packed, dim_real=dim_real,
+                             slack=slack)
+    else:
+        out = _route_padded(q, ls2, *packed, dim_real=dim_real,
+                            slack=slack, block_b=_routing.DEFAULT_BLOCK_B,
+                            interpret=mode == "interpret")
+    return out != 0

@@ -58,6 +58,15 @@ splitting (``split_radius_factor``) keep the covering bounds tight
 mid-stream; ``placement_stats()`` reports the per-shard
 ``summary_slack`` decay probe and the maintenance counters.
 benchmarks/bench_serve.py runs the drifting-cluster adaptive A/B.
+
+With ``cfg.route_compute="device"`` the routing decision itself moves
+off the host: the summary operands are packed once per frozen summaries
+object (kernels/routing.pack_summaries) and the lower-bound /
+cumulative-live threshold test runs as a Pallas prologue inside the same
+jitted program as the shard_map query — the touched-shard mask returns
+with the batch instead of costing a separate O(B·k·(dim+r)) host numpy
+pass per dispatch.  Answers stay bit-identical (tests/test_routing.py
+proves mask parity against the host router; DESIGN.md Section 11).
 """
 
 from __future__ import annotations
@@ -76,6 +85,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.knn_service import CONFIG, KnnServiceConfig
 from repro.core import knn as knn_mod
 from repro.kernels import ops as kops
+from repro.kernels import routing as routing_mod
 from repro.parallel.compat import make_mesh, shard_map
 from repro.store import summaries as summaries_mod
 
@@ -129,6 +139,16 @@ class QueryResult(NamedTuple):
 
 @dataclasses.dataclass
 class ServerStats:
+    """Serving counters, safe to update and read from any thread.
+
+    ``observe()`` may race between the micro-batcher thread and a
+    caller's ``flush()``; it takes the internal lock, and readers who
+    need mutually-consistent values (e.g. ``queries`` vs
+    ``bucket_counts``) take ``snapshot()`` rather than reading fields
+    one by one — field reads are individually atomic in CPython but a
+    multi-field read can tear across a concurrent ``observe()``.
+    """
+
     queries: int = 0
     batches: int = 0
     padded_rows: int = 0
@@ -138,16 +158,30 @@ class ServerStats:
     # KnnServer.placement_stats()'s prune rate.
     touched_shards: int = 0
     routed_batches: int = 0
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def observe(self, bucket: int, n_real: int,
                 touched: Optional[int] = None):
-        self.queries += n_real
-        self.batches += 1
-        self.padded_rows += bucket - n_real
-        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
-        if touched is not None:
-            self.touched_shards += touched
-            self.routed_batches += 1
+        with self._lock:
+            self.queries += n_real
+            self.batches += 1
+            self.padded_rows += bucket - n_real
+            self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+            if touched is not None:
+                self.touched_shards += touched
+                self.routed_batches += 1
+
+    def snapshot(self) -> dict:
+        """One-lock-acquisition copy of every counter — the consistent
+        view: invariants like ``batches == sum(bucket_counts.values())``
+        hold inside a snapshot even while ``observe()`` races."""
+        with self._lock:
+            return {"queries": self.queries, "batches": self.batches,
+                    "padded_rows": self.padded_rows,
+                    "bucket_counts": dict(self.bucket_counts),
+                    "touched_shards": self.touched_shards,
+                    "routed_batches": self.routed_batches}
 
 
 @dataclasses.dataclass
@@ -196,6 +230,9 @@ class KnnServer:
         if cfg.route not in ("exact", "pruned"):
             raise ValueError(f"route must be 'exact' or 'pruned', "
                              f"got {cfg.route!r}")
+        if cfg.route_compute not in ("host", "device"):
+            raise ValueError(f"route_compute must be 'host' or 'device', "
+                             f"got {cfg.route_compute!r}")
         self._store = store
         if store is not None:
             if points is not None or values is not None:
@@ -271,6 +308,16 @@ class KnnServer:
             for b in cfg.bucket_sizes]
 
         self._fn = self._build_executable()
+        # route_compute="device": fold the routing decision into the same
+        # jitted program as the query (Pallas prologue, kernels/routing.py).
+        # The packed summary operands are cached per frozen-summaries
+        # object — identity, not generation, because a background
+        # re-tighten re-freezes at the *same* generation with tighter
+        # bounds (store/maintenance.py) and the cache must follow it.
+        self._route_fn = None
+        self._packed_cache = None
+        if cfg.route == "pruned" and cfg.route_compute == "device":
+            self._route_fn = self._build_device_router()
         self._base_key = jax.random.PRNGKey(seed)
         self._batch_counter = 0
 
@@ -356,6 +403,40 @@ class KnnServer:
             out_specs=(P(None), P(None), P(), P(None)),
             check_vma=False))
 
+    def _build_device_router(self):
+        """Outer jitted program: route prologue + the shard_map query.
+
+        The prologue runs ``kops.route_mask`` (the Pallas routing kernel,
+        kernels/routing.py) over the whole micro-batch, reduces the
+        per-row keep mask to the batch's union ``active`` vector, feeds
+        it to the routed executable as its (k,) shard-active operand, and
+        returns ``active`` as a fifth output — the touched-shard set
+        rides the launch home with the answers, replacing the host
+        numpy ``summaries.route_shards`` pass per dispatch.  Nested jit
+        inlines, so the whole thing is one cached executable per bucket.
+        """
+        inner = self._fn
+        slack = self.cfg.route_slack
+
+        def routed(operands, packed, q, l_arr, key):
+            rows = kops.route_mask(q, l_arr, packed, slack=slack)
+            active = jnp.any(rows, axis=0)
+            d, i, iters, surv = inner(*operands, active, q, l_arr, key)
+            return d, i, iters, surv, active
+
+        return jax.jit(routed)
+
+    def _packed_for(self, summ):
+        """Kernel-layout summary operands for ``summ``, cached by object
+        identity (one frozen ShardSummaries == one packed tuple; a
+        benign last-writer-wins race between concurrent dispatchers just
+        repacks once more)."""
+        cached = self._packed_cache
+        if cached is None or cached[0] is not summ:
+            cached = (summ, routing_mod.pack_summaries(summ))
+            self._packed_cache = cached
+        return cached[1]
+
     def _backing_arrays(self):
         """(executable operands, generation, summaries) for one dispatch.
 
@@ -394,9 +475,9 @@ class KnnServer:
         ingest phase to report per-policy prune rate and bound decay
         (DESIGN.md Sections 9 and 10).
         """
-        with self._cv:
-            touched = self.stats.touched_shards
-            routed = self.stats.routed_batches
+        snap = self.stats.snapshot()
+        touched = snap["touched_shards"]
+        routed = snap["routed_batches"]
         if self._store is not None:
             hist = [int(v) for v in self._store.live_per_shard]
             placement = self._store.placement
@@ -421,7 +502,16 @@ class KnnServer:
 
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
-        operands, _, _ = self._backing_arrays()
+        operands, _, summ = self._backing_arrays()
+        if self._route_fn is not None:
+            packed = self._packed_for(summ)
+            for b in self.cfg.bucket_sizes:
+                q = np.zeros((b, self.dim), np.float32)
+                l_arr = np.zeros(b, np.int32)
+                out = self._route_fn(operands, packed, q, l_arr,
+                                     self._base_key)
+                jax.block_until_ready(out)
+            return
         if self.cfg.route == "pruned":
             operands = operands + (np.ones(self.k, bool),)
         for b in self.cfg.bucket_sizes:
@@ -511,7 +601,15 @@ class KnnServer:
         t_dispatch = time.perf_counter()
         try:
             operands, generation, summ = self._backing_arrays()
-            if self.cfg.route == "pruned":
+            if self._route_fn is not None:
+                # Device routing: the Pallas prologue computes the
+                # touched-shard union inside the same launch as the
+                # query; ``active`` comes back with the batch.
+                packed = self._packed_for(summ)
+                d, i, iters, surv, active = self._route_fn(
+                    operands, packed, q, l_arr, key)
+                touched = int(np.asarray(active).sum())
+            elif self.cfg.route == "pruned":
                 # Touched-shard set for this micro-batch: the union over
                 # real rows of the summary lower-bound survivors (padding
                 # rows carry l=0 and route nowhere).  One collective pass
@@ -522,9 +620,10 @@ class KnnServer:
                 active = active_rows.any(axis=0)
                 touched = int(active.sum())
                 operands = operands + (active,)
+                d, i, iters, surv = self._fn(*operands, q, l_arr, key)
             else:
                 touched = self.k
-            d, i, iters, surv = self._fn(*operands, q, l_arr, key)
+                d, i, iters, surv = self._fn(*operands, q, l_arr, key)
             d = np.asarray(d)
             i = np.asarray(i)
             surv = np.asarray(surv)
@@ -538,10 +637,9 @@ class KnnServer:
         t_done = time.perf_counter()
 
         rounds, messages = self._accounting(iters, touched)
-        with self._cv:
-            self.stats.observe(
-                bucket, n,
-                touched=touched if self.cfg.route == "pruned" else None)
+        self.stats.observe(
+            bucket, n,
+            touched=touched if self.cfg.route == "pruned" else None)
         for row, rec in enumerate(chunk):
             # ascending by distance (gather_selected packs by shard rank,
             # not by distance; l is small, so sort host-side — this also
@@ -583,12 +681,28 @@ class KnnServer:
         self._thread.start()
 
     def stop(self):
+        """Quiesce the micro-batcher and drain the queue.
+
+        Contract (tests/test_knn_server.py::test_server_stop_drains):
+
+        * every request pending at stop() entry has its Future resolved
+          by the time stop() returns — none stranded;
+        * each request is dispatched exactly once (the batcher takes a
+          chunk under the lock before dispatching, so the final
+          ``flush()`` can never re-dispatch a request the exiting
+          batcher already took);
+        * FIFO order is preserved through the drain;
+        * stop() is idempotent and safe to race with itself — the
+          thread handle is captured-and-cleared under the lock, so
+          exactly one caller joins it and a second concurrent stop()
+          just flushes.
+        """
         with self._cv:
             self._running = False
             self._cv.notify_all()
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
         self.flush()          # leave no request stranded
 
     def serving(self):

@@ -1,14 +1,17 @@
 """Mutable sharded point store — streaming ingest/deletes under the
 static-shape query path, with epoch-swapped serving (DESIGN.md Section 7),
 pruned shard routing (Section 8), locality-aware placement (Section 9),
-and adaptive summary maintenance (Section 10).
+adaptive summary maintenance (Section 10), and a background maintenance
+plane (Section 11).
 """
 
 from repro.store.mutable import (ID_SENTINEL, IngestStats, MutableStore,
                                  StoreFullError, StoreSnapshot)
 from repro.store.adaptive import AdaptiveMaintainer, compute_pivots
 from repro.store.compaction import (CompactionDecision, evaluate,
-                                    redeal_slack, repack)
+                                    redeal_slack, repack,
+                                    scatter_operands)
+from repro.store.maintenance import MaintenanceStats, MaintenanceWorker
 from repro.store.placement import (AffinityPlacement, BalancePlacement,
                                    PlacementPolicy, PlacementView,
                                    lloyd_centroids, make_placement,
@@ -16,17 +19,19 @@ from repro.store.placement import (AffinityPlacement, BalancePlacement,
 from repro.store.summaries import (ShardSummaries, SummaryMaintainer,
                                    build_summaries, lower_bounds,
                                    route_shards, summary_invariants,
-                                   summary_slack, upper_bounds)
+                                   summary_slack, summary_slack_sampled,
+                                   upper_bounds)
 
 __all__ = [
     "MutableStore", "StoreSnapshot", "StoreFullError", "IngestStats",
     "ID_SENTINEL", "CompactionDecision", "evaluate", "redeal_slack",
-    "repack",
+    "repack", "scatter_operands",
     "AdaptiveMaintainer", "compute_pivots",
+    "MaintenanceStats", "MaintenanceWorker",
     "PlacementPolicy", "PlacementView", "BalancePlacement",
     "AffinityPlacement", "make_placement", "lloyd_centroids",
     "repack_proximity",
     "ShardSummaries", "SummaryMaintainer", "build_summaries",
     "lower_bounds", "upper_bounds", "route_shards", "summary_invariants",
-    "summary_slack",
+    "summary_slack", "summary_slack_sampled",
 ]

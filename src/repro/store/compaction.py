@@ -100,6 +100,34 @@ def redeal_slack(guard_slack: int, imbalance_frac: float, cap: int,
                max(0, int(imbalance_frac * cap / k) - 1))
 
 
+def scatter_operands(slots, points: np.ndarray, ids: np.ndarray,
+                     valid: np.ndarray, total: int, dim: int, *,
+                     id_sentinel: int):
+    """Padded operand block for one batched slot scatter: ``(idx,
+    upd_pts, upd_ids, upd_valid)`` carrying the *final* mirror value of
+    each touched slot, padded to a power of two (small jit cache across
+    flushes of varying size) with out-of-range rows (index ``total``)
+    the scatter drops.
+
+    Shared by the store's staged-flush apply (``_scatter_locked``) and
+    the background maintenance worker's journal-replay commit
+    (store/maintenance.py) — the two paths that scatter mirror deltas
+    onto a device generation must build identical operands or the epoch
+    swap's mirror-is-authoritative contract splits in two.
+    """
+    n = len(slots)
+    pad = max(8, 1 << max(0, (n - 1).bit_length()))
+    idx = np.full(pad, total, np.int32)
+    idx[:n] = slots
+    upd_pts = np.zeros((pad, dim), np.float32)
+    upd_ids = np.full(pad, id_sentinel, np.int32)
+    upd_valid = np.zeros(pad, bool)
+    upd_pts[:n] = points[slots]
+    upd_ids[:n] = ids[slots]
+    upd_valid[:n] = valid[slots]
+    return idx, upd_pts, upd_ids, upd_valid
+
+
 class RepackResult(NamedTuple):
     points: np.ndarray     # (k*cap, dim) new point mirror
     ids: np.ndarray        # (k*cap,) new id mirror (sentinel in free slots)

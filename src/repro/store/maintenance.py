@@ -1,0 +1,346 @@
+"""Background maintenance worker — the store's async serving plane.
+
+Under ``maintenance="inline"`` every flush pays for summary hygiene at
+the tail of ``_apply_locked`` while holding the store lock: an exact
+re-tightening is O(live·dim) host work, a split or auto-compaction is a
+full repack *plus* a full device upload — and every concurrent reader
+and writer stalls behind it.  PANDA (Patwary et al., 2016) makes the
+case that distributed kNN serving survives scale precisely by
+overlapping index maintenance with query service; this module is that
+overlap for the mutable store.
+
+One daemon worker thread per store runs a plan / prepare / commit loop:
+
+* **Plan (short lock).**  Priority follows the inline plane's
+  precedence: an armed auto-compaction trigger first, then a radius
+  split, then the stalest due re-tightening — "stalest" by a *sampled*
+  summary-slack probe (:func:`repro.store.summaries.summary_slack_sampled`,
+  O(k·sample·dim)) rather than the inline round-robin cursor, so the
+  shard whose bounds decayed most gets served first.  Planning also
+  opens the **journal**: from here until commit, ``_apply_locked``
+  records every applied op ``(kind, id, shard, new_point, old_point)``.
+
+* **Prepare (no lock).**  Everything expensive happens against captured
+  copies: the exact per-shard recompute runs on a k=1 scratch
+  maintainer; a repack runs :func:`repro.store.compaction.repack` /
+  :func:`repro.store.placement.repack_proximity` on copied mirrors,
+  rebuilds a full scratch maintainer, and ``device_put``s the repacked
+  buffers — in-flight micro-batches keep serving their snapshot
+  throughout, and concurrent flushes keep publishing fresh generations.
+
+* **Commit (short lock).**  If an inline repack invalidated the capture
+  (forced repack on a full shard, explicit ``compact()``), the staged
+  work is discarded — the store already rebuilt itself exactly.
+  Otherwise the journal replays onto the staged state: a re-tightening
+  replays the captured shard's ops into the scratch maintainer and
+  transplants the result (``AdaptiveMaintainer.copy_shard_from``; the
+  summaries re-freeze at the *current* generation — same live set,
+  tighter bounds, still atomic under the lock, so the
+  (snapshot, summaries) generation-coupling invariant holds); a repack
+  replays every journaled op onto the staged mirrors (placement picks
+  against the staged layout), scatters the replayed slots onto the
+  pre-uploaded device buffers, installs mirrors + maintainer, and
+  publishes the epoch swap exactly like a flush does.  Replay is
+  journal-order and total, so the committed state is byte-equal to what
+  an inline repack at commit time would have produced — live set,
+  id→slot map, and live counts all agree with the mirrors that raced it.
+
+Exactness is untouched: every published generation's snapshot is a pure
+function of the applied op sequence (layout may differ between planes;
+answers may not — selection is layout-independent, and the concurrency
+harness tests/test_async_maintenance.py holds every served answer
+bit-identical to a quiet-store oracle replayed at its generation).
+DESIGN.md Section 11 walks the protocol and its failure cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import traceback
+from typing import Optional
+
+import numpy as np
+
+from repro.store import adaptive as adaptive_mod
+from repro.store import compaction
+from repro.store import placement as placement_mod
+from repro.store import summaries as summaries_mod
+
+
+@dataclasses.dataclass
+class MaintenanceStats:
+    cycles: int = 0          # plans that found work
+    retightens: int = 0      # committed background re-tightenings
+    repacks: int = 0         # committed background repacks (incl. splits)
+    splits: int = 0          # the split-triggered subset of repacks
+    commits: int = 0         # total committed cycles
+    discards: int = 0        # staged work dropped (invalidated / no room)
+    replayed_ops: int = 0    # journal ops replayed across all commits
+    errors: int = 0          # cycles that raised (see .error)
+
+
+class MaintenanceWorker:
+    """One store's background maintenance thread; see module docstring.
+
+    Event-driven: the store pokes :meth:`notify` after every apply, and
+    the loop also wakes on a short timeout as a belt-and-braces guard.
+    All state mutation — the store's *and* this worker's stats — happens
+    under the store lock, so ``stats_dict()`` reads are torn-free.
+    """
+
+    def __init__(self, store, *, probe_sample: int = 64, seed: int = 0):
+        self._store = store
+        self.probe_sample = int(probe_sample)
+        self._rng = np.random.default_rng(seed)
+        self.stats = MaintenanceStats()
+        self.error: Optional[str] = None
+        self._event = threading.Event()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._run, name="knn-store-maintenance", daemon=True)
+        self._thread.start()
+
+    # ---- lifecycle -------------------------------------------------------
+
+    def notify(self) -> None:
+        """Wake the worker (called by the store after each apply; safe
+        under the store lock — this only sets an event)."""
+        self._event.set()
+
+    def stop(self) -> None:
+        """Stop and join the worker.  A cycle in flight finishes (its
+        commit either lands or discards) before the thread exits."""
+        self._stop.set()
+        self._event.set()
+        self._thread.join()
+
+    def stats_dict(self) -> dict:
+        d = dataclasses.asdict(self.stats)
+        d["probe_sample"] = self.probe_sample
+        d["error"] = self.error
+        return d
+
+    # ---- worker loop -----------------------------------------------------
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self._event.wait(timeout=0.1)
+            self._event.clear()
+            while not self._stop.is_set():
+                try:
+                    if not self._cycle():
+                        break
+                except Exception:       # keep serving; surface via stats
+                    with self._store._lock:
+                        self._store._journal = None
+                        self.stats.errors += 1
+                        self.error = traceback.format_exc()
+                    break
+
+    def _plan_locked(self):
+        """Pick the next unit of work (store lock held), or None.
+
+        Same precedence as the inline tail: compaction debt first (it
+        rebuilds everything anyway), then a radius split, then the due
+        shard with the *largest sampled summary slack* — the probe
+        over-estimates true slack (sampling can only shrink the exact
+        radius it subtracts) which is safe for prioritization.
+        """
+        st = self._store
+        if st.auto_compact:
+            decision = compaction.evaluate(
+                st._live, st._used, st.cap,
+                tombstone_frac=st.compact_tombstone_frac,
+                imbalance_frac=st.compact_imbalance_frac)
+            if decision.compact:
+                return ("repack", st.redeal, decision.reason)
+        j = st._split_due_locked()
+        if j is not None:
+            return ("split", "proximity",
+                    f"split: shard {j} radius outgrew the centroid gap")
+        if st._summ.retighten_every > 0:
+            due = np.flatnonzero(
+                (st._summ._ops_since >= st._summ.retighten_every)
+                & (st._summ._n > 0))
+            if due.size:
+                slack = summaries_mod.summary_slack_sampled(
+                    st._summaries, st._pts, st._valid, st.cap,
+                    sample=self.probe_sample, rng=self._rng)
+                return ("retighten", int(due[np.argmax(slack[due])]))
+        return None
+
+    def _scratch(self, k: int) -> adaptive_mod.AdaptiveMaintainer:
+        """A fresh maintainer with the store's exact summary knobs — the
+        off-lock workspace whose state transplants into the live one."""
+        st = self._store
+        return adaptive_mod.AdaptiveMaintainer(
+            k, st.dim, num_projections=st._summ.num_projections,
+            seed=st._summ.seed, num_pivots=st._summ.num_pivots,
+            retighten_every=st._summ.retighten_every,
+            split_radius_factor=st._summ.split_radius_factor)
+
+    def _cycle(self) -> bool:
+        """One plan / prepare / commit pass; False when no work is due."""
+        st = self._store
+        with st._lock:
+            plan = self._plan_locked()
+            if plan is None:
+                return False
+            self.stats.cycles += 1
+            st._journal = []
+            st._journal_invalid = False
+            if plan[0] == "retighten":
+                j = plan[1]
+                sl = slice(j * st.cap, (j + 1) * st.cap)
+                pj = np.asarray(st._pts[sl][st._valid[sl]], np.float64)
+            else:
+                pts = st._pts.copy()
+                ids = st._ids.copy()
+                valid = st._valid.copy()
+                if (plan[1] or st.redeal) == "proximity":
+                    centroids, _, occupied = st._summ.placement_view()
+                    seed_cents = (centroids[occupied]
+                                  if occupied.any() else None)
+                slack = compaction.redeal_slack(
+                    st.placement_guard_slack, st.compact_imbalance_frac,
+                    st.cap, st.k)
+        if plan[0] == "retighten":
+            self._retighten(plan[1], pj)
+        else:
+            self._repack(plan, pts, ids, valid,
+                         seed_cents if plan[1] == "proximity" else None,
+                         slack)
+        return True
+
+    # ---- re-tightening ---------------------------------------------------
+
+    def _retighten(self, j: int, pj: np.ndarray) -> None:
+        st = self._store
+        scratch = self._scratch(1)
+        if len(pj):                              # off-lock exact rebuild
+            scratch._rebuild_shard(0, pj)
+        with st._lock:
+            journal, st._journal = st._journal, None
+            if st._journal_invalid:
+                self.stats.discards += 1
+                return
+            # replay what raced the rebuild — shard j's ops only
+            for kind, _pid, shard, new_pt, old_pt in journal:
+                if shard != j:
+                    continue
+                if kind == "insert":
+                    scratch.insert(0, new_pt)
+                elif kind == "delete":
+                    scratch.delete(0, old_pt)
+                else:
+                    scratch.update(0, old_pt, new_pt)
+                self.stats.replayed_ops += 1
+            st._summ.copy_shard_from(j, scratch, 0)
+            # same data, tighter bounds: re-freeze at the CURRENT
+            # generation — no epoch swap, still atomic under the lock
+            st._summaries = st._summ.freeze(st._snap.generation)
+            st.stats.retightens += 1
+            self.stats.retightens += 1
+            self.stats.commits += 1
+
+    # ---- repack / split --------------------------------------------------
+
+    def _repack(self, plan, pts, ids, valid, seed_cents,
+                slack: int) -> None:
+        from repro.store import mutable as mutable_mod
+        st = self._store
+        kind, redeal, reason = plan
+        # ---- prepare off-lock: repack copies, rebuild a scratch
+        # maintainer, upload the repacked buffers ----
+        if (redeal or st.redeal) == "proximity":
+            res = placement_mod.repack_proximity(
+                pts, ids, valid, st.k, st.cap,
+                id_sentinel=mutable_mod.ID_SENTINEL, balance_slack=slack,
+                seed_centroids=seed_cents)
+        else:
+            res = compaction.repack(pts, ids, valid, st.k, st.cap,
+                                    id_sentinel=mutable_mod.ID_SENTINEL)
+        scratch = self._scratch(st.k)
+        scratch.rebuild(res.points, res.valid, st.cap)
+        # upload copies: replay mutates the staged mirrors after this,
+        # and the transfer may still be in flight (the same rule as
+        # _upload_snapshot_locked)
+        import jax
+        dev_pts = jax.device_put(res.points.copy(), st._sharding)
+        dev_ids = jax.device_put(res.ids.copy(), st._sharding)
+        dev_valid = jax.device_put(res.valid.copy(), st._sharding)
+
+        with st._lock:
+            journal, st._journal = st._journal, None
+            if st._journal_invalid:
+                self.stats.discards += 1
+                return
+            new_pts, new_ids, new_valid = res.points, res.ids, res.valid
+            slot_of, live, used = res.slot_of, res.live, res.used
+            touched: set[int] = set()
+            for kind_op, pid, _shard, new_pt, old_pt in journal:
+                if kind_op == "insert":
+                    if st._placement.uses_centroids:
+                        c, r, occ = scratch.placement_view()
+                    else:
+                        c = r = occ = None
+                    j = st._placement.pick(
+                        new_pt, placement_mod.PlacementView(
+                            live=live, used=used, cap=st.cap,
+                            centroids=c, radii=r, occupied=occ))
+                    if j < 0:
+                        # the staged layout has no tail room for what
+                        # raced it — drop the staged work; the store's
+                        # own state already has these ops applied
+                        self.stats.discards += 1
+                        return
+                    slot = j * st.cap + int(used[j])
+                    used[j] += 1
+                    live[j] += 1
+                    scratch.insert(j, new_pt)
+                    new_pts[slot] = new_pt
+                    new_ids[slot] = pid
+                    new_valid[slot] = True
+                    slot_of[pid] = slot
+                    touched.add(slot)
+                elif kind_op == "delete":
+                    slot = slot_of.pop(pid)
+                    live[slot // st.cap] -= 1
+                    scratch.delete(slot // st.cap, new_pts[slot])
+                    new_valid[slot] = False
+                    new_ids[slot] = mutable_mod.ID_SENTINEL
+                    touched.add(slot)
+                else:  # update
+                    slot = slot_of[pid]
+                    scratch.update(slot // st.cap, new_pts[slot], new_pt)
+                    new_pts[slot] = new_pt
+                    touched.add(slot)
+                self.stats.replayed_ops += 1
+            if touched:
+                idx, up, ui, uv = compaction.scatter_operands(
+                    sorted(touched), new_pts, new_ids, new_valid,
+                    st.total, st.dim,
+                    id_sentinel=mutable_mod.ID_SENTINEL)
+                dev_pts, dev_ids, dev_valid = st._apply_fn(
+                    dev_pts, dev_ids, dev_valid, idx, up, ui, uv)
+            # ---- install + epoch swap (identical publish sequence to
+            # _apply_locked's repack arm) ----
+            st._pts, st._ids, st._valid = new_pts, new_ids, new_valid
+            st._slot_of, st._live, st._used = slot_of, live, used
+            gen = st._snap.generation + 1
+            st._snap = mutable_mod.StoreSnapshot(
+                generation=gen, points=dev_pts, ids=dev_ids,
+                valid=dev_valid, live=int(live.sum()))
+            st._summ = scratch
+            st._summaries = scratch.freeze(gen)
+            st.stats.applies += 1
+            st.stats.compactions += 1
+            st.stats.last_compact_reason = reason
+            if kind == "split":
+                st.stats.splits += 1
+                st._applies_at_split = st.stats.applies
+                self.stats.splits += 1
+            st._record_history()
+            self.stats.repacks += 1
+            self.stats.commits += 1

@@ -54,7 +54,21 @@ up the repo's static-shape discipline:
   between splits) — pruned routing stays effective mid-stream instead of
   decaying until the next compaction.
 
-Protocol details and the trigger math: DESIGN.md Sections 7, 9, and 10.
+* **Maintenance planes** (``store/maintenance.py``).  Under the default
+  ``maintenance="inline"`` all of the above runs at the tail of
+  ``_apply_locked`` under the store lock — exact, simple, and a stall
+  every flush pays.  ``maintenance="background"`` hands re-tightening,
+  splits, and auto-compaction to a worker thread: every applied op is
+  journaled while the worker holds a capture, the worker prepares exact
+  rebuilds / repacked buffers / device uploads entirely off-lock, then
+  commits by replaying the journal and swapping the epoch under a short
+  lock window.  Forced repacks (a full shard mid-flush) and explicit
+  :meth:`compact` stay inline — they are correctness, not hygiene — and
+  invalidate any in-flight capture.  Answers stay bit-identical to the
+  inline plane at every generation (tests/test_async_maintenance.py).
+
+Protocol details and the trigger math: DESIGN.md Sections 7, 9, 10,
+and 11.
 """
 
 from __future__ import annotations
@@ -70,6 +84,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.parallel.compat import make_mesh
 from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
+from repro.store import maintenance as maintenance_mod
 from repro.store import placement as placement_mod
 from repro.store import summaries as summaries_mod
 
@@ -136,12 +151,16 @@ class MutableStore:
                  redeal: str = "round_robin",
                  summary_pivots: int = 1, retighten_every: int = 0,
                  split_radius_factor: float = 0.0,
-                 split_cooldown: int = 2):
+                 split_cooldown: int = 2, maintenance: str = "inline",
+                 maintenance_probe_sample: int = 64):
         if capacity_per_shard < 1:
             raise ValueError("capacity_per_shard must be >= 1")
         if redeal not in ("round_robin", "proximity"):
             raise ValueError(f"redeal must be 'round_robin' or 'proximity', "
                              f"got {redeal!r}")
+        if maintenance not in ("inline", "background"):
+            raise ValueError(f"maintenance must be 'inline' or 'background', "
+                             f"got {maintenance!r}")
         self.dim = int(dim)
         self.axis_name = axis_name
         self.mesh = mesh if mesh is not None else make_mesh(
@@ -213,6 +232,33 @@ class MutableStore:
         self._summaries = self._summ.freeze(0)
         self._record_history()
 
+        # Maintenance plane (store/maintenance.py).  The journal exists
+        # only while the background worker holds an outstanding capture:
+        # _apply_locked appends every applied op to it so the worker's
+        # commit can replay what raced its off-lock preparation; an
+        # inline repack (forced, or explicit compact()) invalidates the
+        # capture instead — the repack already rebuilt everything the
+        # staged work was about to.
+        self.maintenance = str(maintenance)
+        self._journal: Optional[list] = None
+        self._journal_invalid = False
+        self._worker: Optional[maintenance_mod.MaintenanceWorker] = None
+        if self.maintenance == "background":
+            self._worker = maintenance_mod.MaintenanceWorker(
+                self, probe_sample=maintenance_probe_sample)
+
+    def close(self) -> None:
+        """Stop the background maintenance worker (no-op when inline or
+        already closed).  Staged work in flight is either committed or
+        discarded before the worker thread exits; the store itself stays
+        fully usable — only unscheduled maintenance stops happening."""
+        worker, self._worker = self._worker, None
+        if worker is not None:
+            worker.stop()
+            # final counters stay reportable after close (benchmarks and
+            # the concurrency harness read them post-quiesce)
+            self._worker_final = worker
+
     # ---- read side -------------------------------------------------------
 
     def snapshot(self) -> StoreSnapshot:
@@ -264,13 +310,18 @@ class MutableStore:
         """Adaptive-maintenance counters and knobs, one dict (the
         placement_stats() payload)."""
         with self._lock:
-            return {
+            out = {
                 "summary_pivots": self._summ.num_pivots,
                 "retighten_every": self._summ.retighten_every,
                 "split_radius_factor": self._summ.split_radius_factor,
                 "retightens": self.stats.retightens,
                 "splits": self.stats.splits,
+                "maintenance": self.maintenance,
             }
+            worker = self._worker or getattr(self, "_worker_final", None)
+            if worker is not None:
+                out["worker"] = worker.stats_dict()
+            return out
 
     @property
     def generation(self) -> int:
@@ -462,10 +513,17 @@ class MutableStore:
                     self._values[op.id] = op.value
                 touched.add(slot)
                 self.stats.inserted += 1
+                if self._journal is not None:
+                    self._journal.append(("insert", op.id, j, op.point,
+                                          None))
             elif op.kind == "delete":
                 slot = self._slot_of.pop(op.id)
                 self._live[slot // self.cap] -= 1
                 self._summ.delete(slot // self.cap, self._pts[slot])
+                if self._journal is not None:
+                    self._journal.append(("delete", op.id,
+                                          slot // self.cap, None,
+                                          self._pts[slot].copy()))
                 self._valid[slot] = False
                 self._ids[slot] = ID_SENTINEL
                 touched.add(slot)
@@ -474,6 +532,10 @@ class MutableStore:
                 slot = self._slot_of[op.id]
                 self._summ.update(slot // self.cap, self._pts[slot],
                                   op.point)
+                if self._journal is not None:
+                    self._journal.append(("update", op.id,
+                                          slot // self.cap, op.point,
+                                          self._pts[slot].copy()))
                 self._pts[slot] = op.point
                 touched.add(slot)
                 self.stats.updated += 1
@@ -482,7 +544,8 @@ class MutableStore:
             self._repack_locked()
             repacked = True
             self.stats.last_compact_reason = "forced: explicit compact()"
-        elif self.auto_compact and not repacked:
+        elif (self.auto_compact and self.maintenance == "inline"
+              and not repacked):
             decision = compaction.evaluate(
                 self._live, self._used, self.cap,
                 tombstone_frac=self.compact_tombstone_frac,
@@ -498,21 +561,26 @@ class MutableStore:
         # the quota clamp and the maintainer's growth guard keep it from
         # re-arming the compactor — else at most ONE due shard gets an
         # O(live·dim) exact re-tightening, round-robin, off any stall
-        # path.
-        if not repacked:
-            j = self._split_due_locked()
-            if j is not None:
-                self._repack_locked(redeal="proximity")
-                repacked = True
-                self.stats.splits += 1
-                self._applies_at_split = self.stats.applies
-                self.stats.last_compact_reason = (
-                    f"split: shard {j} radius outgrew the centroid gap")
-        if not repacked:
-            j = self._summ.retighten_due()
-            if j is not None:
-                self._summ.retighten(j, self._pts, self._valid, self.cap)
-                self.stats.retightens += 1
+        # path.  maintenance="background" moves this whole tail (and the
+        # auto-compact evaluation above) to the worker thread
+        # (store/maintenance.py) — the flush publishes immediately and
+        # the worker is poked after the swap.
+        if self.maintenance == "inline":
+            if not repacked:
+                j = self._split_due_locked()
+                if j is not None:
+                    self._repack_locked(redeal="proximity")
+                    repacked = True
+                    self.stats.splits += 1
+                    self._applies_at_split = self.stats.applies
+                    self.stats.last_compact_reason = (
+                        f"split: shard {j} radius outgrew the centroid gap")
+            if not repacked:
+                j = self._summ.retighten_due()
+                if j is not None:
+                    self._summ.retighten(j, self._pts, self._valid,
+                                         self.cap)
+                    self.stats.retightens += 1
 
         self._projected_live = int(self._live.sum())
         gen = self._snap.generation + 1
@@ -527,6 +595,8 @@ class MutableStore:
         self.stats.applies += 1
         self._summaries = self._summ.freeze(gen)
         self._record_history()
+        if self._worker is not None:
+            self._worker.notify()
         return gen
 
     def _upload_snapshot_locked(self, *, generation: int) -> StoreSnapshot:
@@ -573,6 +643,11 @@ class MutableStore:
         """Repack under ``redeal`` (default: the store's configured mode;
         adaptive splits pass "proximity" explicitly — a split exists to
         separate clusters, whatever the compaction-time deal is)."""
+        # An inline repack rebuilds mirrors AND summaries exactly; any
+        # background capture prepared against the pre-repack layout is
+        # now both stale and pointless — invalidate it.
+        if self._journal is not None:
+            self._journal_invalid = True
         if (redeal or self.redeal) == "proximity":
             centroids, _, occupied = self._summ.placement_view()
             # Quota slack shares the placement guardrail knob, clamped
@@ -606,16 +681,9 @@ class MutableStore:
         and are dropped.  Padded to powers of two so the jit cache stays
         small across flushes of varying size.
         """
-        n = len(slots)
-        pad = max(8, 1 << max(0, (n - 1).bit_length()))
-        idx = np.full(pad, self.total, np.int32)
-        idx[:n] = slots
-        upd_pts = np.zeros((pad, self.dim), np.float32)
-        upd_ids = np.full(pad, ID_SENTINEL, np.int32)
-        upd_valid = np.zeros(pad, bool)
-        upd_pts[:n] = self._pts[slots]
-        upd_ids[:n] = self._ids[slots]
-        upd_valid[:n] = self._valid[slots]
+        idx, upd_pts, upd_ids, upd_valid = compaction.scatter_operands(
+            slots, self._pts, self._ids, self._valid, self.total,
+            self.dim, id_sentinel=ID_SENTINEL)
         return self._apply_fn(self._snap.points, self._snap.ids,
                               self._snap.valid, idx, upd_pts, upd_ids,
                               upd_valid)

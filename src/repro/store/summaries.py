@@ -455,3 +455,33 @@ def summary_slack(s: ShardSummaries, points: np.ndarray, valid: np.ndarray,
         exact = float(np.sqrt(((pj - s.centroids[j]) ** 2).sum(-1)).max())
         out[j] = float(s.radii[j]) - exact
     return out
+
+
+def summary_slack_sampled(s: ShardSummaries, points: np.ndarray,
+                          valid: np.ndarray, cap: int, *,
+                          sample: int = 64, rng=None) -> np.ndarray:
+    """(k,) sampled covering-radius slack — the maintenance worker's
+    prioritization probe (repro.store.maintenance).
+
+    Like :func:`summary_slack` but evaluates the exact live radius on at
+    most ``sample`` uniformly drawn live points per shard, so a planning
+    pass over all k shards costs O(k·sample·dim) instead of O(n·dim).
+    Sampling can only *under*-estimate the true live radius, so the
+    returned slack over-estimates the exact one — safe for picking which
+    shard to re-tighten first (the stalest shard still ranks high), never
+    used as a bound.  Empty shards report 0.0.
+    """
+    pts = np.asarray(points, np.float64)
+    if rng is None:
+        rng = np.random.default_rng(0)
+    out = np.zeros(s.live.shape[0])
+    for j in range(s.live.shape[0]):
+        sl = slice(j * cap, (j + 1) * cap)
+        pj = pts[sl][np.asarray(valid[sl], bool)]
+        if not len(pj):
+            continue
+        if len(pj) > sample:
+            pj = pj[rng.choice(len(pj), size=sample, replace=False)]
+        exact = float(np.sqrt(((pj - s.centroids[j]) ** 2).sum(-1)).max())
+        out[j] = float(s.radii[j]) - exact
+    return out

@@ -1,0 +1,272 @@
+"""Async serving plane — the concurrency property harness.
+
+The contract under test (DESIGN.md Section 11): with
+``maintenance="background"`` a worker thread re-tightens summaries,
+splits drifting shards, and compacts tombstones *while* the micro-batcher
+serves and mutator threads ingest — and none of it may show anywhere in
+an answer.  Concretely:
+
+* **Bit-identical serving.**  Every ``QueryResult`` a racing pruned
+  server produces must equal, byte for byte, what a quiet single-threaded
+  ``route="exact"`` server answers over the same live set — reconstructed
+  by replaying ``store.history(QueryResult.generation)`` into a fresh
+  store.  Whatever interleaving the scheduler picks, an answer is always
+  the exact answer for the generation that served it.
+
+* **No torn reads.**  ``routing_snapshot()`` must never return summaries
+  whose generation differs from the snapshot's — a detector thread
+  hammers it throughout the race (the generation-coupling invariant that
+  makes pruned routing safe to consult concurrently).
+
+* **The worker actually worked.**  The harness asserts the background
+  counters moved (commits, and at least one re-tighten or split) and
+  that the worker finished with zero errors — a race that silently
+  parked the worker would vacuously pass the identity checks.
+
+Thread schedules are OS-chosen and non-deterministic; every *input* is
+seeded, and the assertions are interleaving-independent (they hold for
+any schedule), so a failure is always a real invariant violation, never
+flake-by-design.  CI runs this module 3x under a faulthandler timeout
+(thread-sanity job) to shake out rarer interleavings.
+"""
+
+import threading
+import time
+import traceback
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.runtime import KnnServer
+from repro.store import MutableStore, summary_invariants
+
+K = 8
+DIM = 8
+CAP = 192
+L_MAX = 16
+
+MUT_STEPS = 12
+QUERY_WAVES = 10
+WAVE_SIZE = 4
+ORACLE_GEN_CAP = 8       # replay at most this many generations (compile cost)
+
+
+def _mk_store(mesh, **overrides):
+    kw = dict(capacity_per_shard=CAP, mesh=mesh, axis_name="x",
+              placement="affinity", redeal="proximity", summary_pivots=2,
+              retighten_every=3, split_radius_factor=1.2,
+              maintenance="background", track_history=True,
+              staging_size=64)
+    kw.update(overrides)
+    return MutableStore(DIM, **kw)
+
+
+def _centers(seed):
+    return np.random.default_rng(seed).normal(scale=20.0, size=(2 * K, DIM))
+
+
+def _draw(rng, centers, n, c=None):
+    c = int(rng.integers(0, len(centers))) if c is None else c
+    return (centers[c] + rng.normal(size=(n, DIM))).astype(np.float32)
+
+
+def _mutator(store, centers, seed, errors):
+    """Seeded ingest/delete/update churn, flushed in small waves so the
+    background worker races real epoch swaps, not one big one."""
+    rng = np.random.default_rng(seed)
+    try:
+        for step in range(MUT_STEPS):
+            store.insert(_draw(rng, centers, 12))
+            store.flush()
+            live = store.live_arrays()[0]
+            if len(live) > 80:
+                perm = rng.permutation(live)
+                store.delete(perm[:8])               # disjoint from moved
+                moved = perm[8:12]
+                store.update(moved, _draw(rng, centers, len(moved)))
+                store.flush()
+            time.sleep(0.003)
+    except Exception:
+        errors.append(traceback.format_exc())
+
+
+def _torn_read_detector(store, stop_evt, violations):
+    """Hammer routing_snapshot() for the generation-coupling invariant
+    while commits land from the flush path and the worker both."""
+    while not stop_evt.is_set():
+        snap, summ = store.routing_snapshot()
+        if summ.generation != snap.generation:
+            violations.append((summ.generation, snap.generation))
+        time.sleep(0)      # yield so the race stays dense, not starved
+
+
+def _sampled(gens, cap):
+    if len(gens) <= cap:
+        return gens
+    idx = np.linspace(0, len(gens) - 1, cap).round().astype(int)
+    return [gens[i] for i in sorted(set(idx.tolist()))]
+
+
+@pytest.mark.parametrize("route_compute", ("host", "device"))
+def test_racing_answers_match_quiet_oracle(mesh8, route_compute):
+    """The tentpole property: ingest/delete/update threads race the
+    micro-batcher and the background maintenance worker, and every
+    answer is bit-identical to a quiet-store exact oracle replayed at
+    the answer's own generation — for both the host routing pass and
+    the fused device-side routing prologue."""
+    seed = 0 if route_compute == "host" else 1
+    centers = _centers(seed)
+    store = _mk_store(mesh8)
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=(1, 2, 4),
+                         route="pruned", route_compute=route_compute,
+                         summary_pivots=2, use_sampling=False,
+                         max_wait_ms=2.0)
+    srv = KnnServer(store=store, cfg=cfg)
+
+    # seed the store so the first wave has something to answer
+    rng = np.random.default_rng(10 + seed)
+    store.insert(_draw(rng, centers, 40, 0))
+    store.insert(_draw(rng, centers, 40, 1))
+    store.flush()
+    srv.warmup()
+
+    stop_evt = threading.Event()
+    torn, mut_errors = [], []
+    detector = threading.Thread(
+        target=_torn_read_detector, args=(store, stop_evt, torn),
+        name="torn-read-detector", daemon=True)
+    mutator = threading.Thread(
+        target=_mutator, args=(store, centers, 100 + seed, mut_errors),
+        name="mutator", daemon=True)
+
+    qrng = np.random.default_rng(200 + seed)
+    pending = []
+    with srv.serving():
+        detector.start()
+        mutator.start()
+        for _ in range(QUERY_WAVES):
+            for _ in range(WAVE_SIZE):
+                q = _draw(qrng, centers, 1)[0]
+                l = int(qrng.integers(1, L_MAX))
+                pending.append((q, l, srv.submit(q, l)))
+            time.sleep(0.004)
+        mutator.join()
+        results = [(q, l, f.result(timeout=120)) for q, l, f in pending]
+    stop_evt.set()
+    detector.join()
+    store.close()
+
+    assert not mut_errors, mut_errors[0]
+    assert not torn, f"torn routing_snapshot reads: {torn[:5]}"
+
+    # the worker must have actually churned mid-run, with zero errors
+    ws = store.maintenance_stats()["worker"]
+    assert ws["errors"] == 0 and ws["error"] is None
+    assert ws["commits"] > 0
+    assert ws["retightens"] + ws["splits"] + ws["repacks"] > 0
+
+    # replay each served generation into a fresh quiet store and demand
+    # byte equality from an exact (unpruned, host-routed) server
+    by_gen = {}
+    for q, l, r in results:
+        by_gen.setdefault(r.generation, []).append((q, l, r))
+    gens = _sampled(sorted(by_gen), ORACLE_GEN_CAP)
+    assert gens, "no queries resolved"
+    oracle_cfg = cfg.replace(route="exact", route_compute="host",
+                             summary_pivots=1)
+    for g in gens:
+        ids, pts_g = store.history(g)
+        oracle = MutableStore(DIM, capacity_per_shard=CAP, mesh=mesh8,
+                              axis_name="x")
+        if len(ids):
+            oracle.insert(pts_g, ids=ids)
+        oracle.flush()
+        osrv = KnnServer(store=oracle, cfg=oracle_cfg)
+        qs = np.stack([q for q, _, _ in by_gen[g]])
+        ls = [l for _, l, _ in by_gen[g]]
+        for expect, (_, _, got) in zip(osrv.query_batch(qs, ls), by_gen[g]):
+            assert got.dists.tobytes() == expect.dists.tobytes(), g
+            assert np.array_equal(got.ids, expect.ids), g
+
+
+def test_background_converges_to_inline_live_set(mesh8):
+    """A background store and an inline twin fed the identical seeded op
+    sequence hold the identical live set once the worker quiesces —
+    repacks and splits move slots, never membership — and the
+    background store's summaries still satisfy the covering
+    invariants exactly."""
+    centers = _centers(7)
+    rng = np.random.default_rng(7)
+    bg = _mk_store(mesh8)
+    inline = _mk_store(mesh8, maintenance="inline")
+    for step in range(10):
+        batch = _draw(rng, centers, 14)
+        ids_a = bg.insert(batch)
+        ids_b = inline.insert(batch)
+        assert np.array_equal(ids_a, ids_b)
+        bg.flush()
+        inline.flush()
+        live = inline.live_arrays()[0]
+        if len(live) > 60 and step % 2:
+            victims = np.sort(live)[::5][:6]
+            bg.delete(victims)
+            inline.delete(victims)
+            bg.flush()
+            inline.flush()
+    time.sleep(0.25)            # let the worker drain its queue
+    bg.close()
+
+    ids_a, pts_a = bg.live_arrays()
+    ids_b, pts_b = inline.live_arrays()
+    oa, ob = np.argsort(ids_a), np.argsort(ids_b)
+    assert np.array_equal(ids_a[oa], ids_b[ob])
+    assert pts_a[oa].tobytes() == pts_b[ob].tobytes()
+
+    inv = summary_invariants(bg.summaries(), bg._pts, bg._valid, bg.cap)
+    assert inv["live_mismatch"] == 0
+    assert inv["radius_violation"] <= 1e-9
+    assert inv["projection_violation"] <= 1e-9
+    ws = bg.maintenance_stats()["worker"]
+    assert ws["errors"] == 0
+    assert ws["commits"] > 0
+
+
+def test_inline_mode_has_no_worker(mesh8):
+    """maintenance="inline" preserves today's behavior exactly: no worker
+    thread, no worker stats, close() is a no-op, and maintenance runs
+    on the flush path as before."""
+    store = MutableStore(DIM, capacity_per_shard=32, mesh=mesh8,
+                         axis_name="x", retighten_every=1)
+    assert store.maintenance == "inline"
+    assert "worker" not in store.maintenance_stats()
+    before = threading.active_count()
+    store.insert(np.random.default_rng(0)
+                 .normal(size=(40, DIM)).astype(np.float32))
+    store.flush()
+    assert store.stats.retightens > 0          # inline path still maintains
+    store.close()                              # no-op, must not raise
+    assert threading.active_count() == before
+    with pytest.raises(ValueError, match="maintenance"):
+        MutableStore(DIM, capacity_per_shard=8, axis_name="x",
+                     maintenance="sometimes")
+
+
+def test_background_worker_stops_cleanly(mesh8):
+    """close() joins the worker thread; a second close() is a no-op; the
+    store keeps serving (reads and inline-free flushes) after close."""
+    store = _mk_store(mesh8)
+    rng = np.random.default_rng(3)
+    store.insert(rng.normal(scale=10.0, size=(64, DIM)).astype(np.float32))
+    store.flush()
+    names = [t.name for t in threading.enumerate()]
+    assert "knn-store-maintenance" in names
+    store.close()
+    store.close()
+    names = [t.name for t in threading.enumerate()]
+    assert "knn-store-maintenance" not in names
+    # the store itself is still a valid (now unmaintained) store
+    store.insert(rng.normal(size=(8, DIM)).astype(np.float32))
+    gen = store.flush()
+    snap, summ = store.routing_snapshot()
+    assert summ.generation == snap.generation == gen

@@ -1,8 +1,10 @@
 """Micro-batched kNN query service: bucketing/padding round-trip,
-per-request l masking vs the gather baseline, and the O(log l) round smoke
-test under the service path."""
+per-request l masking vs the gather baseline, the O(log l) round smoke
+test under the service path, the stop() drain contract, and ServerStats
+thread-safety under concurrent observe/snapshot."""
 
 import math
+import threading
 
 import jax
 import numpy as np
@@ -13,6 +15,7 @@ import repro.core as core
 from repro.configs.knn_service import CONFIG
 from repro.parallel.compat import shard_map
 from repro.runtime import KnnServer
+from repro.runtime.knn_server import ServerStats
 
 K = 8
 DIM = 8
@@ -254,4 +257,124 @@ def test_server_rejects_bad_requests(mesh8, pts):
         srv.submit(np.zeros(DIM, np.float32), srv.cfg.l_max + 1)
     with pytest.raises(ValueError):
         srv.submit(np.zeros(DIM + 1, np.float32), 4)
+    with pytest.raises(ValueError, match="route_compute"):
+        _server(pts, mesh8, route_compute="gpu")
     srv.flush()
+
+
+# ---- stop() drain contract -----------------------------------------------
+
+def test_server_stop_drains(mesh8, rng, pts):
+    """The documented stop() contract: every request pending at stop()
+    entry resolves before stop() returns, each dispatched exactly once
+    (stats.queries is the double-dispatch detector — a request served
+    twice would count twice), correct against brute force, and stop() is
+    idempotent with submit/flush still serving synchronously after."""
+    srv = _server(pts, mesh8, max_wait_ms=50.0)
+    srv.warmup()
+    qs = rng.normal(size=(16, DIM)).astype(np.float32)
+    srv.start()
+    futs = [srv.submit(q, 8) for q in qs]
+    srv.stop()              # requests still lingering in the batcher
+    assert all(f.done() for f in futs)
+    for f, q in zip(futs, qs):
+        r = f.result(timeout=0)
+        bd, _ = _brute(pts, q[None], 8)
+        np.testing.assert_allclose(np.sort(r.dists), bd[0], rtol=1e-4)
+    assert srv.stats.queries == len(qs)
+    assert srv._thread is None
+
+    srv.stop()              # idempotent
+    f = srv.submit(qs[0], 8)
+    srv.flush()
+    assert f.done()
+    assert srv.stats.queries == len(qs) + 1
+
+
+def test_server_stop_races_with_itself(mesh8, rng, pts):
+    """Concurrent stop() callers: exactly one joins the thread (the
+    handle is captured-and-cleared under the lock), every pending
+    request resolves, and nothing dispatches twice."""
+    srv = _server(pts, mesh8, max_wait_ms=20.0)
+    srv.warmup()
+    srv.start()
+    qs = rng.normal(size=(12, DIM)).astype(np.float32)
+    futs = [srv.submit(q, 4) for q in qs]
+    stoppers = [threading.Thread(target=srv.stop) for _ in range(3)]
+    for t in stoppers:
+        t.start()
+    for t in stoppers:
+        t.join()
+    assert srv._thread is None
+    assert all(f.done() for f in futs)
+    assert srv.stats.queries == len(qs)
+
+
+# ---- ServerStats thread-safety -------------------------------------------
+
+def test_server_stats_concurrent_observe_and_snapshot():
+    """Regression for the unlocked observe()/placement_stats() race:
+    writer threads hammer observe() while a reader takes snapshot()s,
+    and every snapshot must be internally consistent — the cross-field
+    invariants hold inside any single snapshot, and the final totals
+    are exact (no lost updates)."""
+    stats = ServerStats()
+    buckets = (1, 2, 4, 8)
+    per_thread = 400
+    n_writers = 4
+    stop = threading.Event()
+    bad = []
+
+    def reader():
+        while not stop.is_set():
+            s = stats.snapshot()
+            if s["batches"] != sum(s["bucket_counts"].values()):
+                bad.append(("batches", s))
+            if s["queries"] + s["padded_rows"] != sum(
+                    b * c for b, c in s["bucket_counts"].items()):
+                bad.append(("rows", s))
+            if s["routed_batches"] * 8 < s["touched_shards"]:
+                bad.append(("touched", s))
+
+    def writer(seed):
+        wrng = np.random.default_rng(seed)
+        for _ in range(per_thread):
+            b = int(wrng.choice(buckets))
+            n_real = int(wrng.integers(1, b + 1))
+            touched = int(wrng.integers(1, 9)) if b % 2 else None
+            stats.observe(b, n_real, touched=touched)
+
+    rt = threading.Thread(target=reader)
+    wts = [threading.Thread(target=writer, args=(s,))
+           for s in range(n_writers)]
+    rt.start()
+    for t in wts:
+        t.start()
+    for t in wts:
+        t.join()
+    stop.set()
+    rt.join()
+
+    assert not bad, bad[0]
+    final = stats.snapshot()
+    assert final["batches"] == n_writers * per_thread
+    assert final["batches"] == sum(final["bucket_counts"].values())
+    assert final["queries"] + final["padded_rows"] == sum(
+        b * c for b, c in final["bucket_counts"].items())
+    # deterministic totals: replay each writer's seeded sequence
+    want_q = want_pad = want_t = want_rb = 0
+    for s in range(n_writers):
+        wrng = np.random.default_rng(s)
+        for _ in range(per_thread):
+            b = int(wrng.choice(buckets))
+            n_real = int(wrng.integers(1, b + 1))
+            t = int(wrng.integers(1, 9)) if b % 2 else None
+            want_q += n_real
+            want_pad += b - n_real
+            if t is not None:
+                want_t += t
+                want_rb += 1
+    assert final["queries"] == want_q
+    assert final["padded_rows"] == want_pad
+    assert final["touched_shards"] == want_t
+    assert final["routed_batches"] == want_rb

@@ -22,6 +22,8 @@ from jax.sharding import PartitionSpec as P
 import repro.core as core
 from repro.configs.knn_service import CONFIG
 from repro.data import sharded_clusters
+from repro.kernels import ops as kops
+from repro.kernels import routing as routing_mod
 from repro.parallel.compat import shard_map
 from repro.runtime import KnnServer
 from repro.store import (MutableStore, build_summaries, lower_bounds,
@@ -204,6 +206,101 @@ def test_route_shards_equidistant_prunes_nothing():
     s = build_summaries(pts, K)
     active = route_shards(s, q[:1], np.array([8]))
     assert active.all()
+
+
+# ---- device-side routing kernel parity (kernels/routing.py) ---------------
+
+ROUTE_PIVOTS = (1, 2, 4)
+
+
+def _device_route_case(family, seed, pivots, l):
+    """The kernel-parity contract: the Pallas routing prologue's per-row
+    keep mask equals the host f64 ``route_shards`` decision bit for bit.
+    The kernel computes in f32, but both sides share the decision
+    structure (lower bound vs slacked threshold + magnitude-absolute
+    error margin), and the margins dwarf f32 evaluation wobble — so the
+    masks agree exactly, not just the downstream answers."""
+    pts, q = _instance(family, seed, 1.0)
+    s = build_summaries(pts, K, num_pivots=pivots)
+    la = np.full(B, l, np.int64)
+    host = route_shards(s, q, la, slack=CONFIG.route_slack)
+    dev = np.asarray(kops.route_mask(q, la, routing_mod.pack_summaries(s),
+                                     slack=CONFIG.route_slack))
+    assert np.array_equal(host, dev), (family, seed, pivots, l)
+
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(family=st.sampled_from(FAMILIES),
+           seed=st.integers(min_value=0, max_value=999),
+           pivots=st.sampled_from(ROUTE_PIVOTS),
+           l=st.sampled_from(L_SET))
+    def test_route_mask_matches_host_router(family, seed, pivots, l):
+        _device_route_case(family, seed, pivots, l)
+else:
+    @pytest.mark.parametrize("l", L_SET)
+    @pytest.mark.parametrize("pivots", ROUTE_PIVOTS)
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_route_mask_matches_host_router(family, pivots, l):
+        for seed in (0, 7):
+            _device_route_case(family, seed, pivots, l)
+
+
+def test_route_mask_tombstones_and_mixed_ls():
+    """Kernel parity where the inputs are ugliest: dead rows scattered
+    through every shard, two shards fully tombstoned, one store fully
+    empty, and per-row l mixing 0 (padding rows) with live requests."""
+    rng = np.random.default_rng(11)
+    pts, q = _instance("clustered", 11, 1.0)
+    la = np.array([0, 1, 8, 256], np.int64)
+    for pivots in ROUTE_PIVOTS:
+        valid = rng.random(N) > 0.3
+        valid[:M] = False
+        valid[3 * M:4 * M] = False
+        s = build_summaries(pts, K, valid=valid, num_pivots=pivots)
+        host = route_shards(s, q, la, slack=CONFIG.route_slack)
+        dev = np.asarray(kops.route_mask(
+            q, la, routing_mod.pack_summaries(s), slack=CONFIG.route_slack))
+        assert np.array_equal(host, dev), pivots
+        assert not dev[0].any()                  # l=0 rows route nowhere
+        assert not dev[:, 0].any() and not dev[:, 3].any()
+    s = build_summaries(pts, K, valid=np.zeros(N, bool))
+    dev = np.asarray(kops.route_mask(
+        q, la, routing_mod.pack_summaries(s), slack=CONFIG.route_slack))
+    assert not dev.any()                         # empty store: keep nothing
+
+
+def test_route_mask_equidistant_ties_keep_everything():
+    """The adversarial tie instance through the kernel: every shard's
+    bounds coincide, so the sort-free threshold (min upper bound whose
+    cumulative live count covers l, ties included) may prune nothing —
+    exactly like the host router's stable-argsort prefix."""
+    pts, q = _instance("equidistant", 5, 1.0)
+    for pivots in ROUTE_PIVOTS:
+        s = build_summaries(pts, K, num_pivots=pivots)
+        la = np.full(B, 8, np.int64)
+        dev = np.asarray(kops.route_mask(
+            q, la, routing_mod.pack_summaries(s), slack=CONFIG.route_slack))
+        assert dev.all()
+        assert np.array_equal(dev,
+                              route_shards(s, q, la,
+                                           slack=CONFIG.route_slack))
+
+
+def test_route_mask_ref_matches_dispatcher():
+    """The jnp reference path (route_mask_ref — what "oracle" mode and
+    the unaligned-lane fallback run) is the same math as the kernel
+    body, so it must agree with the dispatcher output bit for bit."""
+    pts, q = _instance("uniform", 23, 1.0)
+    s = build_summaries(pts, K, num_pivots=2)
+    la = np.full(B, 8, np.int64)
+    packed = routing_mod.pack_summaries(s)
+    dev = np.asarray(kops.route_mask(q, la, packed,
+                                     slack=CONFIG.route_slack))
+    ref = np.asarray(routing_mod.route_mask_ref(
+        q.astype(np.float32), la.astype(np.int32).reshape(-1, 1), *packed,
+        dim_real=DIM, slack=CONFIG.route_slack)) != 0
+    assert np.array_equal(dev, ref)
 
 
 # ---- server-level: end-to-end A/B over the service path ------------------
@@ -430,6 +527,69 @@ else:
     def test_adaptive_multipivot_exactness(adaptive_fn, pivots, shift):
         for seed in (0, 7):
             _adaptive_routing_case(adaptive_fn, pivots, seed, shift)
+
+
+def test_server_device_route_identical_static(mesh8):
+    """route_compute="device" is a pure relocation of the routing
+    decision: identical answers, identical touched-shard accounting,
+    and the pruning still fires (< k shards on the clustered family)."""
+    pts, q = _instance("clustered", 17, 1.0)
+    mk = lambda rc: KnnServer(
+        pts, cfg=CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=(4,),
+                                route="pruned", route_compute=rc),
+        mesh=mesh8, axis_name="x")
+    host, dev = mk("host"), mk("device")
+    dev.warmup()                     # device prologue compiles per bucket
+    for ls in ([1, 8, 256, 40], [1, 8, 4, 2]):
+        rh, rd = host.query_batch(q, ls), dev.query_batch(q, ls)
+        _assert_identical(rh, rd)
+        assert all(a.shards_touched == b.shards_touched
+                   for a, b in zip(rh, rd))
+    assert all(r.shards_touched < K for r in rd)
+    assert dev.placement_stats()["prune_rate"] > 0
+
+
+def test_server_device_route_identical_under_mutation(mesh8):
+    """Store-backed device routing across a mutation history: after every
+    phase (ingest waves arming re-tighten + split, interleaved
+    deletes/updates, forced compaction) the device-routed server answers
+    byte-identically to the host-routed twin, and the packed-summary
+    cache follows the frozen summaries object across generations."""
+    rng = np.random.default_rng(29)
+    clusters = 2 * K
+    centers = rng.normal(scale=8.0, size=(clusters, DIM))
+    mk_store = lambda: MutableStore(
+        DIM, capacity_per_shard=M, axis_name="x", placement="affinity",
+        redeal="proximity", summary_pivots=2, retighten_every=6,
+        split_radius_factor=1.2, staging_size=10 ** 9)
+    stores = [mk_store(), mk_store()]
+    kw = dict(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=(4,), route="pruned",
+              summary_pivots=2)
+    host, dev = (KnnServer(store=s,
+                           cfg=CONFIG.replace(**kw, route_compute=rc),
+                           mesh=mesh8)
+                 for s, rc in zip(stores, ("host", "device")))
+    q = (centers[rng.integers(0, clusters, B)]
+         + rng.normal(size=(B, DIM))).astype(np.float32)
+    ls = [1, 8, 256, 40]
+
+    def check():
+        rh, rd = host.query_batch(q, ls), dev.query_batch(q, ls)
+        _assert_identical(rh, rd)
+        assert all(a.shards_touched == b.shards_touched
+                   for a, b in zip(rh, rd))
+
+    for c in range(clusters):
+        batch = (centers[c] + rng.normal(size=(20, DIM))).astype(np.float32)
+        _mutate_both(stores, lambda s: s.insert(batch))
+        if c % 4 == 3:
+            _mutate_both(stores, lambda s: s.flush())
+            check()
+    ids = stores[0].live_arrays()[0]
+    _mutate_both(stores, lambda s: (s.delete(ids[::3]), s.flush()))
+    check()
+    _mutate_both(stores, lambda s: s.compact())
+    check()
 
 
 def test_summary_covering_invariants_under_mutation(rng):
