@@ -1,7 +1,8 @@
 # Local fallback for the CI entrypoints (.github/workflows/ci.yml).
 PYTHONPATH_PREFIX := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-cov test-threads deps bench bench-serve bench-smoke examples
+.PHONY: test test-cov test-threads deps bench bench-serve bench-smoke \
+	obs-smoke examples
 
 deps:
 	pip install -r requirements-dev.txt
@@ -54,10 +55,26 @@ bench-serve:
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \
-		--out /tmp/BENCH_serve_smoke.json
+		--out /tmp/BENCH_serve_smoke.json \
+		--trace-out /tmp/BENCH_trace_smoke.jsonl
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_ingest.py --smoke \
 		--out /tmp/BENCH_ingest_smoke.json
+
+# Observability gate (ci.yml obs-smoke step): run the smoke bench with
+# the flight recorder + both auditors on, then validate the artifacts —
+# zero Theorem-1 contract violations, zero shadow-exact divergences
+# (with both auditors demonstrably active), and a well-formed span
+# export containing a complete routed-query tree racing a committed
+# maintenance cycle (benchmarks/check_obs.py).
+obs-smoke:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \
+		--out /tmp/BENCH_serve_smoke.json \
+		--trace-out /tmp/BENCH_trace_smoke.jsonl
+	$(PYTHONPATH_PREFIX):. python benchmarks/check_obs.py \
+		--bench /tmp/BENCH_serve_smoke.json \
+		--trace /tmp/BENCH_trace_smoke.jsonl
 
 examples:
 	$(PYTHONPATH_PREFIX) python examples/quickstart.py

@@ -18,8 +18,11 @@ Two phases against ``store.MutableStore`` (DESIGN.md Section 7):
      re-tighten AND one split actually fired).  The headline number is
      ``p99_ratio_vs_quiet``: how much serve-path tail latency concurrent
      ingest costs when maintenance runs off the flush path.  Also
-     reported: generations spanned, worker counters, and that zero
-     in-flight queries were dropped across every swap.
+     reported: generations spanned, worker counters, that zero
+     in-flight queries were dropped across every swap, and the ``obs``
+     payload (src/repro/obs/) — Theorem-1 contract checks, sampled
+     shadow-exact replays, and the per-stage latency breakdown for the
+     whole run.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_ingest.py --out BENCH_ingest.json
@@ -140,7 +143,11 @@ def _phase_under_ingest(rng, cap, staging, n_queries) -> dict:
         placement="affinity", redeal="proximity",
         retighten_every=4, split_radius_factor=1.2,
         maintenance="background",
-        store_capacity_per_shard=cap, store_staging_size=staging)
+        store_capacity_per_shard=cap, store_staging_size=staging,
+        # full obs surface on: this phase races queries against epoch
+        # swaps and maintenance commits, exactly where the Theorem-1
+        # contract and shadow-exact auditors earn their keep
+        obs_trace=True, obs_audit_every=8)
     store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
                          **cfg.store_kwargs())
     prefill_per = (cap * k // 2) // n_clusters
@@ -239,6 +246,9 @@ def _phase_under_ingest(rng, cap, staging, n_queries) -> dict:
         "worker": worker,
         "final_live": store.live_count,
         "compactions": store.stats.compactions,
+        # audited-serving verdicts + per-stage p50/p99 for the whole
+        # quiet-vs-ingest run (benchmarks/common.py obs_section)
+        "obs": common.obs_section(srv),
     }
 
 

@@ -22,7 +22,11 @@ stream under no maintenance vs scheduled re-tightening vs
 re-tighten+split, measured *before* any compaction against a static
 cluster-contiguous baseline of the final live set — the section that
 shows pruned routing staying effective mid-stream instead of decaying
-until the next compaction.  Emits CSV rows like every other bench module
+until the next compaction.  A fifth section exercises the observability
+plane (src/repro/obs/): audited serving with tracing + contract +
+shadow-exact checks on, the exported flight-recorder trace
+(``--trace-out``), and the instrumented-vs-off overhead A/B — the
+``obs`` block of the JSON.  Emits CSV rows like every other bench module
 plus ``BENCH_serve.json`` with sustained queries/sec, p50/p99 request
 latency, and mean rounds/messages/shards_touched per configuration.
 
@@ -337,6 +341,150 @@ def _forced_tiny_adaptive() -> dict:
     return out
 
 
+def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
+    """Observability section (DESIGN.md §12): the flight recorder priced
+    and proved on the serving plane.
+
+    One store-backed clustered server with the full obs surface on —
+    ``obs_trace=True`` + ``obs_audit_every=4`` over a pruned,
+    device-routed, ``maintenance="background"`` store — serves query
+    bursts interleaved with drifting ingest waves, so the exported trace
+    (``--trace-out``) holds complete request/dispatch span trees *racing*
+    maintenance plan/prepare/commit cycles.  The section reports the
+    audited numbers (Theorem-1 contract checks, shadow-exact replays,
+    per-stage p50/p99 from the unified registry) and an instrumented-vs-
+    off A/B on the plain selection workload: same seeds, tracing +
+    contract auditing on vs the no-op plane, best-of-3 qps per arm —
+    the acceptance gate is <= 10% overhead (``make obs-smoke`` /
+    tests/test_obs.py assert the contract+shadow zeros and the trace's
+    well-formedness; the overhead guard lives in the test suite where
+    it can retry, not here where one noisy CPU run would gate CI).
+    """
+    from repro.data import sharded_clusters
+    from repro.runtime import KnnServer
+    from repro.store import MutableStore
+    k = common.K_MACHINES
+    pts, centers = sharded_clusters(k, per_shard, DIM, seed=29)
+    cap, staging = per_shard * 4, max(16, per_shard // 4)
+    cfg = CONFIG.replace(
+        dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+        sampler="selection", route="pruned", route_compute="device",
+        summary_pivots=2, placement="affinity", redeal="proximity",
+        retighten_every=4, split_radius_factor=1.2,
+        maintenance="background",
+        store_capacity_per_shard=cap, store_staging_size=staging,
+        obs_trace=True, obs_audit_every=4)
+    store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         **cfg.store_kwargs())
+    order = np.random.default_rng(29).permutation(len(pts))
+    shuffled = pts[order]
+    for i in range(0, len(shuffled), staging):
+        store.insert(shuffled[i:i + staging])
+        store.flush()
+    srv = KnnServer(store=store, cfg=cfg)
+    srv.warmup()
+
+    # Serving loop: each burst's queries land near one center; between
+    # bursts an ingest wave (insert into a drifted cluster + delete the
+    # oldest wave) lands two epoch swaps and makes shards due — the
+    # background worker re-tightens mid-stream, so maint.* spans
+    # interleave with request spans in the very same ring.
+    rng = np.random.default_rng(31)
+    drifted = centers.copy()
+    waves, lat = [], []
+    n_queries = 0
+    t0 = time.perf_counter()
+    for burst in range(max(bursts, 6)):
+        bs = [1, 3, 8, 4][burst % 4]
+        c = int(rng.integers(0, k))
+        qs = (drifted[c] + rng.normal(size=(bs, DIM))).astype(np.float32)
+        ls = [L_MIX[(burst + j) % len(L_MIX)] for j in range(bs)]
+        for r in srv.query_batch(qs, ls):
+            lat.append(r.latency_s)
+        n_queries += bs
+        drifted[c] += rng.normal(size=DIM) * 0.5
+        waves.append(store.insert(
+            (drifted[c] + rng.normal(size=(staging // 2, DIM)))
+            .astype(np.float32)))
+        store.flush()
+        if len(waves) > 2:
+            store.delete(waves.pop(0))
+            store.flush()
+    wall = time.perf_counter() - t0
+    # the trace artifact must show a *committed* maintenance cycle racing
+    # the queries above; the worker is event-driven, so give it a bounded
+    # window to drain before the join
+    deadline = time.perf_counter() + 60
+    while (store.maintenance_stats()["worker"]["commits"] == 0
+           and time.perf_counter() < deadline):
+        time.sleep(0.02)
+    store.close()        # joins the worker; any staged cycle lands first
+    worker = store.maintenance_stats()["worker"]
+    assert worker["errors"] == 0, worker["error"]
+    assert worker["commits"] > 0, (
+        "no maintenance commit landed in the obs trace window")
+    assert srv.obs.tracer.active_count() == 0, "torn spans after quiesce"
+
+    section = {
+        "queries": n_queries,
+        "qps": n_queries / wall,
+        "p50_ms": float(np.percentile(np.asarray(lat), 50) * 1e3),
+        "route": cfg.route, "route_compute": cfg.route_compute,
+        "maintenance": cfg.maintenance,
+        "obs_audit_every": cfg.obs_audit_every,
+        "maintenance_commits": worker["commits"],
+    }
+    section.update(common.obs_section(srv))
+    assert section["contract_checks"] > 0 and section["shadow_checks"] > 0
+    if trace_out:
+        n_spans = srv.export_trace_jsonl(trace_out)
+        section["trace_out"] = {"path": trace_out, "spans": n_spans}
+        emit(f"# wrote {trace_out} ({n_spans} spans)")
+
+    # Instrumented-vs-off overhead A/B (static selection server, the
+    # simplest repeatable workload): arm "on" = tracing + contract
+    # auditing (shadow audit off — it *replays* kernels by design, so it
+    # is priced by obs_audit_every, not by the recorder).  The arms run
+    # *interleaved*, best-of-3 each: back-to-back arms confound the
+    # recorder's few-microsecond cost with scheduler/thermal drift
+    # across the minutes-long bench, which dwarfs it.
+    def arm(obs_on: bool):
+        arm_rng = np.random.default_rng(0)
+        arm_pts = arm_rng.normal(size=(k * per_shard, DIM)) \
+            .astype(np.float32)
+        arm_cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX,
+                                 bucket_sizes=BUCKETS, sampler="selection",
+                                 obs_trace=obs_on)
+        arm_srv = KnnServer(arm_pts, cfg=arm_cfg,
+                            mesh=common.kmachine_mesh(), axis_name="x")
+        arm_srv.warmup()
+        return arm_srv
+
+    srv_off, srv_on = arm(False), arm(True)
+    qps_off = qps_on = 0.0
+    for _ in range(3):
+        qps_off = max(qps_off, _drive(srv_off, np.random.default_rng(41),
+                                      bursts)["qps"])
+        qps_on = max(qps_on, _drive(srv_on, np.random.default_rng(41),
+                                    bursts)["qps"])
+    section["overhead"] = {
+        "qps_off": qps_off, "qps_on": qps_on,
+        "overhead_frac": (qps_off - qps_on) / qps_off,
+    }
+    emit(common.row(
+        "serve_obs_audited", 1e6 / section["qps"],
+        f"contract={section['contract_checks']}/"
+        f"{section['contract_violations']}viol "
+        f"shadow={section['shadow_checks']}/"
+        f"{section['shadow_divergences']}div "
+        f"commits={worker['commits']}"))
+    emit(common.row(
+        "serve_obs_overhead", 1e6 / qps_on,
+        f"qps_on={qps_on:.1f} qps_off={qps_off:.1f} "
+        f"overhead={100 * section['overhead']['overhead_frac']:.1f}%"))
+    return section
+
+
 def _drive(srv, rng, bursts: int, centers=None) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
@@ -386,7 +534,8 @@ def _drive(srv, rng, bursts: int, centers=None) -> dict:
     }
 
 
-def run(emit=print, out_path=None, smoke: bool = False) -> dict:
+def run(emit=print, out_path=None, smoke: bool = False,
+        trace_out=None) -> dict:
     """``smoke=True`` is the CI dry-run: tiny store, few bursts — proves
     the script end-to-end (build, warmup, drive, JSON emit) in seconds."""
     n_points = common.K_MACHINES * 256 if smoke else N_POINTS
@@ -439,6 +588,11 @@ def run(emit=print, out_path=None, smoke: bool = False) -> dict:
         window=2 if smoke else 4,
         retighten_every=16 if smoke else 64,
         emit=emit)
+    # observability plane (src/repro/obs/): audited serving + the
+    # exported flight-recorder trace + the instrumented-vs-off A/B
+    report["obs"] = _obs_section(
+        bursts, per_shard=64 if smoke else 512, emit=emit,
+        trace_out=trace_out)
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:
@@ -452,9 +606,13 @@ def main():
     ap.add_argument("--out", default="BENCH_serve.json")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes; CI dry-run (make bench-smoke)")
+    ap.add_argument("--trace-out", default="BENCH_trace.jsonl",
+                    help="flight-recorder span export (JSONL; "
+                         "benchmarks/check_obs.py validates it)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    run(emit=print, out_path=args.out, smoke=args.smoke)
+    run(emit=print, out_path=args.out, smoke=args.smoke,
+        trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

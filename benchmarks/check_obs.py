@@ -1,0 +1,125 @@
+"""CI gate for the observability plane (make obs-smoke).
+
+Validates the artifacts a ``bench_serve.py --smoke`` run just emitted —
+the ``obs`` section of the BENCH JSON and the flight-recorder JSONL —
+against the PR's acceptance bar:
+
+  * zero Theorem-1 contract violations and zero shadow-exact divergences,
+    with both auditors demonstrably *active* (checks > 0);
+  * the span export parses, reassembles into well-formed trees
+    (``repro.obs.trace.build_trees`` — no torn, orphaned, or
+    time-inverted spans), and contains at least one *complete* routed
+    query (a request tree with queued + serve children AND a dispatch
+    tree with snapshot, route, kernel, and resolve stages) racing at
+    least one committed maintenance cycle;
+  * the per-stage latency breakdown is present (p50/p99 per stage).
+
+Pure stdlib + the obs package; exits non-zero with a named reason on the
+first failed check.
+
+  PYTHONPATH=src:. python benchmarks/check_obs.py \
+      --bench /tmp/BENCH_serve_smoke.json --trace /tmp/BENCH_trace.jsonl
+"""
+
+import argparse
+import collections
+import json
+import sys
+
+from repro.obs.trace import build_trees
+
+
+def fail(msg: str):
+    print(f"check_obs: FAIL: {msg}")
+    sys.exit(1)
+
+
+def check_bench(path: str) -> dict:
+    with open(path) as f:
+        report = json.load(f)
+    obs = report.get("obs")
+    if not obs:
+        fail(f"{path} has no 'obs' section")
+    if obs["contract_checks"] <= 0:
+        fail("contract auditor never ran (checks == 0)")
+    if obs["contract_violations"] != 0:
+        fail(f"Theorem-1 contract violated: {obs['contract_details']}")
+    if obs["shadow_every"] <= 0:
+        fail("shadow auditor disabled (obs_audit_every == 0)")
+    if obs["shadow_checks"] <= 0:
+        fail("shadow auditor never ran (checks == 0)")
+    if obs["shadow_divergences"] != 0:
+        fail(f"shadow-exact divergence: {obs['shadow_divergences']}")
+    stages = obs.get("stages", {})
+    for required in ("serve.kernel_s", "serve.resolve_s", "serve.latency_s"):
+        payload = stages.get(required)
+        if not payload or payload["count"] <= 0:
+            fail(f"stage histogram {required} missing or empty")
+        if not (0 <= payload["p50"] <= payload["p99"]):
+            fail(f"stage {required}: p50/p99 not ordered")
+    print(f"check_obs: bench ok — contract {obs['contract_checks']} checks"
+          f"/0 violations, shadow {obs['shadow_checks']} checks"
+          f"/0 divergences, {len(stages)} stage histograms")
+    return obs
+
+
+def check_trace(path: str):
+    records = []
+    with open(path) as f:
+        for line_no, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError as exc:
+                fail(f"{path}:{line_no}: bad JSONL line: {exc}")
+    if not records:
+        fail(f"{path} is empty")
+    try:
+        trees = build_trees(records)
+    except ValueError as exc:
+        fail(f"span export is not well-formed: {exc}")
+
+    by_name = collections.Counter(r["name"] for r in records)
+    children_of = collections.defaultdict(set)
+    for r in records:
+        if r["parent"]:
+            children_of[r["parent"]].add(r["name"])
+
+    complete_requests = sum(
+        1 for r in records
+        if r["name"] == "request"
+        and {"queued", "serve"} <= children_of[r["span"]])
+    complete_dispatches = sum(
+        1 for r in records
+        if r["name"] == "dispatch"
+        and {"snapshot", "route", "kernel",
+             "resolve"} <= children_of[r["span"]])
+    if complete_requests == 0:
+        fail("no complete request tree (queued + serve children)")
+    if complete_dispatches == 0:
+        fail("no complete dispatch tree "
+             "(snapshot + route + kernel + resolve)")
+    if by_name["maint.commit"] == 0:
+        fail("no committed maintenance cycle in the trace window")
+    if by_name["maint.cycle"] == 0 or by_name["maint.prepare"] == 0:
+        fail("maintenance cycle/prepare spans missing")
+    print(f"check_obs: trace ok — {len(records)} spans, {len(trees)} trees, "
+          f"{complete_requests} complete request trees, "
+          f"{complete_dispatches} complete dispatch trees, "
+          f"{by_name['maint.commit']} maintenance commits")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="/tmp/BENCH_serve_smoke.json")
+    ap.add_argument("--trace", default="/tmp/BENCH_trace_smoke.jsonl")
+    args = ap.parse_args()
+    check_bench(args.bench)
+    check_trace(args.trace)
+    print("check_obs: PASS")
+
+
+if __name__ == "__main__":
+    main()

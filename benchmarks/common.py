@@ -68,3 +68,34 @@ def time_fn(fn, *args, repeats: int = 20, warmup: int = 3) -> float:
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def obs_section(srv) -> dict:
+    """Compact ``obs`` payload for a BENCH_*.json, read off one
+    ``KnnServer.obs_snapshot()``: audit verdicts (Theorem-1 contract +
+    shadow-exact), the per-stage p50/p99 latency breakdown from the
+    unified registry (src/repro/obs/metrics.py), kernel-fallback
+    counters, and tracer ring stats.  ``make obs-smoke``
+    (benchmarks/check_obs.py) asserts on these fields."""
+    snap = srv.obs_snapshot()
+    stages = {}
+    for name, payload in snap["metrics"].items():
+        if (name.startswith(("serve.", "maint.", "store."))
+                and isinstance(payload, dict) and "p50" in payload):
+            stages[name] = {"count": payload["count"],
+                            "mean": payload["mean"],
+                            "p50": payload["p50"],
+                            "p99": payload["p99"]}
+    contract = snap["audit"]["contract"]
+    shadow = snap["audit"]["shadow"]
+    return {
+        "stages": stages,
+        "contract_checks": contract["checks"],
+        "contract_violations": contract["violations"],
+        "contract_details": contract["details"],
+        "shadow_every": shadow["every"],
+        "shadow_checks": shadow["checks"],
+        "shadow_divergences": shadow["divergences"],
+        "kernel_fallbacks": snap["kernel"],
+        "trace": snap["trace"],
+    }

@@ -132,6 +132,24 @@ class KnnServiceConfig:
     # generation (tests/test_async_maintenance.py).
     maintenance: str = "inline"
 
+    # ---- observability plane (src/repro/obs/) ---------------------------
+    # Flight-recorder tracing: when on, the server records spans for the
+    # full request lifecycle (enqueue -> queued -> dispatch -> snapshot ->
+    # route -> kernel -> resolve) and the maintenance worker's
+    # plan/prepare/commit/discard phases into a fixed ring buffer
+    # (obs/trace.py); export with KnnServer.export_trace_jsonl().  Off
+    # by default: the disabled plane is a shared no-op (NULL_TRACER).
+    # The metrics registry is always live regardless of this knob.
+    obs_trace: bool = False
+    # Ring capacity (finished spans retained; newest win).
+    obs_trace_capacity: int = 8192
+    # Shadow-exact auditing: every Nth routed (pruned) micro-batch is
+    # replayed through the exact collective at the same generation and
+    # byte-compared (obs/audit.py).  0 disables.  The Theorem-1
+    # round/message contract auditor is always on (it is arithmetic on
+    # numbers the server already computes).
+    obs_audit_every: int = 0
+
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)
 

@@ -24,6 +24,7 @@ from repro.kernels import l2_distance as _l2
 from repro.kernels import distance_topk as _dtk
 from repro.kernels import local_topk as _ltk
 from repro.kernels import routing as _routing
+from repro.obs import metrics as _obs_metrics
 
 # kernel  : pl.pallas_call compiled for the backend (TPU target)
 # interpret: kernel body executed in Python (CPU-correctness mode)
@@ -73,6 +74,7 @@ def l2_distance(queries, points, *, valid=None, block_b=None, block_m=None,
     """
     mode = _mode()
     if mode == "oracle":
+        _count_fallback("l2_distance", "mode_oracle")
         if valid is not None:
             return ref.masked_l2_distance_ref(queries, points, valid)
         return ref.l2_distance_ref(queries, points)
@@ -117,6 +119,28 @@ def _dtk_padded_masked(q, p, valid, l, block_b, block_m, block_k, interpret):
     return v[:B], i[:B]
 
 
+def _count_fallback(entry: str, kind: str) -> None:
+    """Tally one dispatcher fallback in the process-wide metrics registry
+    (src/repro/obs/metrics.py) so silent oracle/jnp reroutes surface in
+    ``KnnServer.obs_snapshot()`` and the bench JSONs instead of only in a
+    returned string nobody reads.  Dispatcher bodies run at trace time,
+    so jitted callers tally once per compiled specialization — the count
+    answers "did this deployment ever fall back, and why", not "how many
+    launches"."""
+    reg = _obs_metrics.default_registry()
+    reg.counter(f"kernel.fallback.{entry}").inc()
+    reg.counter(f"kernel.fallback.{entry}.{kind}").inc()
+
+
+def _reason_kind(reason: str) -> str:
+    """Stable metric-suffix classification of a _fused_gate reason."""
+    if reason.startswith("l="):
+        return "max_l"
+    if reason.startswith("vmem"):
+        return "vmem"
+    return "dim"
+
+
 def _fused_gate(l, dim, bb, bm, bk):
     """The distance_topk routing gate: (vmem estimate, fallback reason).
 
@@ -150,6 +174,9 @@ def distance_topk(queries, points, l, *, valid=None, block_b=None,
     d = queries.shape[-1]
     _, reason = _fused_gate(l, d, bb, bm, bk)
     if mode == "oracle" or reason is not None:
+        _count_fallback("distance_topk",
+                        "mode_oracle" if reason is None
+                        else _reason_kind(reason))
         if valid is not None:
             return ref.masked_distance_topk_ref(queries, points, valid, l)
         return ref.distance_topk_ref(queries, points, l)
@@ -165,7 +192,7 @@ def _ceil_mult(x: int, m: int) -> int:
 
 
 def service_envelope(bucket_b: int, m_local: int, dim: int, l: int) -> dict:
-    """Pre-flight dispatch check for one service bucket shape — no tracing.
+    """Pre-flight dispatch check for one service bucket shape — no compile.
 
     The micro-batched kNN service (runtime/knn_server.py) compiles one
     executable per bucket (B, l_max) shape; this reports, per bucket and
@@ -187,6 +214,9 @@ def service_envelope(bucket_b: int, m_local: int, dim: int, l: int) -> dict:
     bk = 512                       # distance_topk gates on the pre-clamp bk
     vmem, reason = _fused_gate(l, dim, bb, bm, bk)
     path = mode if reason is None else "oracle"
+    _obs_metrics.default_registry().counter("kernel.envelopes").inc()
+    if reason is not None:
+        _count_fallback("envelope", _reason_kind(reason))
     return {
         "bucket_b": bucket_b, "m_local": m_local, "dim": dim, "l": l,
         "path": path, "l2_path": mode, "vmem_bytes": vmem,
@@ -212,6 +242,8 @@ def local_topk(values, l, *, block_b=None, block_m=None):
     """General-shape l-smallest per row (see kernels/local_topk.py)."""
     mode = _mode()
     if mode == "oracle" or l > _dtk.MAX_L:
+        _count_fallback("local_topk",
+                        "mode_oracle" if l <= _dtk.MAX_L else "max_l")
         return ref.local_topk_ref(values, l)
     bb = block_b or _ltk.DEFAULT_BLOCK_B
     bm = block_m or _ltk.DEFAULT_BLOCK_M
@@ -258,6 +290,8 @@ def route_mask(queries, ls, packed, *, slack=1e-4):
     k = packed[1].shape[1]
     if mode != "interpret" and (mode == "oracle"
                                 or dim_real % 128 or k % 128):
+        _count_fallback("route_mask",
+                        "mode_oracle" if mode == "oracle" else "unaligned")
         out = _route_ref_jit(q, ls2, *packed, dim_real=dim_real,
                              slack=slack)
     else:

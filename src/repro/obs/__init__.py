@@ -1,0 +1,58 @@
+"""Flight-recorder observability plane: tracing + metrics + auditors.
+
+One :class:`ObsPlane` per server bundles the pieces the serving stack
+threads through itself:
+
+* ``plane.tracer`` — a :class:`~repro.obs.trace.Tracer` ring-buffer
+  span recorder, or the shared :data:`~repro.obs.trace.NULL_TRACER`
+  when tracing is off (no lock, no allocation — the obs=off arm of the
+  overhead guard).
+* ``plane.metrics`` — a private :class:`~repro.obs.metrics.
+  MetricsRegistry` so two servers in one process never mix tallies.
+  (Module-level producers with no server handle — the kernels
+  dispatcher — use :func:`~repro.obs.metrics.default_registry`
+  instead; ``KnnServer.obs_snapshot()`` surfaces both.)
+
+The auditors (`obs/audit.py`) are constructed by the server itself
+because they need serving-side facts (k, the audit knob) — the plane
+just carries the registry they count into.
+
+``from_config`` maps the ``obs_trace`` / ``obs_trace_capacity`` knobs
+of ``KnnServiceConfig``; the metrics registry is always live (counters
+are cheap and every consumer of ``snapshot()`` expects them).
+"""
+
+from __future__ import annotations
+
+from repro.obs.audit import ContractAuditor, ShadowAuditor
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry)
+from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
+                             build_trees)
+
+__all__ = [
+    "ObsPlane", "Tracer", "NullTracer", "NULL_TRACER", "Span",
+    "build_trees", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "ContractAuditor", "ShadowAuditor",
+]
+
+
+class ObsPlane:
+    """Tracer + metrics registry for one serving stack."""
+
+    def __init__(self, *, trace: bool = False, trace_capacity: int = 8192,
+                 registry: MetricsRegistry | None = None):
+        self.tracer = Tracer(trace_capacity) if trace else NULL_TRACER
+        self.metrics = registry if registry is not None else MetricsRegistry()
+
+    @classmethod
+    def from_config(cls, cfg) -> "ObsPlane":
+        return cls(trace=getattr(cfg, "obs_trace", False),
+                   trace_capacity=getattr(cfg, "obs_trace_capacity", 8192))
+
+    def snapshot(self) -> dict:
+        return {"trace": self.tracer.stats(),
+                "metrics": self.metrics.snapshot()}
+
+    def export_trace_jsonl(self, path_or_file) -> int:
+        return self.tracer.export_jsonl(path_or_file)

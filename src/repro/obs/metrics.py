@@ -1,0 +1,224 @@
+"""Unified metrics registry: counters, gauges, streaming-quantile
+histograms.
+
+Zero-dependency (stdlib only): imported by the kernels dispatcher and
+the serving path, so it must not pull jax/numpy anywhere.  One registry
+is the single surface the scattered ad-hoc tallies (`ServerStats`,
+`IngestStats`, `maintenance_stats()`, bench-script dicts) funnel into;
+``snapshot()`` returns one consistent dict and ``export_jsonl()`` dumps
+it one-metric-per-line for offline diffing.
+
+Histogram design — **no per-observe sort**.  Observations land in
+geometric buckets ``index = floor(log(v) / log(GROWTH))`` kept in a
+dict, so ``observe`` is O(1) (one ``math.log``, one dict add) and memory
+is O(distinct buckets), never O(observations).  Quantiles are computed
+*at read time* by walking the sorted bucket keys (O(B log B) for B
+occupied buckets — B is tens, reads are rare) and returning the
+geometric midpoint of the bucket holding the target rank, clamped to
+the observed [min, max].  With ``GROWTH = 2**(1/16)`` a bucket spans
+~4.4%, so any quantile is within ~2.2% relative error of the exact
+order statistic (tests/test_obs.py checks against a sorted oracle).
+This is what fixes `StepWatchdog.observe`'s old O(n log n)-per-step
+full re-sort (`runtime/metrics.py`) without changing its semantics.
+
+Non-positive observations (all repo metrics are durations, counts, or
+sizes, so these are exceptional) share one underflow bucket whose
+representative value is the observed minimum.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Optional
+
+GROWTH = 2.0 ** (1.0 / 16.0)
+_LOG_G = math.log(GROWTH)
+_SQRT_G = GROWTH ** 0.5
+
+
+class Counter:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self.value += n
+
+    def snapshot(self):
+        return self.value
+
+
+class Gauge:
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self.value = v
+
+    def snapshot(self):
+        return self.value
+
+
+class Histogram:
+    """Streaming-quantile histogram; see module docstring."""
+
+    __slots__ = ("_lock", "count", "total", "min", "max", "_buckets",
+                 "_underflow")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._buckets: dict = {}
+        self._underflow = 0       # observations <= 0
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+            if v > 0.0:
+                idx = math.floor(math.log(v) / _LOG_G)
+                self._buckets[idx] = self._buckets.get(idx, 0) + 1
+            else:
+                self._underflow += 1
+
+    def quantile(self, q: float) -> float:
+        """Approximate q-quantile (0 <= q <= 1) of everything observed,
+        within one bucket width (~2.2% relative) of the exact order
+        statistic; NaN when empty."""
+        with self._lock:
+            return self._quantile_locked(q)
+
+    def _quantile_locked(self, q: float) -> float:
+        if self.count == 0:
+            return math.nan
+        # rank of the order statistic we report (1-based, ceil like the
+        # "nearest-rank" definition; q=0 -> min, q=1 -> max)
+        rank = min(max(int(math.ceil(q * self.count)), 1), self.count)
+        if rank <= self._underflow:
+            return self.min
+        rank -= self._underflow
+        for idx in sorted(self._buckets):
+            rank -= self._buckets[idx]
+            if rank <= 0:
+                mid = math.exp(idx * _LOG_G) * _SQRT_G
+                return min(max(mid, self.min), self.max)
+        return self.max
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            if self.count == 0:
+                return {"count": 0}
+            return {
+                "count": self.count,
+                "sum": self.total,
+                "mean": self.total / self.count,
+                "min": self.min,
+                "max": self.max,
+                "p50": self._quantile_locked(0.50),
+                "p90": self._quantile_locked(0.90),
+                "p99": self._quantile_locked(0.99),
+            }
+
+
+class MetricsRegistry:
+    """Create-or-get registry of named metrics.
+
+    Names are dotted paths (``serve.latency_s``, ``maint.commit_s``,
+    ``kernel.fallback.vmem``); the registry is flat — grouping is a
+    reader-side convention.  Asking for an existing name with a
+    different type raises (one name, one meaning).  ``snapshot()`` is
+    one lock pass over the name table plus per-metric atomic snapshots,
+    so the returned dict never tears against concurrent writers.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: dict = {}
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is None:
+                m = self._metrics[name] = cls()
+            elif not isinstance(m, cls):
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(m).__name__}, asked for {cls.__name__}")
+            return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def get(self, name: str):
+        """The metric object, or None (read-only peek; no create)."""
+        with self._lock:
+            return self._metrics.get(name)
+
+    def value(self, name: str, default=0):
+        """Counter/gauge value by name (default when absent)."""
+        m = self.get(name)
+        return default if m is None else m.snapshot()
+
+    def snapshot(self, prefix: str = "") -> dict:
+        with self._lock:
+            items = [(n, m) for n, m in self._metrics.items()
+                     if n.startswith(prefix)]
+        return {n: m.snapshot() for n, m in sorted(items)}
+
+    def export_jsonl(self, path_or_file, prefix: str = "") -> int:
+        """One ``{"metric": name, ...payload}`` object per line."""
+        snap = self.snapshot(prefix)
+        lines = []
+        for name, payload in snap.items():
+            rec = {"metric": name}
+            if isinstance(payload, dict):
+                rec.update(payload)
+            else:
+                rec["value"] = payload
+            lines.append(json.dumps(rec) + "\n")
+        if hasattr(path_or_file, "write"):
+            path_or_file.writelines(lines)
+        else:
+            with open(path_or_file, "w") as f:
+                f.writelines(lines)
+        return len(lines)
+
+
+# Process-wide default registry: the home of metrics produced by code
+# with no handle to a server's private plane (the kernels dispatcher's
+# fallback counters).  Servers get their own registry by default so two
+# servers' serving metrics never mix; both surfaces appear in
+# KnnServer.obs_snapshot().
+_DEFAULT: Optional[MetricsRegistry] = None
+_DEFAULT_LOCK = threading.Lock()
+
+
+def default_registry() -> MetricsRegistry:
+    global _DEFAULT
+    with _DEFAULT_LOCK:
+        if _DEFAULT is None:
+            _DEFAULT = MetricsRegistry()
+        return _DEFAULT

@@ -86,6 +86,8 @@ from repro.configs.knn_service import CONFIG, KnnServiceConfig
 from repro.core import knn as knn_mod
 from repro.kernels import ops as kops
 from repro.kernels import routing as routing_mod
+from repro.obs import ContractAuditor, ObsPlane, ShadowAuditor
+from repro.obs.metrics import default_registry
 from repro.parallel.compat import make_mesh, shard_map
 from repro.store import summaries as summaries_mod
 
@@ -190,6 +192,10 @@ class _Pending:
     l: int
     t_enqueue: float
     future: Future
+    # The request's root trace span (obs/trace.py), begun in submit() at
+    # t_enqueue on the caller's thread and ended when the micro-batcher
+    # resolves the future; the shared no-op span when tracing is off.
+    span: object = None
 
 
 class KnnServer:
@@ -326,6 +332,37 @@ class KnnServer:
         self._thread: Optional[threading.Thread] = None
         self._running = False
         self.stats = ServerStats()
+
+        # ---- observability plane (src/repro/obs/, DESIGN.md §12) ----
+        # Tracer per cfg.obs_trace (no-op when off); a private metrics
+        # registry (always live — counters/histograms are O(1) observes);
+        # the Theorem-1 contract auditor (always on — it is arithmetic on
+        # numbers _dispatch computes anyway) and the sampled shadow-exact
+        # auditor (cfg.obs_audit_every > 0 and a pruned route).  A
+        # store-backed server attaches its plane to the store so applies
+        # and maintenance cycles land in the same trace/registry as the
+        # queries racing them.
+        self.obs = ObsPlane.from_config(cfg)
+        if store is not None:
+            store.attach_obs(self.obs)
+        reg = self.obs.metrics
+        self._m = {
+            "queued": reg.histogram("serve.queued_s"),
+            "snapshot": reg.histogram("serve.snapshot_s"),
+            "route": reg.histogram("serve.route_s"),
+            "kernel": reg.histogram("serve.kernel_s"),
+            "resolve": reg.histogram("serve.resolve_s"),
+            "dispatch": reg.histogram("serve.dispatch_s"),
+            "latency": reg.histogram("serve.latency_s"),
+            "rounds": reg.histogram("serve.rounds"),
+            "messages": reg.histogram("serve.messages"),
+            "touched": reg.histogram("serve.touched_shards"),
+            "errors": reg.counter("serve.dispatch_errors"),
+        }
+        self._contract = ContractAuditor(reg, k=self.k)
+        self._shadow = (ShadowAuditor(reg, every=cfg.obs_audit_every)
+                        if cfg.obs_audit_every > 0 else None)
+        self._env_by_bucket = dict(zip(cfg.bucket_sizes, self.envelopes))
 
     # ---- compiled dispatch ---------------------------------------------
 
@@ -500,6 +537,33 @@ class KnnServer:
                 "max_summary_slack": max(slack) if slack else 0.0,
                 "maintenance": maintenance}
 
+    def obs_snapshot(self) -> dict:
+        """The unified observability view (DESIGN.md §12): one dict with
+        the legacy serving counters, this server's metric registry
+        (per-stage latency histograms, round/message/touched histograms,
+        store + maintenance timings when a store is attached), the
+        process-wide kernel-fallback counters (kernels/ops.py tallies
+        into the default registry — no server handle down there), tracer
+        ring stats, both auditors' verdicts, and ``placement_stats()``.
+        Benchmarks consume this instead of private tallies
+        (benchmarks/common.py ``obs_section``)."""
+        shadow = (self._shadow.snapshot() if self._shadow is not None
+                  else {"every": 0, "checks": 0, "divergences": 0,
+                        "details": []})
+        return {
+            "server": self.stats.snapshot(),
+            "metrics": self.obs.metrics.snapshot(),
+            "kernel": default_registry().snapshot(prefix="kernel."),
+            "trace": self.obs.tracer.stats(),
+            "audit": {"contract": self._contract.snapshot(),
+                      "shadow": shadow},
+            "placement": self.placement_stats(),
+        }
+
+    def export_trace_jsonl(self, path_or_file) -> int:
+        """Dump the tracer ring as JSONL (0 spans when tracing is off)."""
+        return self.obs.tracer.export_jsonl(path_or_file)
+
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
         operands, _, summ = self._backing_arrays()
@@ -530,7 +594,11 @@ class KnnServer:
         query = np.asarray(query, np.float32)
         if query.shape != (self.dim,):
             raise ValueError(f"query shape {query.shape} != ({self.dim},)")
-        rec = _Pending(query, l, time.perf_counter(), Future())
+        t_enq = time.perf_counter()
+        # Root span of this request's trace, opened at the enqueue
+        # timestamp so the retroactive "queued" child always nests.
+        span = self.obs.tracer.begin("request", t0=t_enq, l=l)
+        rec = _Pending(query, l, t_enq, Future(), span)
         with self._cv:
             self._pending.append(rec)
             self._cv.notify()
@@ -598,41 +666,101 @@ class KnnServer:
             batch_id = self._batch_counter
             self._batch_counter += 1
         key = jax.random.fold_in(self._base_key, batch_id)
+        tracer = self.obs.tracer
         t_dispatch = time.perf_counter()
+        # Per-batch trace root; request trees point at it through their
+        # "serve" child's batch attribute (cross-tree reference by
+        # attribute, never by parent link — trees stay single-rooted).
+        dspan = tracer.begin("dispatch", t0=t_dispatch, batch=batch_id,
+                             bucket=bucket, n_real=n)
+        env = self._env_by_bucket[bucket]
+        batch_spans = [dspan]        # every begun span, ended on error too
+        # Stage boundaries are stamped explicitly (not read back off the
+        # spans) so the per-stage histograms stay populated with tracing
+        # off — the no-op span carries no clock.
         try:
+            t_snap0 = time.perf_counter()
+            sspan = tracer.begin("snapshot", parent=dspan, t0=t_snap0)
+            batch_spans.append(sspan)
             operands, generation, summ = self._backing_arrays()
+            if self._store is not None:
+                n_live = int(self._store.live_per_shard.sum())
+            else:
+                n_live = self.m_local * self.k
+            sspan.end(generation=generation, n_live=n_live)
+            t_snap1 = time.perf_counter()
+            t_route0 = t_route1 = None
+            kattrs = dict(path=env["path"], l2_path=env["l2_path"],
+                          fallback=env["fallback_reason"] or "")
             if self._route_fn is not None:
                 # Device routing: the Pallas prologue computes the
                 # touched-shard union inside the same launch as the
-                # query; ``active`` comes back with the batch.
+                # query; ``active`` comes back with the batch — so the
+                # routing decision has no separate interval and its span
+                # is recorded over the fused launch.
+                t_kern0 = time.perf_counter()
+                kspan = tracer.begin("kernel", parent=dspan, t0=t_kern0,
+                                     route_compute="device", **kattrs)
+                batch_spans.append(kspan)
                 packed = self._packed_for(summ)
                 d, i, iters, surv, active = self._route_fn(
                     operands, packed, q, l_arr, key)
+                d, i = np.asarray(d), np.asarray(i)
+                surv, iters = np.asarray(surv), int(iters)
                 touched = int(np.asarray(active).sum())
+                kspan.end(touched=touched)
+                t_kern1 = time.perf_counter()
+                tracer.record("route", t_kern0, t_kern1, parent=dspan,
+                              compute="device", fused=True,
+                              touched=touched, slack=self.cfg.route_slack)
             elif self.cfg.route == "pruned":
                 # Touched-shard set for this micro-batch: the union over
                 # real rows of the summary lower-bound survivors (padding
                 # rows carry l=0 and route nowhere).  One collective pass
                 # serves the whole batch, so the device mask is the union;
                 # accounting charges only the touched subset.
+                t_route0 = time.perf_counter()
+                rspan = tracer.begin("route", parent=dspan, t0=t_route0,
+                                     compute="host",
+                                     slack=self.cfg.route_slack)
+                batch_spans.append(rspan)
                 active_rows = summaries_mod.route_shards(
                     summ, q, l_arr, slack=self.cfg.route_slack)
                 active = active_rows.any(axis=0)
                 touched = int(active.sum())
-                operands = operands + (active,)
-                d, i, iters, surv = self._fn(*operands, q, l_arr, key)
+                rspan.end(touched=touched)
+                t_route1 = time.perf_counter()
+                kspan = tracer.begin("kernel", parent=dspan, t0=t_route1,
+                                     route_compute="host", **kattrs)
+                batch_spans.append(kspan)
+                d, i, iters, surv = self._fn(*operands, active, q, l_arr,
+                                             key)
+                d, i = np.asarray(d), np.asarray(i)
+                surv, iters = np.asarray(surv), int(iters)
+                kspan.end()
+                t_kern0, t_kern1 = t_route1, time.perf_counter()
             else:
                 touched = self.k
+                t_kern0 = time.perf_counter()
+                kspan = tracer.begin("kernel", parent=dspan, t0=t_kern0,
+                                     **kattrs)
+                batch_spans.append(kspan)
                 d, i, iters, surv = self._fn(*operands, q, l_arr, key)
-            d = np.asarray(d)
-            i = np.asarray(i)
-            surv = np.asarray(surv)
-            iters = int(iters)
+                d, i = np.asarray(d), np.asarray(i)
+                surv, iters = np.asarray(surv), int(iters)
+                kspan.end()
+                t_kern1 = time.perf_counter()
         except Exception as exc:
             # A failed dispatch must never strand its futures (the chunk
-            # already left the queue) or kill the micro-batcher thread.
+            # already left the queue), kill the micro-batcher thread, or
+            # leave torn spans behind.
+            self._m["errors"].inc()
             for rec in chunk:
                 _resolve(rec.future, error=exc)
+                if rec.span is not None:
+                    rec.span.end(error=type(exc).__name__)
+            for sp in reversed(batch_spans):      # Span.end is idempotent
+                sp.end(error=type(exc).__name__)
             return
         t_done = time.perf_counter()
 
@@ -640,6 +768,34 @@ class KnnServer:
         self.stats.observe(
             bucket, n,
             touched=touched if self.cfg.route == "pruned" else None)
+        l_real = max((rec.l for rec in chunk), default=1)
+        # Theorem-1 contract: always-on envelope check.  The gather
+        # sampler's bill charges the static buffer width l_max per peer,
+        # so its envelope is checked against the same width.
+        audit_l = (self.cfg.l_max if self.cfg.sampler == "gather"
+                   else l_real)
+        self._contract.check(
+            l_max=audit_l, n_live=n_live, rounds=rounds, messages=messages,
+            use_sampling=self.cfg.use_sampling, sampler=self.cfg.sampler,
+            generation=generation)
+        # Shadow-exact audit: replay every Nth pruned batch through the
+        # same executable with the all-shards-active mask — the exact
+        # collective at this generation with this key (the bit-identical
+        # invariant of tests/test_routing.py as a production signal).
+        if (self._shadow is not None and self.cfg.route == "pruned"
+                and self._shadow.due()):
+            with tracer.span("shadow_audit", parent=dspan,
+                             generation=generation) as aspan:
+                all_on = np.ones(self.k, bool)
+                ok = self._shadow.check(
+                    d, i, lambda: self._exact_replay(operands, all_on, q,
+                                                     l_arr, key),
+                    generation=generation, batch_id=batch_id,
+                    touched=touched)
+                aspan.annotate(diverged=not ok)
+
+        t_res0 = time.perf_counter()
+        vspan = tracer.begin("resolve", parent=dspan, t0=t_res0)
         for row, rec in enumerate(chunk):
             # ascending by distance (gather_selected packs by shard rank,
             # not by distance; l is small, so sort host-side — this also
@@ -667,6 +823,37 @@ class KnnServer:
                 queued_s=t_dispatch - rec.t_enqueue,
                 latency_s=t_done - rec.t_enqueue,
                 generation=generation, shards_touched=touched))
+            if rec.span is not None:
+                tracer.record("queued", rec.t_enqueue, t_dispatch,
+                              parent=rec.span)
+                tracer.record("serve", t_dispatch, t_done,
+                              parent=rec.span, batch=batch_id)
+                rec.span.end(bucket=bucket, generation=generation,
+                             route=self.cfg.route, touched=touched,
+                             rounds=rounds)
+            self._m["queued"].observe(t_dispatch - rec.t_enqueue)
+            self._m["latency"].observe(
+                time.perf_counter() - rec.t_enqueue)
+        vspan.end()
+        dspan.end(touched=touched, generation=generation)
+        t_res1 = time.perf_counter()
+        m = self._m
+        m["snapshot"].observe(t_snap1 - t_snap0)
+        m["kernel"].observe(t_kern1 - t_kern0)
+        if t_route0 is not None:
+            m["route"].observe(t_route1 - t_route0)
+        m["resolve"].observe(t_res1 - t_res0)
+        m["dispatch"].observe(t_res1 - t_dispatch)
+        m["rounds"].observe(rounds)
+        m["messages"].observe(messages)
+        m["touched"].observe(touched)
+
+    def _exact_replay(self, operands, all_on, q, l_arr, key):
+        """The exact collective for one dispatched pruned batch: the same
+        executable, operands, and key, with every shard active.  Answers
+        are host arrays ready for byte comparison."""
+        d, i, *_ = self._fn(*operands, all_on, q, l_arr, key)
+        return np.asarray(d), np.asarray(i)
 
     # ---- background micro-batcher ---------------------------------------
 

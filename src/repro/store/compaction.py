@@ -62,22 +62,33 @@ class CompactionDecision(NamedTuple):
 
 def evaluate(live: np.ndarray, used: np.ndarray, cap: int, *,
              tombstone_frac: float,
-             imbalance_frac: float) -> CompactionDecision:
+             imbalance_frac: float,
+             registry=None) -> CompactionDecision:
     """Decide whether the store should repack.
 
     ``live``: (k,) live points per shard; ``used``: (k,) occupied slots
     per shard (the high-water mark — live + tombstones); ``cap``: slots
-    per shard.
+    per shard.  With ``registry`` (an obs MetricsRegistry), the two
+    erosion scalars are published as gauges on every evaluation and a
+    fired trigger is counted by kind — the compactor's inputs show up
+    in ``snapshot()`` instead of only its effects.
     """
     used_total = int(used.sum())
     dead = used_total - int(live.sum())
     density = dead / used_total if used_total else 0.0
     imbalance = (int(live.max()) - int(live.min())) / cap if cap else 0.0
+    if registry is not None:
+        registry.gauge("store.tombstone_density").set(density)
+        registry.gauge("store.imbalance").set(imbalance)
     if density > tombstone_frac:
+        if registry is not None:
+            registry.counter("store.compact_trigger.tombstone").inc()
         return CompactionDecision(
             True, f"tombstone_density {density:.3f} > {tombstone_frac}",
             density, imbalance)
     if imbalance > imbalance_frac:
+        if registry is not None:
+            registry.counter("store.compact_trigger.imbalance").inc()
         return CompactionDecision(
             True, f"imbalance {imbalance:.3f} > {imbalance_frac}",
             density, imbalance)

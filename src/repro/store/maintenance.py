@@ -57,11 +57,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import traceback
 from typing import Optional
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
 from repro.store import placement as placement_mod
@@ -152,7 +154,8 @@ class MaintenanceWorker:
             decision = compaction.evaluate(
                 st._live, st._used, st.cap,
                 tombstone_frac=st.compact_tombstone_frac,
-                imbalance_frac=st.compact_imbalance_frac)
+                imbalance_frac=st.compact_imbalance_frac,
+                registry=st._obs_registry())
             if decision.compact:
                 return ("repack", st.redeal, decision.reason)
         j = st._split_due_locked()
@@ -181,8 +184,18 @@ class MaintenanceWorker:
             split_radius_factor=st._summ.split_radius_factor)
 
     def _cycle(self) -> bool:
-        """One plan / prepare / commit pass; False when no work is due."""
+        """One plan / prepare / commit pass; False when no work is due.
+
+        Each working cycle emits one ``maint.cycle`` trace rooted in the
+        store's attached obs plane (src/repro/obs/), with ``maint.plan``
+        / ``maint.prepare`` / ``maint.commit`` (or ``maint.discard``)
+        child spans — so a query trace and the maintenance commit racing
+        it are directly comparable on the shared monotonic clock.
+        """
         st = self._store
+        obs = st._obs
+        tracer = obs.tracer if obs is not None else NULL_TRACER
+        t0 = time.perf_counter()
         with st._lock:
             plan = self._plan_locked()
             if plan is None:
@@ -205,25 +218,41 @@ class MaintenanceWorker:
                 slack = compaction.redeal_slack(
                     st.placement_guard_slack, st.compact_imbalance_frac,
                     st.cap, st.k)
-        if plan[0] == "retighten":
-            self._retighten(plan[1], pj)
-        else:
-            self._repack(plan, pts, ids, valid,
-                         seed_cents if plan[1] == "proximity" else None,
-                         slack)
+        cspan = tracer.begin("maint.cycle", t0=t0, kind=plan[0])
+        tracer.record("maint.plan", t0, time.perf_counter(), parent=cspan,
+                      kind=plan[0])
+        try:
+            if plan[0] == "retighten":
+                self._retighten(plan[1], pj, tracer=tracer, cspan=cspan)
+            else:
+                self._repack(plan, pts, ids, valid,
+                             seed_cents if plan[1] == "proximity" else None,
+                             slack, tracer=tracer, cspan=cspan)
+        finally:
+            cspan.end()
+            if obs is not None:
+                obs.metrics.histogram("maint.cycle_s").observe(
+                    time.perf_counter() - t0)
         return True
 
     # ---- re-tightening ---------------------------------------------------
 
-    def _retighten(self, j: int, pj: np.ndarray) -> None:
+    def _retighten(self, j: int, pj: np.ndarray, *, tracer=NULL_TRACER,
+                   cspan=None) -> None:
         st = self._store
-        scratch = self._scratch(1)
-        if len(pj):                              # off-lock exact rebuild
-            scratch._rebuild_shard(0, pj)
+        with tracer.span("maint.prepare", parent=cspan, shard=j,
+                         live=len(pj)):
+            scratch = self._scratch(1)
+            if len(pj):                          # off-lock exact rebuild
+                scratch._rebuild_shard(0, pj)
+        t_commit = time.perf_counter()
         with st._lock:
             journal, st._journal = st._journal, None
             if st._journal_invalid:
                 self.stats.discards += 1
+                tracer.record("maint.discard", t_commit,
+                              time.perf_counter(), parent=cspan,
+                              reason="capture invalidated")
                 return
             # replay what raced the rebuild — shard j's ops only
             for kind, _pid, shard, new_pt, old_pt in journal:
@@ -243,38 +272,47 @@ class MaintenanceWorker:
             st.stats.retightens += 1
             self.stats.retightens += 1
             self.stats.commits += 1
+        tracer.record("maint.commit", t_commit, time.perf_counter(),
+                      parent=cspan, kind="retighten", shard=j,
+                      generation=st._snap.generation)
 
     # ---- repack / split --------------------------------------------------
 
     def _repack(self, plan, pts, ids, valid, seed_cents,
-                slack: int) -> None:
+                slack: int, *, tracer=NULL_TRACER, cspan=None) -> None:
         from repro.store import mutable as mutable_mod
         st = self._store
         kind, redeal, reason = plan
         # ---- prepare off-lock: repack copies, rebuild a scratch
         # maintainer, upload the repacked buffers ----
-        if (redeal or st.redeal) == "proximity":
-            res = placement_mod.repack_proximity(
-                pts, ids, valid, st.k, st.cap,
-                id_sentinel=mutable_mod.ID_SENTINEL, balance_slack=slack,
-                seed_centroids=seed_cents)
-        else:
-            res = compaction.repack(pts, ids, valid, st.k, st.cap,
-                                    id_sentinel=mutable_mod.ID_SENTINEL)
-        scratch = self._scratch(st.k)
-        scratch.rebuild(res.points, res.valid, st.cap)
-        # upload copies: replay mutates the staged mirrors after this,
-        # and the transfer may still be in flight (the same rule as
-        # _upload_snapshot_locked)
-        import jax
-        dev_pts = jax.device_put(res.points.copy(), st._sharding)
-        dev_ids = jax.device_put(res.ids.copy(), st._sharding)
-        dev_valid = jax.device_put(res.valid.copy(), st._sharding)
+        with tracer.span("maint.prepare", parent=cspan, kind=kind,
+                         redeal=redeal or st.redeal, reason=reason):
+            if (redeal or st.redeal) == "proximity":
+                res = placement_mod.repack_proximity(
+                    pts, ids, valid, st.k, st.cap,
+                    id_sentinel=mutable_mod.ID_SENTINEL,
+                    balance_slack=slack, seed_centroids=seed_cents)
+            else:
+                res = compaction.repack(pts, ids, valid, st.k, st.cap,
+                                        id_sentinel=mutable_mod.ID_SENTINEL)
+            scratch = self._scratch(st.k)
+            scratch.rebuild(res.points, res.valid, st.cap)
+            # upload copies: replay mutates the staged mirrors after
+            # this, and the transfer may still be in flight (the same
+            # rule as _upload_snapshot_locked)
+            import jax
+            dev_pts = jax.device_put(res.points.copy(), st._sharding)
+            dev_ids = jax.device_put(res.ids.copy(), st._sharding)
+            dev_valid = jax.device_put(res.valid.copy(), st._sharding)
 
+        t_commit = time.perf_counter()
         with st._lock:
             journal, st._journal = st._journal, None
             if st._journal_invalid:
                 self.stats.discards += 1
+                tracer.record("maint.discard", t_commit,
+                              time.perf_counter(), parent=cspan,
+                              reason="capture invalidated")
                 return
             new_pts, new_ids, new_valid = res.points, res.ids, res.valid
             slot_of, live, used = res.slot_of, res.live, res.used
@@ -294,6 +332,9 @@ class MaintenanceWorker:
                         # raced it — drop the staged work; the store's
                         # own state already has these ops applied
                         self.stats.discards += 1
+                        tracer.record("maint.discard", t_commit,
+                                      time.perf_counter(), parent=cspan,
+                                      reason="no tail room for replay")
                         return
                     slot = j * st.cap + int(used[j])
                     used[j] += 1
@@ -344,3 +385,6 @@ class MaintenanceWorker:
             st._record_history()
             self.stats.repacks += 1
             self.stats.commits += 1
+        tracer.record("maint.commit", t_commit, time.perf_counter(),
+                      parent=cspan, kind=kind, generation=gen,
+                      replayed=len(journal))

@@ -75,12 +75,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import NamedTuple, Optional
 
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.obs.trace import NULL_TRACER
 from repro.parallel.compat import make_mesh
 from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
@@ -242,10 +244,30 @@ class MutableStore:
         self.maintenance = str(maintenance)
         self._journal: Optional[list] = None
         self._journal_invalid = False
+        # Observability plane (src/repro/obs/): attached after
+        # construction by the serving layer (KnnServer hands the store
+        # its own plane so store applies and maintenance cycles land in
+        # the same trace/registry as the queries racing them).  Unattached
+        # stores trace into the shared no-op and record no metrics.
+        self._obs = None
         self._worker: Optional[maintenance_mod.MaintenanceWorker] = None
         if self.maintenance == "background":
             self._worker = maintenance_mod.MaintenanceWorker(
                 self, probe_sample=maintenance_probe_sample)
+
+    def attach_obs(self, plane) -> None:
+        """Attach an :class:`repro.obs.ObsPlane`; applies and background
+        maintenance cycles from here on emit spans into its tracer and
+        timings into its registry.  Late attach is safe (the worker
+        re-reads the plane each cycle); attaching replaces any previous
+        plane."""
+        self._obs = plane
+
+    def _obs_tracer(self):
+        return self._obs.tracer if self._obs is not None else NULL_TRACER
+
+    def _obs_registry(self):
+        return self._obs.metrics if self._obs is not None else None
 
     def close(self) -> None:
         """Stop the background maintenance worker (no-op when inline or
@@ -482,6 +504,7 @@ class MutableStore:
             return self._apply_locked(force_compact=True)
 
     def _apply_locked(self, *, force_compact: bool) -> int:
+        t_apply = time.perf_counter()
         ops, self._pending = self._pending, []
         self._staged_state = {}
         touched: set[int] = set()
@@ -549,7 +572,8 @@ class MutableStore:
             decision = compaction.evaluate(
                 self._live, self._used, self.cap,
                 tombstone_frac=self.compact_tombstone_frac,
-                imbalance_frac=self.compact_imbalance_frac)
+                imbalance_frac=self.compact_imbalance_frac,
+                registry=self._obs_registry())
             if decision.compact:
                 self._repack_locked()
                 repacked = True
@@ -597,6 +621,15 @@ class MutableStore:
         self._record_history()
         if self._worker is not None:
             self._worker.notify()
+        t_done = time.perf_counter()
+        self._obs_tracer().record("store.apply", t_apply, t_done,
+                                  generation=gen, ops=len(ops),
+                                  repacked=repacked)
+        if self._obs is not None:
+            reg = self._obs.metrics
+            reg.histogram("store.apply_s").observe(t_done - t_apply)
+            reg.counter("store.applies").inc()
+            reg.gauge("store.live").set(self._projected_live)
         return gen
 
     def _upload_snapshot_locked(self, *, generation: int) -> StoreSnapshot:
@@ -646,6 +679,7 @@ class MutableStore:
         # An inline repack rebuilds mirrors AND summaries exactly; any
         # background capture prepared against the pre-repack layout is
         # now both stale and pointless — invalidate it.
+        t_repack = time.perf_counter()
         if self._journal is not None:
             self._journal_invalid = True
         if (redeal or self.redeal) == "proximity":
@@ -672,6 +706,14 @@ class MutableStore:
         # (covering-but-loose) summary bounds get re-tightened.
         self._summ.rebuild(self._pts, self._valid, self.cap)
         self.stats.compactions += 1
+        t_done = time.perf_counter()
+        self._obs_tracer().record("store.repack", t_repack, t_done,
+                                  redeal=redeal or self.redeal,
+                                  plane="inline")
+        if self._obs is not None:
+            self._obs.metrics.histogram("store.repack_s").observe(
+                t_done - t_repack)
+            self._obs.metrics.counter("store.repacks").inc()
 
     def _scatter_locked(self, slots: list[int]):
         """Apply the final per-slot values of one staged batch on device.

@@ -1,0 +1,487 @@
+"""Observability plane (src/repro/obs/): recorder, registry, auditors.
+
+What this suite pins, layer by layer:
+
+* **Histogram quantiles** stay within one geometric bucket (~2.2%
+  relative, asserted at 5%) of a sorted oracle with O(1) observes — the
+  property that fixed ``StepWatchdog.observe``'s per-step re-sort.
+* **Span trees are well-formed under racing** — the
+  test_async_maintenance.py-style harness (mutator thread + background
+  maintenance worker + micro-batcher) must quiesce with zero torn
+  spans, every exported tree reassembling cleanly, complete request
+  trees, and maintenance cycles interleaved in the same ring.
+* **The auditors audit.**  The Theorem-1 contract envelope passes on
+  real serving and trips on absurd bills; the shadow-exact auditor
+  catches an injected routing corruption (a monkeypatched router that
+  silently drops shards) and stays silent on a clean run.
+* **The recorder is affordable**: instrumented-vs-off on the same smoke
+  workload within the 10% budget (DESIGN.md §12).
+"""
+
+import io
+import json
+import math
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.obs import ObsPlane
+from repro.obs.audit import ContractAuditor, ShadowAuditor
+from repro.obs.metrics import (GROWTH, Histogram, MetricsRegistry,
+                               default_registry)
+from repro.obs.trace import NULL_TRACER, Tracer, build_trees
+from repro.runtime import KnnServer
+from repro.runtime.metrics import StepWatchdog
+from repro.store import MutableStore
+
+DIM = 8
+L_MAX = 16
+
+
+# ---- metrics registry ----------------------------------------------------
+
+def test_histogram_quantiles_vs_sorted_oracle(rng):
+    h = Histogram()
+    samples = rng.lognormal(mean=-6.0, sigma=1.5, size=20_000)
+    for v in samples:
+        h.observe(float(v))
+    s = np.sort(samples)
+    for q in (0.50, 0.90, 0.99):
+        exact = float(s[min(int(math.ceil(q * len(s))) - 1, len(s) - 1)])
+        approx = h.quantile(q)
+        assert abs(approx - exact) / exact < 0.05, (q, approx, exact)
+    snap = h.snapshot()
+    assert snap["count"] == len(samples)
+    assert snap["min"] == float(samples.min())
+    assert snap["max"] == float(samples.max())
+    assert abs(snap["mean"] - samples.mean()) / samples.mean() < 1e-9
+
+
+def test_histogram_identical_values_exact_and_edge_cases():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5))
+    for _ in range(9):
+        h.observe(0.1)
+    # all-identical observations: clamping to [min, max] makes every
+    # quantile exact — the property StepWatchdog's flagging rests on
+    assert h.quantile(0.5) == pytest.approx(0.1)
+    assert h.quantile(0.99) == pytest.approx(0.1)
+    h.observe(0.0)                     # underflow bucket -> reported min
+    assert h.quantile(0.01) == 0.0
+    # any quantile is within one bucket (~GROWTH) of the true value
+    assert GROWTH < 1.05
+
+
+def test_registry_create_or_get_and_type_collision():
+    reg = MetricsRegistry()
+    c = reg.counter("a.count")
+    c.inc()
+    assert reg.counter("a.count") is c
+    assert reg.value("a.count") == 1
+    assert reg.value("missing", default=7) == 7
+    with pytest.raises(TypeError, match="already registered"):
+        reg.histogram("a.count")
+    reg.gauge("a.gauge").set(2.5)
+    reg.histogram("a.hist").observe(1.0)
+    snap = reg.snapshot(prefix="a.")
+    assert set(snap) == {"a.count", "a.gauge", "a.hist"}
+    buf = io.StringIO()
+    assert reg.export_jsonl(buf) == 3
+    lines = [json.loads(ln) for ln in buf.getvalue().splitlines()]
+    assert {ln["metric"] for ln in lines} == set(snap)
+
+
+def test_step_watchdog_streaming_semantics():
+    w = StepWatchdog(factor=3.0, warmup=3)
+    for _ in range(10):
+        assert not w.observe(0.1)
+    assert w.observe(1.0)              # 10x the p50 -> flagged
+    assert w.flagged
+    assert not w.observe(0.1)          # recovery is not sticky
+    # registry-backed: the same flagging, counted
+    reg = MetricsRegistry()
+    w2 = StepWatchdog(factor=3.0, warmup=2, registry=reg)
+    for _ in range(4):
+        w2.observe(0.05)
+    w2.observe(0.5)
+    assert reg.value("watchdog.step_s.flagged") == 1
+    assert reg.get("watchdog.step_s").count == 5
+
+
+# ---- tracer --------------------------------------------------------------
+
+def test_tracer_span_tree_and_retroactive_record():
+    tr = Tracer(capacity=64)
+    root = tr.begin("request", l=4)
+    t_mid = time.perf_counter()
+    with tr.span("kernel", parent=root, path="oracle"):
+        time.sleep(0.001)
+    tr.record("queued", root.t0, t_mid, parent=root)
+    root.end(route="pruned")
+    assert tr.active_count() == 0
+    recs = tr.spans()
+    assert [r["name"] for r in recs] == ["kernel", "queued", "request"]
+    trees = build_trees(recs)
+    assert len(trees) == 1
+    by_name = {r["name"]: r for r in recs}
+    assert by_name["kernel"]["parent"] == by_name["request"]["span"]
+    assert by_name["request"]["attrs"] == {"l": 4, "route": "pruned"}
+    # idempotent end: a second end must not double-record
+    root.end()
+    assert len(tr.spans()) == 3
+
+
+def test_tracer_ring_eviction_and_export():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.begin(f"s{i}").end()
+    assert len(tr.spans()) == 4
+    assert tr.dropped == 6
+    assert [r["name"] for r in tr.spans()] == ["s6", "s7", "s8", "s9"]
+    buf = io.StringIO()
+    assert tr.export_jsonl(buf) == 4
+    assert tr.stats()["recorded"] == 4
+    tr.clear()
+    assert tr.spans() == [] and tr.dropped == 0
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_null_tracer_is_inert():
+    sp = NULL_TRACER.begin("x", parent=None, l=1)
+    assert sp.end() is sp and sp.span_id == 0
+    with NULL_TRACER.span("y"):
+        pass
+    assert NULL_TRACER.spans() == []
+    assert NULL_TRACER.active_count() == 0
+    assert NULL_TRACER.export_jsonl(io.StringIO()) == 0
+    assert NULL_TRACER.stats()["enabled"] is False
+
+
+def test_build_trees_rejects_malformed_forests():
+    def rec(span, parent, t0, t1, trace=1, name="s"):
+        return {"trace": trace, "span": span, "parent": parent,
+                "name": name, "t0": t0, "t1": t1}
+
+    with pytest.raises(ValueError, match="unfinished"):
+        build_trees([rec(1, None, 0.0, None)])
+    with pytest.raises(ValueError, match="orphaned"):
+        build_trees([rec(2, 99, 0.0, 1.0)])
+    with pytest.raises(ValueError, match="ends before"):
+        build_trees([rec(1, None, 5.0, 1.0)])
+    with pytest.raises(ValueError, match="outside parent"):
+        build_trees([rec(1, None, 0.0, 1.0),
+                     rec(2, 1, 0.0, 2.0)])
+    with pytest.raises(ValueError, match="crosses traces"):
+        build_trees([rec(1, None, 0.0, 1.0),
+                     rec(2, 1, 0.0, 0.5, trace=7)])
+    # well-formed forest: two roots, nested children
+    ok = [rec(1, None, 0.0, 1.0), rec(2, 1, 0.2, 0.8),
+          rec(3, None, 0.0, 1.0, trace=3)]
+    assert set(build_trees(ok)) == {1, 3}
+
+
+def test_obs_plane_from_config():
+    on = ObsPlane.from_config(CONFIG.replace(obs_trace=True,
+                                             obs_trace_capacity=32))
+    assert on.tracer.enabled and on.tracer.capacity == 32
+    off = ObsPlane.from_config(CONFIG)
+    assert off.tracer is NULL_TRACER
+    assert off.snapshot()["trace"]["enabled"] is False
+
+
+def test_compaction_evaluate_publishes_registry():
+    from repro.store import compaction
+    reg = MetricsRegistry()
+    live = np.array([10, 10, 10, 10])
+    used = np.array([20, 10, 10, 10])   # 10 dead of 50 used
+    d = compaction.evaluate(live, used, 32, tombstone_frac=0.1,
+                            imbalance_frac=0.5, registry=reg)
+    assert d.compact and "tombstone" in d.reason
+    assert reg.value("store.compact_trigger.tombstone") == 1
+    assert reg.value("store.tombstone_density") == pytest.approx(0.2)
+    d2 = compaction.evaluate(live, np.array([30, 10, 10, 10]), 32,
+                             tombstone_frac=0.9, imbalance_frac=0.5,
+                             registry=reg)
+    assert not d2.compact               # gauges refresh even when quiet
+    assert reg.value("store.tombstone_density") == pytest.approx(1 / 3)
+    # registry-less calls stay pure (the store without an attached plane)
+    assert compaction.evaluate(live, used, 32, tombstone_frac=0.1,
+                               imbalance_frac=0.5).compact
+
+
+# ---- contract auditor ----------------------------------------------------
+
+def test_contract_auditor_bounds_and_verdicts():
+    reg = MetricsRegistry()
+    a = ContractAuditor(reg, k=8)
+    # monotone in l, barely sensitive to n (the w.h.p. loglog term)
+    r1 = a.rounds_bound(1, 10_000, use_sampling=True, sampler="selection")
+    r128 = a.rounds_bound(128, 10_000, use_sampling=True,
+                          sampler="selection")
+    assert r1 < r128
+    big_n = a.rounds_bound(1, 10_000_000, use_sampling=True,
+                           sampler="selection")
+    assert big_n - r1 < 6.0            # loglog growth, not log
+    # gather is exact: 1 round, (k-1)*l_max messages
+    assert a.rounds_bound(16, 10_000, use_sampling=True,
+                          sampler="gather") == 1.0
+    assert a.messages_bound(16, 10_000, use_sampling=True,
+                            sampler="gather") == 7 * 16
+    # a realistic bill passes; an absurd one (the deterministic
+    # iteration cap, ~8*log2(n) rounds) is flagged
+    assert a.check(l_max=8, n_live=10_000, rounds=24, messages=7 * 24,
+                   use_sampling=True, sampler="selection")
+    assert not a.check(l_max=8, n_live=10_000, rounds=280,
+                       messages=7 * 280, use_sampling=True,
+                       sampler="selection")
+    snap = a.snapshot()
+    assert snap["checks"] == 2 and snap["violations"] == 1
+    assert snap["details"][0]["rounds"] == 280
+    # Theorem 2.2 regime (no sampling): O(log n) rounds are in-envelope
+    assert a.check(l_max=8, n_live=10_000, rounds=60, messages=7 * 60,
+                   use_sampling=False, sampler="selection")
+
+
+def test_shadow_auditor_sampling_and_divergence():
+    reg = MetricsRegistry()
+    s = ShadowAuditor(reg, every=3)
+    assert [s.due() for _ in range(7)] == [True, False, False,
+                                           True, False, False, True]
+    d = np.arange(4, dtype=np.float32)
+    i = np.arange(4, dtype=np.int32)
+    assert s.check(d, i, lambda: (d.copy(), i.copy()))
+    assert not s.check(d, i, lambda: (d + 1, i.copy()), batch_id=5)
+    snap = s.snapshot()
+    assert snap["checks"] == 2 and snap["divergences"] == 1
+    assert snap["details"][0]["batch_id"] == 5
+    with pytest.raises(ValueError):
+        ShadowAuditor(reg, every=0)
+
+
+# ---- serving integration -------------------------------------------------
+
+def _clustered_server(mesh8, *, obs_trace=True, audit_every=0,
+                      route_compute="host", seed=0, per_shard=24):
+    from repro.data import sharded_clusters
+    pts, centers = sharded_clusters(8, per_shard, DIM, seed=seed)
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(1, 2, 4),
+                         sampler="selection", route="pruned",
+                         route_compute=route_compute,
+                         obs_trace=obs_trace, obs_audit_every=audit_every)
+    srv = KnnServer(pts, cfg=cfg, mesh=mesh8, axis_name="x")
+    srv.warmup()
+    return srv, centers
+
+
+def test_request_trace_complete_and_audits_clean(mesh8):
+    """One traced, audited serving pass: every request tree is complete
+    (queued + serve children), every dispatch tree carries the
+    snapshot/route/kernel/resolve stages, both auditors ran and stayed
+    clean, and the per-stage histograms populated."""
+    srv, centers = _clustered_server(mesh8, audit_every=2)
+    rng = np.random.default_rng(1)
+    for wave in range(5):
+        qs = (centers[wave % len(centers)]
+              + rng.normal(size=(3, DIM))).astype(np.float32)
+        srv.query_batch(qs, [1 + wave % 4] * 3)
+    assert srv.obs.tracer.active_count() == 0
+    recs = srv.obs.tracer.spans()
+    build_trees(recs)
+    kids = {}
+    for r in recs:
+        if r["parent"] is not None:
+            kids.setdefault(r["parent"], set()).add(r["name"])
+    requests = [r for r in recs if r["name"] == "request"]
+    assert len(requests) == 15
+    assert all(kids[r["span"]] == {"queued", "serve"} for r in requests)
+    dispatches = [r for r in recs if r["name"] == "dispatch"]
+    assert dispatches
+    for d in dispatches:
+        assert {"snapshot", "route", "kernel", "resolve"} <= kids[d["span"]]
+    # the serve child names its dispatch batch (cross-tree reference by
+    # attribute, never by parent link)
+    batches = {d["attrs"]["batch"] for d in dispatches}
+    serves = [r for r in recs if r["name"] == "serve"]
+    assert all(r["attrs"]["batch"] in batches for r in serves)
+
+    snap = srv.obs_snapshot()
+    assert snap["audit"]["contract"]["checks"] == len(dispatches)
+    assert snap["audit"]["contract"]["violations"] == 0
+    assert snap["audit"]["shadow"]["checks"] >= 1
+    assert snap["audit"]["shadow"]["divergences"] == 0
+    for stage in ("serve.snapshot_s", "serve.route_s", "serve.kernel_s",
+                  "serve.resolve_s", "serve.latency_s", "serve.queued_s"):
+        assert snap["metrics"][stage]["count"] > 0, stage
+    assert snap["metrics"]["serve.rounds"]["count"] == len(dispatches)
+    # the kernels dispatcher counted its envelope builds (and any
+    # fallbacks) in the process-wide registry
+    assert default_registry().value("kernel.envelopes") > 0
+
+
+def test_device_routed_trace_has_fused_route_span(mesh8):
+    srv, centers = _clustered_server(mesh8, route_compute="device",
+                                     audit_every=2, seed=3)
+    qs = (centers[0] + np.random.default_rng(2)
+          .normal(size=(2, DIM))).astype(np.float32)
+    srv.query_batch(qs, [4, 4])
+    recs = srv.obs.tracer.spans()
+    build_trees(recs)
+    routes = [r for r in recs if r["name"] == "route"]
+    assert routes and all(r["attrs"]["fused"] for r in routes)
+    kernels = [r for r in recs if r["name"] == "kernel"]
+    assert all(r["attrs"]["route_compute"] == "device" for r in kernels)
+    snap = srv.obs_snapshot()
+    assert snap["audit"]["shadow"]["checks"] >= 1
+    assert snap["audit"]["shadow"]["divergences"] == 0
+    assert snap["audit"]["contract"]["violations"] == 0
+
+
+def test_shadow_auditor_catches_injected_routing_corruption(mesh8):
+    """Corrupt the router (drop every shard but the query's worst) and
+    the sampled shadow-exact replay must flag byte divergence — the
+    offline bit-identity invariant as a live tripwire."""
+    from repro.store import summaries as summaries_mod
+    srv, centers = _clustered_server(mesh8, audit_every=1, seed=4)
+    real_route = summaries_mod.route_shards
+
+    def corrupt_route(summ, q, l_arr, slack):
+        mask = real_route(summ, q, l_arr, slack=slack)
+        out = np.zeros_like(mask)
+        out[:, 0] = True               # only shard 0, whatever the query
+        return out
+
+    try:
+        summaries_mod.route_shards = corrupt_route
+        rng = np.random.default_rng(5)
+        # queries near non-shard-0 clusters: the exact answer lives on a
+        # shard the corrupted router just dropped
+        for c in (3, 5, 7):
+            qs = (centers[c] + rng.normal(size=(2, DIM))) \
+                .astype(np.float32)
+            srv.query_batch(qs, [4, 4])
+    finally:
+        summaries_mod.route_shards = real_route
+    snap = srv.obs_snapshot()
+    assert snap["audit"]["shadow"]["checks"] >= 3
+    assert snap["audit"]["shadow"]["divergences"] >= 1
+    assert snap["audit"]["shadow"]["details"][0]["batch_id"] >= 0
+
+
+def test_racing_span_forest_well_formed(mesh8):
+    """The concurrency bar: a mutator thread and the background
+    maintenance worker race a traced server, and the ring still holds a
+    clean forest — no torn spans after quiesce, every tree
+    reassembles, request trees complete, and maintenance
+    plan/prepare/commit cycles interleave with query spans in the same
+    export."""
+    centers = np.random.default_rng(11).normal(scale=20.0, size=(16, DIM))
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(1, 2, 4),
+                         route="pruned", summary_pivots=2,
+                         use_sampling=False, max_wait_ms=2.0,
+                         placement="affinity", redeal="proximity",
+                         retighten_every=3, split_radius_factor=1.2,
+                         maintenance="background",
+                         store_capacity_per_shard=192, store_staging_size=64,
+                         obs_trace=True, obs_audit_every=3)
+    store = MutableStore(DIM, mesh=mesh8, axis_name="x",
+                         **cfg.store_kwargs())
+    srv = KnnServer(store=store, cfg=cfg)
+    rng = np.random.default_rng(12)
+
+    def draw(n, c=None):
+        c = int(rng.integers(0, len(centers))) if c is None else c
+        return (centers[c] + rng.normal(size=(n, DIM))).astype(np.float32)
+
+    store.insert(draw(40, 0))
+    store.insert(draw(40, 1))
+    store.flush()
+    srv.warmup()
+
+    errors = []
+
+    def mutator():
+        try:
+            for _ in range(10):
+                store.insert(draw(12))
+                store.flush()
+                live = store.live_arrays()[0]
+                if len(live) > 90:
+                    store.delete(np.random.default_rng(1)
+                                 .permutation(live)[:8])
+                    store.flush()
+                time.sleep(0.003)
+        except Exception as exc:     # surfaced below, not swallowed
+            errors.append(exc)
+
+    t = threading.Thread(target=mutator, daemon=True)
+    pending = []
+    with srv.serving():
+        t.start()
+        for wave in range(8):
+            for _ in range(3):
+                pending.append(srv.submit(draw(1)[0],
+                                          1 + wave % 4))
+            time.sleep(0.004)
+        t.join()
+        for f in pending:
+            f.result(timeout=120)
+    store.close()
+    assert not errors, errors
+
+    assert srv.obs.tracer.active_count() == 0, "torn spans after quiesce"
+    recs = srv.obs.tracer.spans()
+    trees = build_trees(recs)
+    names = {r["name"] for r in recs}
+    assert {"request", "queued", "serve", "dispatch", "snapshot",
+            "kernel", "resolve", "store.apply"} <= names
+    ws = store.maintenance_stats()["worker"]
+    assert ws["errors"] == 0
+    assert ws["commits"] > 0
+    assert {"maint.cycle", "maint.prepare", "maint.commit"} <= names
+    kids = {}
+    for r in recs:
+        if r["parent"] is not None:
+            kids.setdefault(r["parent"], set()).add(r["name"])
+    requests = [r for r in recs if r["name"] == "request"]
+    assert len(requests) == len(pending)
+    assert all(kids[r["span"]] == {"queued", "serve"} for r in requests)
+    assert len(trees) >= len(requests)
+    snap = srv.obs_snapshot()
+    assert snap["audit"]["contract"]["violations"] == 0
+    assert snap["audit"]["shadow"]["checks"] >= 1
+    assert snap["audit"]["shadow"]["divergences"] == 0
+
+
+def test_instrumentation_overhead_within_budget(mesh8):
+    """Tracing + contract auditing must cost <= 10% of obs-off
+    throughput on the smoke workload (DESIGN.md §12 budget).  The arms
+    run the identical seeded load *interleaved* (back-to-back arms
+    confound the recorder's microseconds with scheduler drift), and
+    min-of-7 per arm damps the remaining noise."""
+    servers = {}
+    for obs_trace in (False, True):
+        srv, centers = _clustered_server(mesh8, obs_trace=obs_trace,
+                                         seed=6)
+        servers[obs_trace] = srv
+    rng = np.random.default_rng(7)
+    qs_waves = [(centers[w % 8] + rng.normal(size=(4, DIM)))
+                .astype(np.float32) for w in range(6)]
+
+    def one_pass(srv):
+        t0 = time.perf_counter()
+        for qs in qs_waves:
+            srv.query_batch(qs, [4] * 4)
+        return time.perf_counter() - t0
+
+    for srv in servers.values():       # warm the whole path, both arms
+        one_pass(srv)
+    best = {False: math.inf, True: math.inf}
+    for _ in range(7):
+        for obs_trace, srv in servers.items():
+            best[obs_trace] = min(best[obs_trace], one_pass(srv))
+    overhead = (best[True] - best[False]) / best[False]
+    assert overhead <= 0.10, f"obs overhead {overhead:.1%} > 10%"
