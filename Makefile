@@ -12,17 +12,23 @@ test:
 	$(PYTHONPATH_PREFIX) python -m pytest -x -q
 
 # coverage gate for the query-path packages (ci.yml coverage job):
-# store (mutable/compaction/summaries/placement/adaptive) and core
-# (Algorithms 1 & 2) must stay above the floor so the routing,
-# placement, and adaptive-maintenance paths can't silently rot untested.
+# store (mutable/compaction/summaries/placement/adaptive — and, since
+# ISSUE 8, the in-shard bucket index in store/index.py, exercised by
+# tests/test_index.py) and core (Algorithms 1 & 2) must stay above the
+# floor so the routing, placement, adaptive-maintenance, and approx-
+# index paths can't silently rot untested.  The job runs the full
+# suite, so the ISSUE-8 regression tests ride in it too: the
+# empty-histogram snapshot oracle (tests/test_obs.py) and the
+# shards_touched=-1 sentinel guards (tests/test_knn_server.py).
 test-cov:
 	$(PYTHONPATH_PREFIX) python -m pytest -q \
 		--cov=repro.store --cov=repro.core \
 		--cov-report=term-missing --cov-fail-under=85
 
 # thread-sanity gate (ci.yml thread-sanity job): the concurrency suites
-# — background-maintenance harness, stop()-drain contract, ServerStats
-# hammer, device-routing parity — run 3x under a faulthandler timeout,
+# — background-maintenance harness (including the racing search="approx"
+# recall-floor race), stop()-drain contract, ServerStats hammer,
+# device-routing parity — run 3x under a faulthandler timeout,
 # so a rare-interleaving deadlock dumps every thread's stack instead of
 # hanging CI silently.
 test-threads:
@@ -52,6 +58,11 @@ bench-serve:
 # section is the quiet-vs-ingest serve-latency A/B over a
 # maintenance="background" store with device-side routing — it
 # hard-asserts that a background re-tighten AND split fired mid-run.
+# bench_serve's index section runs the search="approx" A/B on the
+# clustered and drifting workloads with the recall floor and the 3x
+# candidate-reduction target hard-asserted inline (store/index.py),
+# then check_obs.py re-asserts the contract from the JSON artifact —
+# a recall-floor violation fails this target on every push.
 bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \
@@ -60,13 +71,17 @@ bench-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_ingest.py --smoke \
 		--out /tmp/BENCH_ingest_smoke.json
+	$(PYTHONPATH_PREFIX):. python benchmarks/check_obs.py \
+		--bench /tmp/BENCH_serve_smoke.json \
+		--trace /tmp/BENCH_trace_smoke.jsonl
 
 # Observability gate (ci.yml obs-smoke step): run the smoke bench with
 # the flight recorder + both auditors on, then validate the artifacts —
 # zero Theorem-1 contract violations, zero shadow-exact divergences
 # (with both auditors demonstrably active), and a well-formed span
 # export containing a complete routed-query tree racing a committed
-# maintenance cycle (benchmarks/check_obs.py).
+# maintenance cycle (benchmarks/check_obs.py); check_obs also re-asserts
+# the index section's search="approx" recall floor + 3x reduction.
 obs-smoke:
 	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 	$(PYTHONPATH_PREFIX):. python benchmarks/bench_serve.py --smoke \

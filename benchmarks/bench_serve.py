@@ -26,9 +26,16 @@ until the next compaction.  A fifth section exercises the observability
 plane (src/repro/obs/): audited serving with tracing + contract +
 shadow-exact checks on, the exported flight-recorder trace
 (``--trace-out``), and the instrumented-vs-off overhead A/B — the
-``obs`` block of the JSON.  Emits CSV rows like every other bench module
-plus ``BENCH_serve.json`` with sustained queries/sec, p50/p99 request
-latency, and mean rounds/messages/shards_touched per configuration.
+``obs`` block of the JSON.  A sixth section runs the in-shard index A/B
+(store/index.py, DESIGN.md §13): ``search="exact"`` vs ``search="approx"``
+over identical points and an identical query stream, on the clustered
+AND the drifting workloads, with the recall floor and the >=3x
+candidate-reduction target *hard-asserted* (ISSUE 8 acceptance) — the
+``index`` block of the JSON, re-checked offline by
+``benchmarks/check_obs.py``.  Emits CSV rows like every other bench
+module plus ``BENCH_serve.json`` with sustained queries/sec, p50/p99
+request latency, and mean rounds/messages/shards_touched per
+configuration.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
@@ -485,6 +492,154 @@ def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
     return section
 
 
+def _index_ab(srv_exact, srv_approx, centers, bursts: int) -> dict:
+    """One exact-vs-approx arm: drive both servers under the identical
+    closed-loop load (throughput/latency numbers), then sweep the *same*
+    queries through both and measure recall@l of the approx answers
+    against the exact twin's — the exact arm IS the ground truth, so no
+    separate oracle pass is needed.  Candidate reduction is read off the
+    approx server's ``serve.candidate_fraction`` histogram (observed by
+    every dispatch, no device readback)."""
+    sentinel = 2 ** 31 - 1
+    entry = {"exact": _drive(srv_exact, np.random.default_rng(47),
+                             bursts, centers=centers),
+             "approx": _drive(srv_approx, np.random.default_rng(47),
+                              bursts, centers=centers)}
+    rng = np.random.default_rng(53)
+    recalls = []
+    for burst in range(max(bursts, 6)):
+        bs = [1, 3, 8, 5][burst % 4]
+        qs = (centers[int(rng.integers(0, len(centers)))]
+              + rng.normal(size=(bs, DIM))).astype(np.float32)
+        ls = [L_MIX[(burst + j) % len(L_MIX)] for j in range(bs)]
+        for re_, ra in zip(srv_exact.query_batch(qs, ls),
+                           srv_approx.query_batch(qs, ls)):
+            assert re_.recall_mode == "exact"
+            assert ra.recall_mode == "approx"
+            truth = set(re_.ids[re_.ids != sentinel].tolist())
+            if truth:
+                recalls.append(len(truth & set(ra.ids.tolist()))
+                               / len(truth))
+    snap = srv_approx.obs_snapshot()
+    cf = snap["metrics"]["serve.candidate_fraction"]
+    shadow = snap["audit"]["shadow"]
+    entry.update({
+        "recall_count": len(recalls),
+        "recall_min": float(min(recalls)),
+        "recall_mean": float(np.mean(recalls)),
+        "candidate_fraction_mean": cf["mean"],
+        "candidate_reduction": 1.0 / max(cf["mean"], 1e-9),
+        "shadow": {"mode": shadow["mode"], "floor": shadow.get("floor"),
+                   "checks": shadow["checks"],
+                   "divergences": shadow["divergences"],
+                   "recall": shadow.get("recall")},
+    })
+    return entry
+
+
+def _index_section(bursts: int, per_shard: int, per_step: int, steps: int,
+                   window: int, emit) -> dict:
+    """In-shard index A/B (store/index.py, DESIGN.md §13) — the section
+    that *enforces* the approximation's measured contract instead of
+    merely reporting it.
+
+    Two arms, each ``search="exact"`` vs ``search="approx"`` over the
+    identical points and query stream:
+
+    * **clustered** — the static cluster-contiguous layout routing
+      already prunes to ~1 shard; the bucket index must now prune
+      *within* the shard.  Hard gates (ISSUE 8 acceptance): measured
+      recall@l >= the configured floor AND candidate reduction >= 3x
+      (mean candidate fraction <= 1/3).
+    * **drifting** — the adaptive-maintenance workload: a drifting
+      cluster stream under sliding-window churn into a mutable store,
+      the index maintained *incrementally* across flush generations (no
+      compaction rebuild to the rescue).  The recall floor is enforced
+      here too — the keep rule stays sound under ball inflation — but
+      the reduction is reported, not gated: drift legitimately inflates
+      balls (less pruning) until maintenance catches up.
+
+    Both approx arms run the shadow auditor in ``mode="recall"``
+    (obs_audit_every=4), so the live audit measures the same contract
+    the offline sweep does; ``benchmarks/check_obs.py`` re-asserts all
+    of it from the JSON artifact.
+    """
+    from repro.data import drifting_clusters, sharded_clusters
+    from repro.runtime import KnnServer
+    from repro.store import MutableStore
+    k = common.K_MACHINES
+    buckets = 8
+    cfg = CONFIG.replace(dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+                         sampler="selection", route="pruned")
+    acfg = cfg.replace(search="approx", index_buckets=buckets,
+                       obs_audit_every=4)
+    section = {"per_shard": per_shard, "index_buckets": buckets,
+               "index_oversample": acfg.index_oversample,
+               "recall_floor": acfg.recall_floor}
+
+    # clustered arm: static layout, one cluster per shard
+    pts, centers = sharded_clusters(k, per_shard, DIM, seed=43)
+    se = KnnServer(pts, cfg=cfg, mesh=common.kmachine_mesh(),
+                   axis_name="x")
+    sa = KnnServer(pts, cfg=acfg, mesh=common.kmachine_mesh(),
+                   axis_name="x")
+    se.warmup()
+    sa.warmup()
+    arm = _index_ab(se, sa, centers, bursts)
+    section["clustered"] = arm
+    assert arm["recall_min"] >= acfg.recall_floor, (
+        f"clustered recall@l {arm['recall_min']:.3f} below the "
+        f"{acfg.recall_floor} floor")
+    assert arm["candidate_reduction"] >= 3.0, (
+        f"clustered candidate reduction {arm['candidate_reduction']:.2f}x "
+        f"below the 3x target")
+    assert arm["shadow"]["divergences"] == 0, arm["shadow"]
+    emit(common.row(
+        "serve_index_clustered_approx", 1e6 / arm["approx"]["qps"],
+        f"recall_min={arm['recall_min']:.3f} "
+        f"cand_frac={arm['candidate_fraction_mean']:.3f} "
+        f"reduction={arm['candidate_reduction']:.1f}x "
+        f"qps_exact={arm['exact']['qps']:.1f} "
+        f"qps_approx={arm['approx']['qps']:.1f}"))
+
+    # drifting arm: mutable store, index maintained across generations;
+    # both servers share the store, so the live set is identical by
+    # construction (an exact-search server on an indexed store simply
+    # ignores the index)
+    stream = list(drifting_clusters(k, per_step, DIM, steps=steps,
+                                    drift=8.0, seed=59))
+    pts_steps = [p for p, _ in stream]
+    final_centers = stream[-1][1]
+    cap = (steps + 2) * per_step
+    staging = max(32, per_step)
+    dcfg = acfg.replace(placement="affinity", redeal="proximity",
+                        retighten_every=4, summary_pivots=2,
+                        store_capacity_per_shard=cap,
+                        store_staging_size=staging)
+    store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
+                         **dcfg.store_kwargs())
+    _stream_drift(store, pts_steps, window, staging)
+    se_d = KnnServer(store=store, cfg=dcfg.replace(search="exact"))
+    sa_d = KnnServer(store=store, cfg=dcfg)
+    se_d.warmup()
+    sa_d.warmup()
+    arm_d = _index_ab(se_d, sa_d, final_centers, bursts)
+    arm_d.update({"per_step": per_step, "steps": steps, "window": window})
+    section["drifting"] = arm_d
+    assert arm_d["recall_min"] >= acfg.recall_floor, (
+        f"drifting recall@l {arm_d['recall_min']:.3f} below the "
+        f"{acfg.recall_floor} floor")
+    assert arm_d["shadow"]["divergences"] == 0, arm_d["shadow"]
+    emit(common.row(
+        "serve_index_drifting_approx", 1e6 / arm_d["approx"]["qps"],
+        f"recall_min={arm_d['recall_min']:.3f} "
+        f"cand_frac={arm_d['candidate_fraction_mean']:.3f} "
+        f"reduction={arm_d['candidate_reduction']:.1f}x "
+        f"qps_exact={arm_d['exact']['qps']:.1f} "
+        f"qps_approx={arm_d['approx']['qps']:.1f}"))
+    return section
+
+
 def _drive(srv, rng, bursts: int, centers=None) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
@@ -593,6 +748,16 @@ def run(emit=print, out_path=None, smoke: bool = False,
     report["obs"] = _obs_section(
         bursts, per_shard=64 if smoke else 512, emit=emit,
         trace_out=trace_out)
+    # in-shard index A/B (store/index.py): exact vs approx on the
+    # clustered and drifting workloads, recall floor + 3x candidate
+    # reduction hard-asserted (ISSUE 8 acceptance)
+    report["index"] = _index_section(
+        bursts,
+        per_shard=128 if smoke else 1024,
+        per_step=24 if smoke else 96,
+        steps=6 if smoke else 12,
+        window=2 if smoke else 4,
+        emit=emit)
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

@@ -1,11 +1,15 @@
 """CI gate for the observability plane (make obs-smoke).
 
 Validates the artifacts a ``bench_serve.py --smoke`` run just emitted —
-the ``obs`` section of the BENCH JSON and the flight-recorder JSONL —
-against the PR's acceptance bar:
+the ``obs`` and ``index`` sections of the BENCH JSON and the
+flight-recorder JSONL — against the PR's acceptance bar:
 
   * zero Theorem-1 contract violations and zero shadow-exact divergences,
     with both auditors demonstrably *active* (checks > 0);
+  * the ``search="approx"`` contract (ISSUE 8): on both index A/B arms
+    (clustered and drifting) measured recall@l stays at/above the
+    configured floor with the recall-mode shadow auditor active and
+    clean, and the clustered arm achieves >= 3x candidate reduction;
   * the span export parses, reassembles into well-formed trees
     (``repro.obs.trace.build_trees`` — no torn, orphaned, or
     time-inverted spans), and contains at least one *complete* routed
@@ -63,6 +67,43 @@ def check_bench(path: str) -> dict:
     return obs
 
 
+def check_index(path: str):
+    """The ``search="approx"`` recall contract, re-asserted from the
+    JSON artifact (the bench also asserts inline; this gate catches a
+    report produced by an older script or a hand-edited artifact)."""
+    with open(path) as f:
+        report = json.load(f)
+    idx = report.get("index")
+    if not idx:
+        fail(f"{path} has no 'index' section")
+    floor = idx["recall_floor"]
+    for arm_name in ("clustered", "drifting"):
+        arm = idx.get(arm_name)
+        if not arm:
+            fail(f"index section missing the {arm_name!r} arm")
+        if arm["recall_count"] <= 0:
+            fail(f"index/{arm_name}: recall never measured")
+        if arm["recall_min"] < floor:
+            fail(f"index/{arm_name}: recall@l {arm['recall_min']:.3f} "
+                 f"below the {floor} floor")
+        shadow = arm["shadow"]
+        if shadow["mode"] != "recall":
+            fail(f"index/{arm_name}: shadow auditor not in recall mode")
+        if shadow["checks"] <= 0:
+            fail(f"index/{arm_name}: recall shadow auditor never ran")
+        if shadow["divergences"] != 0:
+            fail(f"index/{arm_name}: {shadow['divergences']} recall-floor "
+                 f"violations flagged by the shadow auditor")
+    if idx["clustered"]["candidate_reduction"] < 3.0:
+        fail(f"index/clustered: candidate reduction "
+             f"{idx['clustered']['candidate_reduction']:.2f}x below 3x")
+    print(f"check_obs: index ok — clustered recall_min "
+          f"{idx['clustered']['recall_min']:.3f} at "
+          f"{idx['clustered']['candidate_reduction']:.1f}x reduction, "
+          f"drifting recall_min {idx['drifting']['recall_min']:.3f} "
+          f"(floor {floor})")
+
+
 def check_trace(path: str):
     records = []
     with open(path) as f:
@@ -117,6 +158,7 @@ def main():
     ap.add_argument("--trace", default="/tmp/BENCH_trace_smoke.jsonl")
     args = ap.parse_args()
     check_bench(args.bench)
+    check_index(args.bench)
     check_trace(args.trace)
     print("check_obs: PASS")
 

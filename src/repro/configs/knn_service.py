@@ -131,6 +131,28 @@ class KnnServiceConfig:
     # snapshot.  Answers are bit-identical either way at every
     # generation (tests/test_async_maintenance.py).
     maintenance: str = "inline"
+    # ---- in-shard approximate search index (store/index.py) --------------
+    # "exact" (default) brute-forces every live slot of every touched
+    # shard — answers bit-identical to the paper's collective.  "approx"
+    # adds the per-shard bucket index: a query prologue keeps only the
+    # covering-ball buckets whose lower bound can still hold a top-l
+    # winner and masks the rest of the slots, trading exactness for a
+    # measured recall contract (recall_floor, audited by the shadow
+    # replay and hard-asserted by bench_serve's "index" section).
+    search: str = "exact"
+    # Covering-ball buckets per shard (store/index.py); store-backed
+    # approx servers must match the store's index_buckets, like the
+    # summary knobs.  Ignored under search="exact".
+    index_buckets: int = 8
+    # Candidate oversampling: the bucket keep rule targets
+    # max(l, ceil(index_oversample · l)) cumulative live points before
+    # it stops keeping buckets.  Larger = higher recall, more
+    # candidates; large enough that the target is never reached keeps
+    # every bucket (bit-identical to exact).
+    index_oversample: float = 2.0
+    # The serving recall contract: the shadow-exact audit flags any
+    # approx batch whose measured recall@l drops below this floor.
+    recall_floor: float = 0.95
 
     # ---- observability plane (src/repro/obs/) ---------------------------
     # Flight-recorder tracing: when on, the server records spans for the
@@ -174,7 +196,9 @@ class KnnServiceConfig:
             summary_pivots=self.summary_pivots,
             retighten_every=self.retighten_every,
             split_radius_factor=self.split_radius_factor,
-            maintenance=self.maintenance)
+            maintenance=self.maintenance,
+            index_buckets=self.index_buckets if self.search == "approx"
+            else 0)
 
 
 CONFIG = KnnServiceConfig()

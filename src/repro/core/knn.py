@@ -158,10 +158,22 @@ def _apply_shard_routing(point_valid, shard_active, m):
     return point_valid & flag
 
 
+def _fold_candidates(point_valid, point_candidates):
+    """Fold the ``search="approx"`` bucket-candidate mask into the point
+    mask (store/index.py): a non-candidate competes as the paper's +inf
+    fake point, exactly like a tombstone or a routed-away shard.  Unlike
+    those two, candidate pruning is NOT exact — the caller opts in to a
+    measured recall contract (DESIGN.md §13)."""
+    if point_candidates is None:
+        return point_valid
+    pc = point_candidates.astype(jnp.bool_)
+    return pc if point_valid is None else point_valid & pc
+
+
 def _knn_pipeline(
     points, point_ids, queries, l_buf, l_run, key, *,
     axis_name, distances_fn, use_sampling, num_pivots, gather_results,
-    point_valid=None, shard_active=None,
+    point_valid=None, shard_active=None, point_candidates=None,
 ) -> KnnResult:
     """Shared Algorithm 2 body.
 
@@ -177,10 +189,13 @@ def _knn_pipeline(
     indistinguishable from the paper's fake sentinel points — they are
     never sampled as survivors, never selected, never gathered.
     ``shard_active`` (optional) is the pruned-routing whole-shard flag
-    (:func:`_apply_shard_routing`).
+    (:func:`_apply_shard_routing`); ``point_candidates`` ((m,) bool,
+    optional) is the approximate in-shard candidate mask
+    (:func:`_fold_candidates`).
     """
     point_valid = _apply_shard_routing(point_valid, shard_active,
                                        points.shape[0])
+    point_valid = _fold_candidates(point_valid, point_candidates)
     d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l_buf)               # (B, l_buf)
 
@@ -219,6 +234,7 @@ def knn_query(
     gather_results: bool = True,
     point_valid: jax.Array | None = None,
     shard_active: jax.Array | None = None,
+    point_candidates: jax.Array | None = None,
 ) -> KnnResult:
     """Full Algorithm 2 inside a shard_map context.
 
@@ -234,7 +250,8 @@ def knn_query(
         points, point_ids, queries, l, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
-        point_valid=point_valid, shard_active=shard_active)
+        point_valid=point_valid, shard_active=shard_active,
+        point_candidates=point_candidates)
 
 
 def knn_query_batched(
@@ -252,6 +269,7 @@ def knn_query_batched(
     gather_results: bool = True,
     point_valid: jax.Array | None = None,
     shard_active: jax.Array | None = None,
+    point_candidates: jax.Array | None = None,
 ) -> KnnResult:
     """Algorithm 2 with a *per-request* neighbor count — the serving form.
 
@@ -276,7 +294,8 @@ def knn_query_batched(
         points, point_ids, queries, l_max, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
-        point_valid=point_valid, shard_active=shard_active)
+        point_valid=point_valid, shard_active=shard_active,
+        point_candidates=point_candidates)
 
 
 def knn_simple(
@@ -289,6 +308,7 @@ def knn_simple(
     distances_fn=squared_l2_distances,
     point_valid: jax.Array | None = None,
     shard_active: jax.Array | None = None,
+    point_candidates: jax.Array | None = None,
 ):
     """The paper's baseline "simple method" (Section 3).
 
@@ -302,6 +322,7 @@ def knn_simple(
     """
     point_valid = _apply_shard_routing(point_valid, shard_active,
                                        points.shape[0])
+    point_valid = _fold_candidates(point_valid, point_candidates)
     d_full = _masked_distances(distances_fn, queries, points, point_valid)
     d, gid = local_top_l(d_full, point_ids, l)
     gd = lax.all_gather(d, axis_name)                            # (k, B, l)

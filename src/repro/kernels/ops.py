@@ -299,3 +299,55 @@ def route_mask(queries, ls, packed, *, slack=1e-4):
                             slack=slack, block_b=_routing.DEFAULT_BLOCK_B,
                             interpret=mode == "interpret")
     return out != 0
+
+
+@functools.partial(jax.jit, static_argnames=("oversample",))
+def _index_ref_jit(q, ls2, rows, *packed, oversample):
+    return _routing.index_mask_ref(q, ls2, rows, *packed,
+                                   oversample=oversample)
+
+
+@functools.partial(jax.jit, static_argnames=("oversample", "block_b",
+                                             "interpret"))
+def _index_padded(q, ls2, rows, *packed, oversample, block_b, interpret):
+    B = q.shape[0]
+    qp = _pad_to(q, block_b, 0, 0.0)
+    lp = _pad_to(ls2, block_b, 0, 0)      # padding rows keep no bucket
+    rp = _pad_to(rows, block_b, 0, 0)
+    out = _routing.index_mask(qp, lp, rp, *packed, oversample=oversample,
+                              block_b=block_b, interpret=interpret)
+    return out[:B]
+
+
+def index_mask(queries, ls, rows, packed, *, oversample=2.0):
+    """(B, k·b) bool bucket-keep mask — the search="approx" in-shard
+    candidate decision on device (see kernels/routing.py and
+    store/index.py).
+
+    ``rows`` is the (B, k) routing keep mask (bool or int32; all-ones
+    under route="exact"); ``packed`` is the tuple from
+    ``routing.pack_index`` (one pack per store generation; the server
+    caches it).  Traceable — the service executable calls this right
+    after ``route_mask`` in its prologue.  Mode routing mirrors
+    route_mask: oracle and Mosaic-hostile shapes take the shared jnp
+    core (still fused device-side); only lane-aligned shapes pay a
+    pallas_call.
+    """
+    mode = _mode()
+    q = jnp.asarray(queries, jnp.float32)
+    ls2 = jnp.asarray(ls, jnp.int32).reshape(-1, 1)
+    rows2 = jnp.asarray(rows, jnp.int32)
+    dim_real = q.shape[1]
+    kb = packed[1].shape[1]
+    if mode != "interpret" and (mode == "oracle"
+                                or dim_real % 128 or kb % 128):
+        _count_fallback("index_mask",
+                        "mode_oracle" if mode == "oracle" else "unaligned")
+        out = _index_ref_jit(q, ls2, rows2, *packed,
+                             oversample=float(oversample))
+    else:
+        out = _index_padded(q, ls2, rows2, *packed,
+                            oversample=float(oversample),
+                            block_b=_routing.DEFAULT_BLOCK_B,
+                            interpret=mode == "interpret")
+    return out != 0

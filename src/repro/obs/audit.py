@@ -36,6 +36,10 @@ through the same executable with the all-shards-active mask — the exact
 collective at the same generation, same key — and any byte divergence
 in dists/ids is counted and detailed.  Sampling keeps the cost at
 1/N extra datastore passes; N comes from the ``obs_audit_every`` knob.
+Under ``search="approx"`` (DESIGN.md Section 13) bit-identity is no
+longer the contract — the auditor's ``mode="recall"`` instead measures
+recall@l of the served answer against the exact replay and flags any
+batch whose minimum row recall dips below the configured floor.
 
 Zero-dependency: stdlib only (answers are compared through
 ``.tobytes()``, which any array provides).
@@ -116,16 +120,40 @@ class ContractAuditor:
 
 
 class ShadowAuditor:
-    """Sampled exact-replay byte-divergence check for routed answers."""
+    """Sampled exact-replay check for routed/indexed answers.
 
-    def __init__(self, registry: MetricsRegistry, *, every: int):
+    Two comparison modes, matching the serving contract being audited:
+
+    * ``mode="bytes"`` (default) — the pruned-routing invariant: served
+      dists/ids must be *byte-identical* to the exact collective replay.
+      Any divergence counts.
+    * ``mode="recall"`` — the ``search="approx"`` contract: the bucket
+      index is allowed to drop true neighbors, but measured recall@l
+      (per real row: the fraction of the exact replay's finite top-l ids
+      present in the served answer; rows with no finite exact ids are
+      vacuously 1.0, which makes padding rows harmless) must stay at or
+      above ``floor``.  A batch whose *minimum* row recall dips below
+      the floor counts as a divergence; the observed minimum also feeds
+      the ``audit.shadow.recall`` histogram so the snapshot reports the
+      measured contract, not just pass/fail.
+    """
+
+    def __init__(self, registry: MetricsRegistry, *, every: int,
+                 mode: str = "bytes", floor: float = 0.95):
         if every < 1:
             raise ValueError("every must be >= 1 (use None/off upstream)")
+        if mode not in ("bytes", "recall"):
+            raise ValueError(f"mode must be 'bytes' or 'recall', "
+                             f"got {mode!r}")
         self.every = int(every)
+        self.mode = mode
+        self.floor = float(floor)
         self._n = 0
         self._lock = threading.Lock()
         self._checks = registry.counter("audit.shadow.checks")
         self._divergences = registry.counter("audit.shadow.divergences")
+        self._recall = (registry.histogram("audit.shadow.recall")
+                        if mode == "recall" else None)
         self.details: list = []
 
     def due(self) -> bool:
@@ -140,12 +168,19 @@ class ShadowAuditor:
               exact_fn: Callable[[], tuple], *,
               generation: int = -1, batch_id: int = -1,
               touched: int = -1) -> bool:
-        """Replay through ``exact_fn`` (the all-shards-active executable
-        at the same generation/key) and compare bytes; returns True when
-        identical."""
+        """Replay through ``exact_fn`` (the all-shards-active,
+        all-candidates executable at the same generation/key) and
+        compare per ``mode``; returns True when the contract holds."""
         exact_d, exact_i = exact_fn()
-        ok = (served_dists.tobytes() == exact_d.tobytes()
-              and served_ids.tobytes() == exact_i.tobytes())
+        detail = {}
+        if self.mode == "bytes":
+            ok = (served_dists.tobytes() == exact_d.tobytes()
+                  and served_ids.tobytes() == exact_i.tobytes())
+        else:
+            min_recall = self._min_recall(served_ids, exact_i)
+            self._recall.observe(min_recall)
+            ok = min_recall >= self.floor
+            detail["min_recall"] = min_recall
         self._checks.inc()
         if not ok:
             self._divergences.inc()
@@ -155,12 +190,35 @@ class ShadowAuditor:
                 self.details.append({
                     "generation": int(generation),
                     "batch_id": int(batch_id),
-                    "touched": int(touched)})
+                    "touched": int(touched), **detail})
         return ok
+
+    @staticmethod
+    def _min_recall(served_ids, exact_ids) -> float:
+        """Minimum per-row recall@l of the served answer against the
+        exact replay.  Pure python over small (B, l) id buffers — this
+        module stays numpy-free.  Sentinel ids (anything the exact
+        replay reports that is also sentinel in the served row) are the
+        INT32_MAX no-point markers both paths emit past rank l or past
+        the finite point count; only the exact replay's *finite* ids
+        constitute ground truth."""
+        sentinel = 2**31 - 1
+        worst = 1.0
+        for srow, erow in zip(served_ids.tolist(), exact_ids.tolist()):
+            truth = {v for v in erow if v != sentinel}
+            if not truth:
+                continue                    # padding / empty row: vacuous
+            got = len(truth.intersection(srow))
+            worst = min(worst, got / len(truth))
+        return worst
 
     def snapshot(self) -> dict:
         with self._lock:
-            return {"every": self.every,
+            snap = {"every": self.every, "mode": self.mode,
                     "checks": self._checks.snapshot(),
                     "divergences": self._divergences.snapshot(),
                     "details": list(self.details)}
+            if self.mode == "recall":
+                snap["floor"] = self.floor
+                snap["recall"] = self._recall.snapshot()
+            return snap

@@ -101,7 +101,10 @@ class Histogram:
     def quantile(self, q: float) -> float:
         """Approximate q-quantile (0 <= q <= 1) of everything observed,
         within one bucket width (~2.2% relative) of the exact order
-        statistic; NaN when empty."""
+        statistic.  An empty histogram returns NaN *explicitly* — not
+        the ``min``/``max`` seeds (+inf/-inf), which must never leak to
+        a reader (tests/test_obs.py pins this and the q=0.0/q=1.0
+        nearest-rank edges against a sorted oracle)."""
         with self._lock:
             return self._quantile_locked(q)
 
@@ -124,7 +127,14 @@ class Histogram:
     def snapshot(self) -> dict:
         with self._lock:
             if self.count == 0:
-                return {"count": 0}
+                # Full-key payload even when empty: readers (bench
+                # reports, check_obs gates) index ["p99"]/["mean"]
+                # unconditionally, and the internal min/max seeds
+                # (+inf/-inf) must not escape as observed values.
+                return {"count": 0, "sum": 0.0, "mean": 0.0,
+                        "min": 0.0, "max": 0.0,
+                        "p50": math.nan, "p90": math.nan,
+                        "p99": math.nan}
             return {
                 "count": self.count,
                 "sum": self.total,

@@ -67,6 +67,24 @@ jitted program as the shard_map query — the touched-shard mask returns
 with the batch instead of costing a separate O(B·k·(dim+r)) host numpy
 pass per dispatch.  Answers stay bit-identical (tests/test_routing.py
 proves mask parity against the host router; DESIGN.md Section 11).
+
+With ``cfg.search="approx"`` the dispatch prologue additionally consults
+the per-shard covering-ball bucket index (store/index.py, frozen
+generation-coupled with the snapshot — ``serving_snapshot()`` hands out
+all three from one lock acquisition): buckets whose distance lower bound
+cannot beat the batch's cumulative-live threshold are dropped, and their
+slots enter the fused kernel as non-candidates (core/knn.py
+``point_candidates`` — masked exactly like tombstones).  This trades the
+repo's bit-identical invariant for a *measured* recall contract: every
+answer is tagged ``recall_mode="approx"``, the realized candidate
+fraction feeds the ``serve.candidate_fraction`` histogram, and the
+shadow auditor (mode="recall") replays sampled batches through the
+exact collective to measure recall@l against ``cfg.recall_floor``
+(DESIGN.md Section 13).  Under ``route_compute="device"`` the bucket
+decision runs as the second stage of the same Pallas prologue
+(kernels/routing.index_mask), so the candidate mask also rides the
+batch's own launch.  benchmarks/bench_serve.py runs the exact-vs-approx
+A/B and hard-asserts the recall floor at the candidate-reduction target.
 """
 
 from __future__ import annotations
@@ -89,6 +107,7 @@ from repro.kernels import routing as routing_mod
 from repro.obs import ContractAuditor, ObsPlane, ShadowAuditor
 from repro.obs.metrics import default_registry
 from repro.parallel.compat import make_mesh, shard_map
+from repro.store import index as index_mod
 from repro.store import summaries as summaries_mod
 
 _ID_SENTINEL = 2**31 - 1
@@ -122,6 +141,13 @@ class QueryResult(NamedTuple):
     candidates, so in the k-machine model they send nothing — the
     ``messages`` bill charges ``shards_touched - 1`` peers per round
     instead of ``k - 1``.
+
+    ``recall_mode`` tags the answer's exactness contract: ``"exact"``
+    (the default) means the true top-l, bit-identical to the paper's
+    collective regardless of routing; ``"approx"`` means the answer went
+    through the per-shard bucket index (``cfg.search``, store/index.py)
+    and carries the measured recall contract (``cfg.recall_floor``,
+    shadow-audited) instead.
     """
 
     dists: np.ndarray
@@ -137,6 +163,7 @@ class QueryResult(NamedTuple):
     latency_s: float       # enqueue -> result
     generation: int = 0    # store epoch the answer was computed against
     shards_touched: int = -1   # carrying batch's touched-shard count
+    recall_mode: str = "exact"   # "exact" | "approx" (bucket index used)
 
 
 @dataclasses.dataclass
@@ -160,6 +187,13 @@ class ServerStats:
     # KnnServer.placement_stats()'s prune rate.
     touched_shards: int = 0
     routed_batches: int = 0
+    # Defensive tally: QueryResult.shards_touched's -1 "never routed"
+    # sentinel must never be summed into the prune-rate inputs above —
+    # one leaked sentinel would silently *raise* the reported prune
+    # rate.  A negative ``touched`` is a caller bug; it is counted here
+    # instead of poisoning the math (tests/test_knn_server.py pins
+    # both routes).
+    invalid_touched: int = 0
     _lock: threading.Lock = dataclasses.field(
         default_factory=threading.Lock, repr=False, compare=False)
 
@@ -171,8 +205,11 @@ class ServerStats:
             self.padded_rows += bucket - n_real
             self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
             if touched is not None:
-                self.touched_shards += touched
-                self.routed_batches += 1
+                if touched < 0:
+                    self.invalid_touched += 1
+                else:
+                    self.touched_shards += touched
+                    self.routed_batches += 1
 
     def snapshot(self) -> dict:
         """One-lock-acquisition copy of every counter — the consistent
@@ -183,7 +220,8 @@ class ServerStats:
                     "padded_rows": self.padded_rows,
                     "bucket_counts": dict(self.bucket_counts),
                     "touched_shards": self.touched_shards,
-                    "routed_batches": self.routed_batches}
+                    "routed_batches": self.routed_batches,
+                    "invalid_touched": self.invalid_touched}
 
 
 @dataclasses.dataclass
@@ -239,6 +277,13 @@ class KnnServer:
         if cfg.route_compute not in ("host", "device"):
             raise ValueError(f"route_compute must be 'host' or 'device', "
                              f"got {cfg.route_compute!r}")
+        if cfg.search not in ("exact", "approx"):
+            raise ValueError(f"search must be 'exact' or 'approx', "
+                             f"got {cfg.search!r}")
+        if cfg.search == "approx" and cfg.index_buckets < 1:
+            raise ValueError(f"search='approx' needs index_buckets >= 1, "
+                             f"got {cfg.index_buckets}")
+        self._indexed = cfg.search == "approx"
         self._store = store
         if store is not None:
             if points is not None or values is not None:
@@ -304,6 +349,27 @@ class KnnServer:
                     f"/summary_pivots={cfg.summary_pivots}; "
                     f"configure the store, or match the config to it")
 
+        # search="approx" bucket index (store/index.py, DESIGN.md §13).
+        # Store-backed: the index is the *store's* — generation-coupled,
+        # captured per dispatch via serving_snapshot() — so a knob
+        # conflict fails loudly, like the routing sketch above.  Static:
+        # built once over the construction points, generation 0 forever.
+        self._index0 = None
+        if self._indexed:
+            if store is None:
+                idx = index_mod.IndexMaintainer(
+                    self.k, self.m_local, self.dim, cfg.index_buckets)
+                idx.rebuild(points, np.ones(len(points), bool))
+                self._index0 = idx.freeze(0)
+            elif store.index_buckets != cfg.index_buckets:
+                raise ValueError(
+                    f"search index mismatch: store was built with "
+                    f"index_buckets={store.index_buckets} (0 = no index "
+                    f"maintained) but cfg asks for "
+                    f"index_buckets={cfg.index_buckets}; construct the "
+                    f"store from cfg.store_kwargs(), or match the config "
+                    f"to it")
+
         # Pre-flight kernel-dispatch report, one row per bucket shape:
         # the routing (Pallas kernel / interpret / jnp oracle) of the
         # l2_distance step these executables run, plus fused
@@ -322,6 +388,7 @@ class KnnServer:
         # bounds (store/maintenance.py) and the cache must follow it.
         self._route_fn = None
         self._packed_cache = None
+        self._ipacked_cache = None
         if cfg.route == "pruned" and cfg.route_compute == "device":
             self._route_fn = self._build_device_router()
         self._base_key = jax.random.PRNGKey(seed)
@@ -357,11 +424,18 @@ class KnnServer:
             "rounds": reg.histogram("serve.rounds"),
             "messages": reg.histogram("serve.messages"),
             "touched": reg.histogram("serve.touched_shards"),
+            "cand_frac": reg.histogram("serve.candidate_fraction"),
             "errors": reg.counter("serve.dispatch_errors"),
         }
         self._contract = ContractAuditor(reg, k=self.k)
-        self._shadow = (ShadowAuditor(reg, every=cfg.obs_audit_every)
-                        if cfg.obs_audit_every > 0 else None)
+        # The shadow replay audits whichever contract this server
+        # serves: byte-identity for pruned exact routing, measured
+        # recall@l against the floor for the approximate index tier.
+        self._shadow = (ShadowAuditor(
+            reg, every=cfg.obs_audit_every,
+            mode="recall" if self._indexed else "bytes",
+            floor=cfg.recall_floor)
+            if cfg.obs_audit_every > 0 else None)
         self._env_by_bucket = dict(zip(cfg.bucket_sizes, self.envelopes))
 
     # ---- compiled dispatch ---------------------------------------------
@@ -391,23 +465,29 @@ class KnnServer:
         # each shard its own flag, which core/knn folds into the valid
         # mask ahead of the fused distance+top-l kernel.
         routed = cfg.route == "pruned"
+        # search="approx" adds one (n,) bool per-slot candidate operand —
+        # the bucket index's keep decision, folded into the same mask
+        # (core/knn point_candidates); P(axis) hands each shard its own
+        # slots.
+        indexed = self._indexed
 
         if cfg.sampler == "selection":
-            def body(pts, pids, pvalid, active, q, l_arr, key):
+            def body(pts, pids, pvalid, pcand, active, q, l_arr, key):
                 res = knn_mod.knn_query_batched(
                     pts, pids, q, l_max, l_arr, key, axis_name=axis,
                     distances_fn=distances_fn,
                     use_sampling=cfg.use_sampling,
                     num_pivots=cfg.num_pivots,
-                    point_valid=pvalid, shard_active=active)
+                    point_valid=pvalid, shard_active=active,
+                    point_candidates=pcand)
                 return (res.dists, res.ids, res.selection.iterations,
                         res.prune.survivors)
         elif cfg.sampler == "gather":
-            def body(pts, pids, pvalid, active, q, l_arr, key):
+            def body(pts, pids, pvalid, pcand, active, q, l_arr, key):
                 sd, si = knn_mod.knn_simple(
                     pts, pids, q, l_max, axis_name=axis,
                     distances_fn=distances_fn, point_valid=pvalid,
-                    shard_active=active)
+                    shard_active=active, point_candidates=pcand)
                 # per-request l: slots at rank >= l[b] are masked to the
                 # sentinel (knn_simple returns ascending order).
                 keep = jnp.arange(l_max)[None, :] < l_arr[:, None]
@@ -418,22 +498,22 @@ class KnnServer:
         else:
             raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
-        if masked and routed:
-            fn = body
-            in_specs = (P(axis), P(axis), P(axis), P(axis),
-                        P(None), P(None), P(None))
-        elif masked:
-            def fn(pts, pids, pvalid, q, l_arr, key):
-                return body(pts, pids, pvalid, None, q, l_arr, key)
-            in_specs = (P(axis), P(axis), P(axis), P(None), P(None), P(None))
-        elif routed:
-            def fn(pts, pids, active, q, l_arr, key):
-                return body(pts, pids, None, active, q, l_arr, key)
-            in_specs = (P(axis), P(axis), P(axis), P(None), P(None), P(None))
-        else:
-            def fn(pts, pids, q, l_arr, key):
-                return body(pts, pids, None, None, q, l_arr, key)
-            in_specs = (P(axis), P(axis), P(None), P(None), P(None))
+        # Operand layout composes by flag, always in this order:
+        #   pts, pids, [pvalid], [pcand], [active], q, l_arr, key
+        # — every present optional operand is sharded P(axis).  The
+        # dispatch/warmup/replay sites assemble operands in the same
+        # order from the same flags.
+        def fn(*a):
+            it = iter(a)
+            pts, pids = next(it), next(it)
+            pvalid = next(it) if masked else None
+            pcand = next(it) if indexed else None
+            active = next(it) if routed else None
+            q, l_arr, key = next(it), next(it), next(it)
+            return body(pts, pids, pvalid, pcand, active, q, l_arr, key)
+
+        n_sharded = 2 + int(masked) + int(indexed) + int(routed)
+        in_specs = (P(axis),) * n_sharded + (P(None), P(None), P(None))
 
         return jax.jit(shard_map(
             fn, mesh=self.mesh, in_specs=in_specs,
@@ -451,17 +531,44 @@ class KnnServer:
         rides the launch home with the answers, replacing the host
         numpy ``summaries.route_shards`` pass per dispatch.  Nested jit
         inlines, so the whole thing is one cached executable per bucket.
+
+        With ``search="approx"`` the prologue grows its second stage:
+        the per-row shard keep feeds ``kops.index_mask`` (the bucket-
+        granular threshold kernel), the batch-union bucket keep is
+        decoded to the (n,) per-slot candidate operand through the
+        cached ``colidx``/``has`` maps (``_index_ops_for``), and the
+        bucket keep comes home as a sixth output so the dispatcher can
+        report the candidate fraction from the index's own live counts
+        without a device readback.
         """
         inner = self._fn
         slack = self.cfg.route_slack
 
-        def routed(operands, packed, q, l_arr, key):
+        if not self._indexed:
+            def routed(operands, packed, q, l_arr, key):
+                rows = kops.route_mask(q, l_arr, packed, slack=slack)
+                active = jnp.any(rows, axis=0)
+                d, i, iters, surv = inner(*operands, active, q, l_arr,
+                                          key)
+                return d, i, iters, surv, active
+
+            return jax.jit(routed)
+
+        oversample = self.cfg.index_oversample
+
+        def routed_indexed(operands, packed, ipacked, colidx, has,
+                           q, l_arr, key):
             rows = kops.route_mask(q, l_arr, packed, slack=slack)
             active = jnp.any(rows, axis=0)
-            d, i, iters, surv = inner(*operands, active, q, l_arr, key)
-            return d, i, iters, surv, active
+            brows = kops.index_mask(q, l_arr, rows, ipacked,
+                                    oversample=oversample)
+            keep_any = jnp.any(brows, axis=0)          # (k·b,)
+            cand = has & keep_any[colidx]              # (n,) slot mask
+            d, i, iters, surv = inner(*operands, cand, active, q, l_arr,
+                                      key)
+            return d, i, iters, surv, active, keep_any
 
-        return jax.jit(routed)
+        return jax.jit(routed_indexed)
 
     def _packed_for(self, summ):
         """Kernel-layout summary operands for ``summ``, cached by object
@@ -474,23 +581,47 @@ class KnnServer:
             self._packed_cache = cached
         return cached[1]
 
+    def _index_ops_for(self, index):
+        """Device-router operands for ``index``, cached by object
+        identity like ``_packed_for``: the kernel-layout packed tuple
+        (kernels/routing.pack_index) plus the flat slot decode that
+        turns the kernel's (k·b,) bucket keep into the executable's
+        (n,) per-slot candidate operand — ``colidx = shard·b + bucket``
+        per slot, ``has = slot is assigned`` (dead/free slots are never
+        candidates)."""
+        cached = self._ipacked_cache
+        if cached is None or cached[0] is not index:
+            packed = routing_mod.pack_index(index)
+            a = index.assign                        # (k·cap,) int32
+            shard = np.arange(a.shape[0], dtype=np.int32) // self.m_local
+            colidx = (shard * index.num_buckets
+                      + np.maximum(a, 0)).astype(np.int32)
+            cached = (index, packed, colidx, a >= 0)
+            self._ipacked_cache = cached
+        return cached[1], cached[2], cached[3]
+
     def _backing_arrays(self):
-        """(executable operands, generation, summaries) for one dispatch.
+        """(executable operands, generation, summaries, index) for one
+        dispatch.
 
         Store-backed servers capture the current snapshot here — the
         epoch-swap point.  The returned arrays are immutable, so a batch
         dispatched before a flush finishes cleanly against its own
-        generation no matter how many swaps land meanwhile.  Snapshot and
-        routing summaries come from one lock acquisition
-        (``routing_snapshot``), so the summaries can never describe a
-        different generation than the arrays being queried; for static
-        servers the construction-time summaries are generation 0 forever.
+        generation no matter how many swaps land meanwhile.  Snapshot,
+        routing summaries, and (for ``search="approx"``) the bucket
+        index come from one lock acquisition (``routing_snapshot`` /
+        ``serving_snapshot``), so neither can ever describe a different
+        generation than the arrays being queried; for static servers the
+        construction-time summaries/index are generation 0 forever.
         """
         if self._store is not None:
-            snap, summ = self._store.routing_snapshot()
+            if self._indexed:
+                snap, summ, idx = self._store.serving_snapshot()
+            else:
+                (snap, summ), idx = self._store.routing_snapshot(), None
             return ((snap.points, snap.ids, snap.valid), snap.generation,
-                    summ)
-        return (self._points, self._ids), 0, self._summaries
+                    summ, idx)
+        return (self._points, self._ids), 0, self._summaries, self._index0
 
     def placement_stats(self) -> dict:
         """Locality and bound fidelity of the layout being served, as
@@ -566,16 +697,19 @@ class KnnServer:
 
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
-        operands, _, summ = self._backing_arrays()
+        operands, _, summ, idx = self._backing_arrays()
         if self._route_fn is not None:
             packed = self._packed_for(summ)
+            iops = self._index_ops_for(idx) if self._indexed else ()
             for b in self.cfg.bucket_sizes:
                 q = np.zeros((b, self.dim), np.float32)
                 l_arr = np.zeros(b, np.int32)
-                out = self._route_fn(operands, packed, q, l_arr,
+                out = self._route_fn(operands, packed, *iops, q, l_arr,
                                      self._base_key)
                 jax.block_until_ready(out)
             return
+        if self._indexed:
+            operands = operands + (np.ones(self.k * self.m_local, bool),)
         if self.cfg.route == "pruned":
             operands = operands + (np.ones(self.k, bool),)
         for b in self.cfg.bucket_sizes:
@@ -682,7 +816,7 @@ class KnnServer:
             t_snap0 = time.perf_counter()
             sspan = tracer.begin("snapshot", parent=dspan, t0=t_snap0)
             batch_spans.append(sspan)
-            operands, generation, summ = self._backing_arrays()
+            operands, generation, summ, idx = self._backing_arrays()
             if self._store is not None:
                 n_live = int(self._store.live_per_shard.sum())
             else:
@@ -690,6 +824,7 @@ class KnnServer:
             sspan.end(generation=generation, n_live=n_live)
             t_snap1 = time.perf_counter()
             t_route0 = t_route1 = None
+            cand_frac = None       # search="approx" kept-live fraction
             kattrs = dict(path=env["path"], l2_path=env["l2_path"],
                           fallback=env["fallback_reason"] or "")
             if self._route_fn is not None:
@@ -703,8 +838,17 @@ class KnnServer:
                                      route_compute="device", **kattrs)
                 batch_spans.append(kspan)
                 packed = self._packed_for(summ)
-                d, i, iters, surv, active = self._route_fn(
-                    operands, packed, q, l_arr, key)
+                if self._indexed:
+                    iops = self._index_ops_for(idx)
+                    (d, i, iters, surv, active,
+                     keep_any) = self._route_fn(operands, packed, *iops,
+                                                q, l_arr, key)
+                    cand_frac = index_mod.candidate_fraction(
+                        idx, np.asarray(keep_any).reshape(
+                            self.k, idx.num_buckets))
+                else:
+                    d, i, iters, surv, active = self._route_fn(
+                        operands, packed, q, l_arr, key)
                 d, i = np.asarray(d), np.asarray(i)
                 surv, iters = np.asarray(surv), int(iters)
                 touched = int(np.asarray(active).sum())
@@ -728,24 +872,46 @@ class KnnServer:
                     summ, q, l_arr, slack=self.cfg.route_slack)
                 active = active_rows.any(axis=0)
                 touched = int(active.sum())
+                extra = ()
+                if self._indexed:
+                    # Second prologue stage, bucket granularity: the
+                    # per-row shard keep gates which buckets can
+                    # compete, the batch-union bucket keep becomes the
+                    # (n,) per-slot candidate operand (store/index.py).
+                    pcand, cand_frac = self._host_candidates(
+                        idx, q, l_arr, active_rows)
+                    extra = (pcand,)
                 rspan.end(touched=touched)
                 t_route1 = time.perf_counter()
                 kspan = tracer.begin("kernel", parent=dspan, t0=t_route1,
                                      route_compute="host", **kattrs)
                 batch_spans.append(kspan)
-                d, i, iters, surv = self._fn(*operands, active, q, l_arr,
-                                             key)
+                d, i, iters, surv = self._fn(*operands, *extra, active,
+                                             q, l_arr, key)
                 d, i = np.asarray(d), np.asarray(i)
                 surv, iters = np.asarray(surv), int(iters)
                 kspan.end()
                 t_kern0, t_kern1 = t_route1, time.perf_counter()
             else:
                 touched = self.k
+                extra = ()
+                if self._indexed:
+                    t_route0 = time.perf_counter()
+                    rspan = tracer.begin("route", parent=dspan,
+                                         t0=t_route0, compute="host",
+                                         indexed=True)
+                    batch_spans.append(rspan)
+                    pcand, cand_frac = self._host_candidates(
+                        idx, q, l_arr, None)
+                    extra = (pcand,)
+                    rspan.end()
+                    t_route1 = time.perf_counter()
                 t_kern0 = time.perf_counter()
                 kspan = tracer.begin("kernel", parent=dspan, t0=t_kern0,
                                      **kattrs)
                 batch_spans.append(kspan)
-                d, i, iters, surv = self._fn(*operands, q, l_arr, key)
+                d, i, iters, surv = self._fn(*operands, *extra, q, l_arr,
+                                             key)
                 d, i = np.asarray(d), np.asarray(i)
                 surv, iters = np.asarray(surv), int(iters)
                 kspan.end()
@@ -778,15 +944,20 @@ class KnnServer:
             l_max=audit_l, n_live=n_live, rounds=rounds, messages=messages,
             use_sampling=self.cfg.use_sampling, sampler=self.cfg.sampler,
             generation=generation)
-        # Shadow-exact audit: replay every Nth pruned batch through the
-        # same executable with the all-shards-active mask — the exact
-        # collective at this generation with this key (the bit-identical
-        # invariant of tests/test_routing.py as a production signal).
-        if (self._shadow is not None and self.cfg.route == "pruned"
+        # Shadow-exact audit: replay every Nth pruned/indexed batch
+        # through the same executable with every shard active and every
+        # slot a candidate — the exact collective at this generation
+        # with this key.  For pruned exact routing the contract is
+        # byte-identity (tests/test_routing.py as a production signal);
+        # for search="approx" the auditor instead measures recall@l
+        # against cfg.recall_floor.
+        if (self._shadow is not None
+                and (self.cfg.route == "pruned" or self._indexed)
                 and self._shadow.due()):
             with tracer.span("shadow_audit", parent=dspan,
                              generation=generation) as aspan:
-                all_on = np.ones(self.k, bool)
+                all_on = (np.ones(self.k, bool)
+                          if self.cfg.route == "pruned" else None)
                 ok = self._shadow.check(
                     d, i, lambda: self._exact_replay(operands, all_on, q,
                                                      l_arr, key),
@@ -822,7 +993,8 @@ class KnnServer:
                 survivors=int(surv[row]), bucket=bucket,
                 queued_s=t_dispatch - rec.t_enqueue,
                 latency_s=t_done - rec.t_enqueue,
-                generation=generation, shards_touched=touched))
+                generation=generation, shards_touched=touched,
+                recall_mode="approx" if self._indexed else "exact"))
             if rec.span is not None:
                 tracer.record("queued", rec.t_enqueue, t_dispatch,
                               parent=rec.span)
@@ -846,14 +1018,40 @@ class KnnServer:
         m["dispatch"].observe(t_res1 - t_dispatch)
         m["rounds"].observe(rounds)
         m["messages"].observe(messages)
-        m["touched"].observe(touched)
+        # Defensive (satellite of the -1 sentinel fix): a negative
+        # touched count is QueryResult's "never routed" sentinel, not an
+        # observation — it must never enter the serving histograms.
+        if touched >= 0:
+            m["touched"].observe(touched)
+        if cand_frac is not None:
+            m["cand_frac"].observe(cand_frac)
 
     def _exact_replay(self, operands, all_on, q, l_arr, key):
-        """The exact collective for one dispatched pruned batch: the same
-        executable, operands, and key, with every shard active.  Answers
-        are host arrays ready for byte comparison."""
-        d, i, *_ = self._fn(*operands, all_on, q, l_arr, key)
+        """The exact collective for one dispatched batch: the same
+        executable, operands, and key, with every shard active
+        (``all_on``; None when the server routes exact) and — for an
+        indexed server — every slot a candidate.  Answers are host
+        arrays ready for the shadow comparison."""
+        ops = list(operands)
+        if self._indexed:
+            ops.append(np.ones(self.k * self.m_local, bool))
+        if all_on is not None:
+            ops.append(all_on)
+        d, i, *_ = self._fn(*ops, q, l_arr, key)
         return np.asarray(d), np.asarray(i)
+
+    def _host_candidates(self, idx, q, l_arr, shard_keep):
+        """Host-path bucket prologue for one micro-batch: the (n,)
+        per-slot candidate operand and the kept-live fraction
+        (store/index.py ``bucket_keep`` -> union across rows ->
+        ``candidate_mask``; ``shard_keep`` is the per-row routing
+        decision, None = all shards compete)."""
+        keep = index_mod.bucket_keep(
+            idx, q, l_arr, shard_keep=shard_keep,
+            oversample=self.cfg.index_oversample)
+        keep_any = keep.any(axis=0)
+        pcand = index_mod.candidate_mask(idx, keep_any, self.m_local)
+        return pcand, index_mod.candidate_fraction(idx, keep_any)
 
     # ---- background micro-batcher ---------------------------------------
 

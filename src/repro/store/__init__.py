@@ -1,8 +1,8 @@
 """Mutable sharded point store — streaming ingest/deletes under the
 static-shape query path, with epoch-swapped serving (DESIGN.md Section 7),
 pruned shard routing (Section 8), locality-aware placement (Section 9),
-adaptive summary maintenance (Section 10), and a background maintenance
-plane (Section 11).
+adaptive summary maintenance (Section 10), a background maintenance
+plane (Section 11), and an in-shard approximate index tier (Section 13).
 """
 
 from repro.store.mutable import (ID_SENTINEL, IngestStats, MutableStore,
@@ -11,6 +11,8 @@ from repro.store.adaptive import AdaptiveMaintainer, compute_pivots
 from repro.store.compaction import (CompactionDecision, evaluate,
                                     redeal_slack, repack,
                                     scatter_operands)
+from repro.store.index import (IndexMaintainer, ShardIndex, bucket_keep,
+                               candidate_fraction, candidate_mask)
 from repro.store.maintenance import MaintenanceStats, MaintenanceWorker
 from repro.store.placement import (AffinityPlacement, BalancePlacement,
                                    PlacementPolicy, PlacementView,
@@ -27,6 +29,8 @@ __all__ = [
     "ID_SENTINEL", "CompactionDecision", "evaluate", "redeal_slack",
     "repack", "scatter_operands",
     "AdaptiveMaintainer", "compute_pivots",
+    "IndexMaintainer", "ShardIndex", "bucket_keep", "candidate_mask",
+    "candidate_fraction",
     "MaintenanceStats", "MaintenanceWorker",
     "PlacementPolicy", "PlacementView", "BalancePlacement",
     "AffinityPlacement", "make_placement", "lloyd_centroids",

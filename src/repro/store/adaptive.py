@@ -141,6 +141,11 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
         self._piv = np.zeros((k, m, dim))
         self._piv_r = np.zeros((k, m))
         self._piv_n = np.zeros(k, np.int64)
+        # Per-ball live credits — a safe undercount (see delete()):
+        # every credit is a distinct live point inside its ball, so the
+        # routing threshold may charge balls individually instead of
+        # over-crediting a ball that lost points to deletes.
+        self._piv_live = np.zeros((k, m), np.int64)
         self._ops_since = np.zeros(k, np.int64)   # ops since exact rebuild
         self._rr = 0                              # round-robin scan cursor
         self._radius_at_rebuild = np.zeros(k)     # split growth guard
@@ -156,6 +161,7 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
             self._piv[j, 0] = p
             self._piv_r[j, 0] = 0.0
             self._piv_n[j] = 1
+            self._piv_live[j, 0] = 1
         else:
             d = np.sqrt(((self._piv[j, :c] - p) ** 2).sum(-1))
             if (d > self._piv_r[j, :c]).all() and c < self.num_pivots:
@@ -163,19 +169,37 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
                 self._piv[j, c] = p
                 self._piv_r[j, c] = 0.0
                 self._piv_n[j] = c + 1
+                self._piv_live[j, c] = 1
             else:
                 # join the ball needing the least inflation (covering
                 # either way; min-inflation keeps the union tight)
                 b = int(np.argmin(d - self._piv_r[j, :c]))
                 self._piv_r[j, b] = max(self._piv_r[j, b], float(d[b]))
+                self._piv_live[j, b] += 1
         self._ops_since[j] += 1
 
     def delete(self, shard: int, point) -> None:
         # Removing a point leaves the pivot-ball union covering
         # (stale-but-valid, like the aggregate radius); emptied shards
-        # reset through _reset_shard.
-        super().delete(shard, point)
+        # reset through _reset_shard.  Live credits must stay a safe
+        # undercount, and the ball that originally credited this point
+        # is unknown — so debit every occupied ball that contains it
+        # (radii never shrink between exact rebuilds, so the crediting
+        # ball is among them).  Over-debiting neighbors only undercounts
+        # further, which is the safe direction.
         j = int(shard)
+        c = int(self._piv_n[j])
+        if c:
+            p = np.asarray(point, np.float64)
+            d = np.sqrt(((self._piv[j, :c] - p) ** 2).sum(-1))
+            r = self._piv_r[j, :c]
+            inside = d <= r + 1e-9 * (1.0 + r)
+            if not inside.any():
+                inside[:] = True     # covering says unreachable; stay safe
+            row = self._piv_live[j, :c]
+            row[inside] -= 1
+            np.maximum(row, 0, out=row)
+        super().delete(shard, point)
         if self._n[j] > 0:
             self._ops_since[j] += 1
 
@@ -184,6 +208,7 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
         self._piv[j] = 0.0
         self._piv_r[j] = 0.0
         self._piv_n[j] = 0
+        self._piv_live[j] = 0
         self._ops_since[j] = 0
         self._radius_at_rebuild[j] = 0.0
 
@@ -195,6 +220,12 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
         self._piv[j] = piv
         self._piv_r[j] = rad
         self._piv_n[j] = cnt
+        self._piv_live[j] = 0
+        if cnt:
+            dists = np.sqrt(
+                ((pj[:, None, :] - piv[None, :cnt]) ** 2).sum(-1))
+            self._piv_live[j, :cnt] = np.bincount(
+                dists.argmin(1), minlength=cnt)
         self._ops_since[j] = 0
         self._radius_at_rebuild[j] = self._radius[j]
 
@@ -228,6 +259,7 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
         self._piv[j] = other._piv[oj]
         self._piv_r[j] = other._piv_r[oj]
         self._piv_n[j] = other._piv_n[oj]
+        self._piv_live[j] = other._piv_live[oj]
         self._ops_since[j] = other._ops_since[oj]
         self._radius_at_rebuild[j] = other._radius_at_rebuild[oj]
 
@@ -293,4 +325,5 @@ class AdaptiveMaintainer(summaries_mod.SummaryMaintainer):
         return super().freeze(generation)._replace(
             pivots=self._piv.copy(),
             pivot_radii=self._piv_r.copy(),
-            pivot_count=self._piv_n.copy())
+            pivot_count=self._piv_n.copy(),
+            pivot_live=self._piv_live.copy())

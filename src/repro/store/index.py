@@ -1,0 +1,247 @@
+"""Per-shard approximate search index — bucket-pruned candidates.
+
+Pruned routing (store/summaries.py) skips *shards*, but every touched
+shard still brute-forces all of its live slots: per-query cost stays
+O(live/k · dim) no matter how tight the clusters are.  This module adds
+the in-shard tier: each shard's live points are covered by up to ``b``
+covering balls ("buckets") built on the same pivot machinery as the
+routing summaries (store/adaptive.py ``compute_pivots``), and a query
+prologue keeps only the buckets whose lower bound can still hold a
+top-l winner — the surviving buckets' slots become the candidate mask
+the masked fused kernel already understands (core/knn.py
+``point_candidates``; every non-candidate competes as +inf exactly like
+a tombstone).
+
+The keep rule is the routing threshold at bucket granularity: order all
+buckets (in routing-kept shards) by distance upper bound, find the
+smallest ``T`` whose cumulative live count reaches
+``target = max(l, ceil(oversample · l))``, keep buckets with
+``lb <= T``.  Unlike shard routing this is *approximate* — a bucket's
+live points are anywhere inside its ball, so the kept set can miss a
+true winner whose bucket looked far — which is why the tier sits behind
+``search="approx"`` and carries a measured recall contract
+(``recall_floor``, audited by the serving layer's shadow-exact replay
+and hard-asserted in benchmarks/bench_serve.py's "index" section)
+instead of the repo's bit-identical invariant.  Two exactness anchors
+remain: ``oversample`` large enough that the cumulative-live walk never
+reaches the target keeps *every* live bucket — answers bit-identical to
+exact (tests/test_index.py) — and a slot outside any bucket can only
+happen for dead slots (every live slot is assigned at insert/rebuild).
+
+Generation coupling mirrors the summaries: the :class:`IndexMaintainer`
+is updated incrementally under the store lock on every applied op,
+rebuilt exactly on any repack (inline or the background worker's
+commit-replay), and frozen as an immutable :class:`ShardIndex` with
+every generation — ``MutableStore.serving_snapshot()`` hands out
+(snapshot, summaries, index) from one lock acquisition so
+``index.generation == snapshot.generation`` always.  DESIGN.md §13.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.store import adaptive as adaptive_mod
+
+
+class ShardIndex(NamedTuple):
+    """One frozen generation of the in-shard bucket index.
+
+    ``centers``: (k, b, dim) f64 bucket ball centers; ``radii``: (k, b)
+    f64 covering radii; ``live``: (k, b) exact live count per bucket
+    (exact, not the undercount credits of the routing summaries — the
+    maintainer knows each slot's bucket, so deletes debit precisely);
+    ``count``: (k,) occupied bucket slots per shard; ``assign``:
+    (k*cap,) int32 slot -> bucket id within its shard, -1 for dead/free
+    slots.
+    """
+
+    generation: int
+    centers: np.ndarray
+    radii: np.ndarray
+    live: np.ndarray
+    count: np.ndarray
+    assign: np.ndarray
+
+    @property
+    def num_buckets(self) -> int:
+        return self.centers.shape[1]
+
+
+class IndexMaintainer:
+    """Incrementally-maintained bucket index for one store; see module
+    docstring.  All methods assume the store lock is held (the store's
+    op hooks call them inside ``_apply_locked`` / the worker's
+    commit-replay)."""
+
+    def __init__(self, k: int, cap: int, dim: int, num_buckets: int):
+        if num_buckets < 1:
+            raise ValueError(f"num_buckets must be >= 1, got {num_buckets}")
+        self.k = int(k)
+        self.cap = int(cap)
+        self.dim = int(dim)
+        self.num_buckets = int(num_buckets)
+        b = self.num_buckets
+        self._centers = np.zeros((k, b, dim))
+        self._radii = np.zeros((k, b))
+        self._live = np.zeros((k, b), np.int64)
+        self._count = np.zeros(k, np.int64)
+        self._assign = np.full(k * cap, -1, np.int32)
+
+    # ---- incremental ops -------------------------------------------------
+
+    def insert(self, shard: int, slot: int, point) -> None:
+        """Assign the new live slot to a bucket: claim a free bucket when
+        the point sits outside every ball (same rule as the routing
+        pivots), else join the ball needing the least inflation."""
+        j = int(shard)
+        p = np.asarray(point, np.float64)
+        c = int(self._count[j])
+        if c == 0:
+            self._centers[j, 0] = p
+            self._radii[j, 0] = 0.0
+            self._count[j] = 1
+            self._live[j, 0] = 1
+            self._assign[slot] = 0
+            return
+        d = np.sqrt(((self._centers[j, :c] - p) ** 2).sum(-1))
+        if (d > self._radii[j, :c]).all() and c < self.num_buckets:
+            self._centers[j, c] = p
+            self._radii[j, c] = 0.0
+            self._count[j] = c + 1
+            self._live[j, c] = 1
+            self._assign[slot] = c
+        else:
+            t = int(np.argmin(d - self._radii[j, :c]))
+            self._radii[j, t] = max(self._radii[j, t], float(d[t]))
+            self._live[j, t] += 1
+            self._assign[slot] = t
+
+    def delete(self, slot: int) -> None:
+        """Debit the slot's bucket exactly (the assignment is known,
+        unlike the routing summaries' containing-ball undercount); the
+        ball stays covering for its remaining members."""
+        t = int(self._assign[slot])
+        if t >= 0:
+            j = int(slot) // self.cap
+            self._live[j, t] = max(self._live[j, t] - 1, 0)
+            self._assign[slot] = -1
+
+    def update(self, slot: int, point) -> None:
+        """An in-place overwrite keeps its bucket; the ball inflates to
+        keep covering the moved point (stale-but-valid, like every
+        incremental bound in this store)."""
+        t = int(self._assign[slot])
+        if t < 0:
+            return
+        j = int(slot) // self.cap
+        d = float(np.sqrt(
+            ((np.asarray(point, np.float64) - self._centers[j, t]) ** 2)
+            .sum()))
+        self._radii[j, t] = max(self._radii[j, t], d)
+
+    # ---- exact rebuild ---------------------------------------------------
+
+    def rebuild(self, points: np.ndarray, valid: np.ndarray) -> None:
+        """Exact per-shard rebuild from the store mirrors (the repack /
+        background-commit hook): farthest-point bucket centers
+        (adaptive.compute_pivots), argmin assignment, exact radii and
+        live counts."""
+        pts = np.asarray(points, np.float64)
+        valid = np.asarray(valid, bool)
+        self._assign[:] = -1
+        for j in range(self.k):
+            sl = slice(j * self.cap, (j + 1) * self.cap)
+            mine = np.flatnonzero(valid[sl])
+            self._centers[j] = 0.0
+            self._radii[j] = 0.0
+            self._live[j] = 0
+            if mine.size == 0:
+                self._count[j] = 0
+                continue
+            pj = pts[sl][mine]
+            piv, rad, cnt = adaptive_mod.compute_pivots(
+                pj, self.num_buckets)
+            self._centers[j, :cnt] = piv[:cnt]
+            self._radii[j, :cnt] = rad[:cnt]
+            self._count[j] = cnt
+            dists = np.sqrt(
+                ((pj[:, None, :] - piv[None, :cnt]) ** 2).sum(-1))
+            assign = dists.argmin(1)
+            self._live[j, :cnt] = np.bincount(assign, minlength=cnt)
+            self._assign[sl][mine] = assign.astype(np.int32)
+
+    def freeze(self, generation: int) -> ShardIndex:
+        """Immutable copy coupled to ``generation`` (the store freezes
+        one per epoch swap, beside the routing summaries)."""
+        return ShardIndex(
+            generation=int(generation),
+            centers=self._centers.copy(),
+            radii=self._radii.copy(),
+            live=self._live.copy(),
+            count=self._count.copy(),
+            assign=self._assign.copy())
+
+
+# ---- query-time candidate selection (host path) --------------------------
+
+
+def bucket_keep(index: ShardIndex, queries, ls, shard_keep=None, *,
+                oversample: float = 2.0) -> np.ndarray:
+    """(B, k, b) bool — buckets that may hold a top-l winner, per query.
+
+    The keep rule from the module docstring, f64 on host (the device
+    mirror is kernels/routing.index_mask — f32, and NOT required to be
+    bit-identical: the tier is approximate either way, and each path's
+    recall is measured, not derived).  ``shard_keep`` (B, k) bool is the
+    routing decision (None = all shards); rows with ``ls == 0`` (bucket
+    padding) keep nothing.
+    """
+    q = np.atleast_2d(np.asarray(queries, np.float64))
+    B = q.shape[0]
+    k, b, _ = index.centers.shape
+    ls = np.asarray(ls, np.int64).reshape(B)
+    d = np.sqrt(
+        ((q[:, None, None, :] - index.centers[None]) ** 2).sum(-1))
+    occ = ((np.arange(b)[None, :] < index.count[:, None])
+           & (index.live > 0))
+    if shard_keep is None:
+        shard_keep = np.ones((B, k), bool)
+    g = occ[None] & np.asarray(shard_keep, bool)[:, :, None]
+    lb = np.where(g, np.maximum(d - index.radii[None], 0.0) ** 2, np.inf)
+    ub = np.where(g, (d + index.radii[None]) ** 2, np.inf)
+    target = np.maximum(ls, np.ceil(oversample * ls).astype(np.int64))
+    ubf = ub.reshape(B, -1)
+    livef = np.where(g, index.live[None], 0).reshape(B, -1)
+    order = np.argsort(ubf, axis=1, kind="stable")
+    csum = np.cumsum(np.take_along_axis(livef, order, axis=1), axis=1)
+    reached = csum >= target[:, None]
+    has = reached.any(axis=1)
+    first = np.where(has, reached.argmax(axis=1), 0)
+    ub_sorted = np.take_along_axis(ubf, order, axis=1)
+    # No T when total live < target: keep every live bucket (exact).
+    T = np.where(has, ub_sorted[np.arange(B), first], np.inf)
+    return g & (lb <= T[:, None, None]) & (ls > 0)[:, None, None]
+
+
+def candidate_mask(index: ShardIndex, keep_any: np.ndarray,
+                   cap: int) -> np.ndarray:
+    """(k*cap,) bool slot candidates from a (k, b) batch-union bucket
+    keep (the union-across-rows convention shard routing also uses —
+    one collective pass serves the whole micro-batch)."""
+    k, b = keep_any.shape
+    a = index.assign
+    shard = np.arange(k * cap) // cap
+    return (a >= 0) & keep_any[shard, np.maximum(a, 0)]
+
+
+def candidate_fraction(index: ShardIndex, keep_any: np.ndarray) -> float:
+    """Kept live points / total live — the per-dispatch cost observable
+    (serve.candidate_fraction); computed from the index's own live
+    counts, no device readback."""
+    total = int(index.live.sum())
+    if total == 0:
+        return 1.0
+    return float(index.live[keep_any].sum()) / total

@@ -66,6 +66,7 @@ import numpy as np
 from repro.obs.trace import NULL_TRACER
 from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
+from repro.store import index as index_mod
 from repro.store import placement as placement_mod
 from repro.store import summaries as summaries_mod
 
@@ -297,6 +298,15 @@ class MaintenanceWorker:
                                         id_sentinel=mutable_mod.ID_SENTINEL)
             scratch = self._scratch(st.k)
             scratch.rebuild(res.points, res.valid, st.cap)
+            # The approximate index tier rebuilds the same way: exact
+            # off-lock against the repacked layout, journal-replayed at
+            # commit, installed with the epoch swap — so its frozen form
+            # stays generation-coupled through background repacks too.
+            scratch_idx = None
+            if st._index is not None:
+                scratch_idx = index_mod.IndexMaintainer(
+                    st.k, st.cap, st.dim, st._index.num_buckets)
+                scratch_idx.rebuild(res.points, res.valid)
             # upload copies: replay mutates the staged mirrors after
             # this, and the transfer may still be in flight (the same
             # rule as _upload_snapshot_locked)
@@ -340,6 +350,8 @@ class MaintenanceWorker:
                     used[j] += 1
                     live[j] += 1
                     scratch.insert(j, new_pt)
+                    if scratch_idx is not None:
+                        scratch_idx.insert(j, slot, new_pt)
                     new_pts[slot] = new_pt
                     new_ids[slot] = pid
                     new_valid[slot] = True
@@ -349,12 +361,16 @@ class MaintenanceWorker:
                     slot = slot_of.pop(pid)
                     live[slot // st.cap] -= 1
                     scratch.delete(slot // st.cap, new_pts[slot])
+                    if scratch_idx is not None:
+                        scratch_idx.delete(slot)
                     new_valid[slot] = False
                     new_ids[slot] = mutable_mod.ID_SENTINEL
                     touched.add(slot)
                 else:  # update
                     slot = slot_of[pid]
                     scratch.update(slot // st.cap, new_pts[slot], new_pt)
+                    if scratch_idx is not None:
+                        scratch_idx.update(slot, new_pt)
                     new_pts[slot] = new_pt
                     touched.add(slot)
                 self.stats.replayed_ops += 1
@@ -375,6 +391,9 @@ class MaintenanceWorker:
                 valid=dev_valid, live=int(live.sum()))
             st._summ = scratch
             st._summaries = scratch.freeze(gen)
+            if scratch_idx is not None:
+                st._index = scratch_idx
+                st._frozen_index = scratch_idx.freeze(gen)
             st.stats.applies += 1
             st.stats.compactions += 1
             st.stats.last_compact_reason = reason

@@ -86,6 +86,7 @@ from repro.obs.trace import NULL_TRACER
 from repro.parallel.compat import make_mesh
 from repro.store import adaptive as adaptive_mod
 from repro.store import compaction
+from repro.store import index as index_mod
 from repro.store import maintenance as maintenance_mod
 from repro.store import placement as placement_mod
 from repro.store import summaries as summaries_mod
@@ -154,7 +155,8 @@ class MutableStore:
                  summary_pivots: int = 1, retighten_every: int = 0,
                  split_radius_factor: float = 0.0,
                  split_cooldown: int = 2, maintenance: str = "inline",
-                 maintenance_probe_sample: int = 64):
+                 maintenance_probe_sample: int = 64,
+                 index_buckets: int = 0):
         if capacity_per_shard < 1:
             raise ValueError("capacity_per_shard must be >= 1")
         if redeal not in ("round_robin", "proximity"):
@@ -228,10 +230,21 @@ class MutableStore:
         self.split_cooldown = int(split_cooldown)
         self._applies_at_split = -(1 << 30)   # no split yet: first may fire
 
+        # In-shard approximate index tier (store/index.py): maintained
+        # incrementally beside the summaries at every op site below,
+        # rebuilt exactly on any repack, frozen per generation so
+        # serving_snapshot()'s (snapshot, summaries, index) triple is
+        # generation-coupled.  index_buckets=0 (the default) disables it.
+        self._index = (index_mod.IndexMaintainer(
+            self.k, self.cap, self.dim, index_buckets)
+            if index_buckets > 0 else None)
+
         self._history: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self._track_history = bool(track_history)
         self._snap = self._upload_snapshot_locked(generation=0)
         self._summaries = self._summ.freeze(0)
+        self._frozen_index = (self._index.freeze(0)
+                              if self._index is not None else None)
         self._record_history()
 
         # Maintenance plane (store/maintenance.py).  The journal exists
@@ -297,6 +310,15 @@ class MutableStore:
         with self._lock:
             return self._snap, self._summaries
 
+    def serving_snapshot(self):
+        """(snapshot, summaries, index) captured under one lock
+        acquisition — the full serving triple for ``search="approx"``:
+        ``index.generation == summaries.generation ==
+        snapshot.generation`` always (``index`` is None when the store
+        was built with ``index_buckets=0``)."""
+        with self._lock:
+            return self._snap, self._summaries, self._frozen_index
+
     def summaries(self) -> summaries_mod.ShardSummaries:
         """The current generation's per-shard pivot summaries."""
         with self._lock:
@@ -318,6 +340,13 @@ class MutableStore:
         """Pivot balls per shard of this store's routing summaries
         (servers with route="pruned" must be configured to match)."""
         return self._summ.num_pivots
+
+    @property
+    def index_buckets(self) -> int:
+        """Buckets per shard of this store's approximate index tier —
+        0 when disabled (servers with search="approx" must be configured
+        to match, like the summary knobs)."""
+        return self._index.num_buckets if self._index is not None else 0
 
     def summary_slack(self) -> np.ndarray:
         """(k,) covering-radius slack of the current generation's
@@ -528,6 +557,8 @@ class MutableStore:
                 self._used[j] += 1
                 self._live[j] += 1
                 self._summ.insert(j, op.point)
+                if self._index is not None:
+                    self._index.insert(j, slot, op.point)
                 self._pts[slot] = op.point
                 self._ids[slot] = op.id
                 self._valid[slot] = True
@@ -543,6 +574,8 @@ class MutableStore:
                 slot = self._slot_of.pop(op.id)
                 self._live[slot // self.cap] -= 1
                 self._summ.delete(slot // self.cap, self._pts[slot])
+                if self._index is not None:
+                    self._index.delete(slot)
                 if self._journal is not None:
                     self._journal.append(("delete", op.id,
                                           slot // self.cap, None,
@@ -555,6 +588,8 @@ class MutableStore:
                 slot = self._slot_of[op.id]
                 self._summ.update(slot // self.cap, self._pts[slot],
                                   op.point)
+                if self._index is not None:
+                    self._index.update(slot, op.point)
                 if self._journal is not None:
                     self._journal.append(("update", op.id,
                                           slot // self.cap, op.point,
@@ -618,6 +653,8 @@ class MutableStore:
                                        live=self._projected_live)
         self.stats.applies += 1
         self._summaries = self._summ.freeze(gen)
+        if self._index is not None:
+            self._frozen_index = self._index.freeze(gen)
         self._record_history()
         if self._worker is not None:
             self._worker.notify()
@@ -705,6 +742,8 @@ class MutableStore:
         # Exact rebuild: compaction is the point where the incremental
         # (covering-but-loose) summary bounds get re-tightened.
         self._summ.rebuild(self._pts, self._valid, self.cap)
+        if self._index is not None:
+            self._index.rebuild(self._pts, self._valid)
         self.stats.compactions += 1
         t_done = time.perf_counter()
         self._obs_tracer().record("store.repack", t_repack, t_done,

@@ -105,7 +105,12 @@ class ShardSummaries(NamedTuple):
     (:mod:`repro.store.adaptive`): ``pivots``: (k, m, dim) ball centers,
     ``pivot_radii``: (k, m) ball radii, ``pivot_count``: (k,) occupied
     pivot slots per shard — the union of shard j's first
-    ``pivot_count[j]`` balls covers its live points.
+    ``pivot_count[j]`` balls covers its live points.  ``pivot_live``:
+    (k, m) per-ball live-point credits, maintained as a *safe
+    undercount* (every credit is a distinct live point inside its ball;
+    some live points may carry no credit after deletes) — what lets the
+    routing threshold charge a pivot ball only for points it provably
+    still holds instead of the whole shard's live count.
     """
 
     generation: int
@@ -118,6 +123,7 @@ class ShardSummaries(NamedTuple):
     pivots: np.ndarray | None = None
     pivot_radii: np.ndarray | None = None
     pivot_count: np.ndarray | None = None
+    pivot_live: np.ndarray | None = None
 
 
 def projection_directions(dim: int, num_projections: int,
@@ -274,7 +280,17 @@ def _centroid_distances(s: ShardSummaries, q: np.ndarray) -> np.ndarray:
     return np.sqrt(((q[:, None, :] - s.centroids[None]) ** 2).sum(-1))
 
 
-def _pivot_bounds(s: ShardSummaries, q: np.ndarray):
+def _pivot_dists(s: ShardSummaries, q: np.ndarray) -> np.ndarray | None:
+    """(B, k, m) float64 query-to-pivot distances, or None without a
+    pivot set — the shared pass behind both the pivot bound bracket and
+    the per-pivot threshold (route_shards computes it once)."""
+    if s.pivots is None:
+        return None
+    return np.sqrt(((q[:, None, None, :] - s.pivots[None]) ** 2).sum(-1))
+
+
+def _pivot_bounds(s: ShardSummaries, q: np.ndarray,
+                  dp: np.ndarray | None = None):
     """(lb, ub) — (B, k) *distance*-unit brackets from the per-shard pivot
     ball sets, or (None, None) when the summaries carry none.
 
@@ -282,12 +298,14 @@ def _pivot_bounds(s: ShardSummaries, q: np.ndarray):
     so ``min_p max(0, d(q, pivot_p) − r_p)`` lower-bounds and
     ``max_p (d(q, pivot_p) + r_p)`` upper-bounds the distance to any of
     them.  Shards with no occupied pivot contribute nothing (lb 0,
-    ub +inf) — never a prune.
+    ub +inf) — never a prune.  ``dp`` (optional) is a precomputed
+    :func:`_pivot_dists` result.
     """
     if s.pivots is None:
         return None, None
     m = s.pivots.shape[1]
-    dp = np.sqrt(((q[:, None, None, :] - s.pivots[None]) ** 2).sum(-1))
+    if dp is None:
+        dp = _pivot_dists(s, q)
     occ = np.arange(m)[None, :] < s.pivot_count[:, None]     # (k, m)
     lb = np.where(occ[None], np.maximum(dp - s.pivot_radii[None], 0.0),
                   np.inf).min(-1)
@@ -295,6 +313,45 @@ def _pivot_bounds(s: ShardSummaries, q: np.ndarray):
     has = s.pivot_count > 0
     return (np.where(has[None], lb, 0.0),
             np.where(has[None], ub, np.inf))
+
+
+def _pivot_threshold(s: ShardSummaries, q: np.ndarray, ls: np.ndarray,
+                     dp: np.ndarray | None = None) -> np.ndarray | None:
+    """(B,) squared-distance threshold from per-pivot live accounting, or
+    None when the summaries carry no pivot set or no per-pivot counts.
+
+    Each occupied pivot ball p of shard j covers the ``pivot_live[j, p]``
+    live points credited to it, all at distance <= d(q, pivot) + r from
+    the query.  Visiting balls in ascending-upper-bound order until the
+    cumulative credit reaches l therefore bounds the l-th NN distance
+    from above — exactly the shard-level threshold logic at ball
+    granularity.  Because the credits are a safe *undercount* (see
+    :class:`ShardSummaries`), the cumulative sum reaches l no earlier
+    than the truth, so this threshold can only be >= the exact-count
+    one: sound by construction, and routing takes
+    ``min(T_shard, T_pivot)`` so it can only tighten the decision.  The
+    shard-level pass keeps charging each shard its full live count, so a
+    ball-less (or credit-less) shard stays invisible here without ever
+    loosening the combined threshold.
+    """
+    if s.pivots is None or s.pivot_live is None:
+        return None
+    m = s.pivots.shape[1]
+    if dp is None:
+        dp = _pivot_dists(s, q)
+    B = q.shape[0]
+    occ = ((np.arange(m)[None, :] < s.pivot_count[:, None])
+           & (s.pivot_live > 0))                             # (k, m)
+    pub = np.where(occ[None], (dp + s.pivot_radii[None]) ** 2, np.inf)
+    pub_flat = pub.reshape(B, -1)
+    plive_flat = np.where(occ, s.pivot_live, 0).reshape(-1)
+    order = np.argsort(pub_flat, axis=1, kind="stable")
+    csum = np.cumsum(plive_flat[order], axis=1)
+    reached = csum >= ls[:, None]
+    has = reached.any(axis=1)
+    first = np.where(has, reached.argmax(axis=1), 0)
+    pub_sorted = np.take_along_axis(pub_flat, order, axis=1)
+    return np.where(has, pub_sorted[np.arange(B), first], np.inf)
 
 
 def lower_bounds(s: ShardSummaries, queries: np.ndarray,
@@ -391,7 +448,8 @@ def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
     B = q.shape[0]
     ls = np.broadcast_to(np.asarray(ls, np.int64), (B,))
     dc = _centroid_distances(s, q)
-    pb = _pivot_bounds(s, q)       # (B, k, m, dim) pass — computed once
+    dp = _pivot_dists(s, q)        # (B, k, m) pass — computed once
+    pb = _pivot_bounds(s, q, dp)
     lb = lower_bounds(s, q, dc, pb)
     ub = upper_bounds(s, q, dc, pb)
     order = np.argsort(ub, axis=1, kind="stable")
@@ -401,6 +459,11 @@ def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
     first = np.where(has, reached.argmax(axis=1), 0)
     ub_sorted = np.take_along_axis(ub, order, axis=1)
     T = np.where(has, ub_sorted[np.arange(B), first], np.inf)
+    tp = _pivot_threshold(s, q, ls, dp)
+    if tp is not None:
+        # ball-granular threshold from per-pivot live credits — sound
+        # undercounts, so min() can only tighten (never drop a winner)
+        T = np.minimum(T, tp)
     T_eff = T * (1.0 + slack) + pipeline_error_bound(s, q)
     return ((s.live[None, :] > 0) & (lb <= T_eff[:, None])
             & (ls[:, None] > 0))

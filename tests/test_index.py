@@ -1,0 +1,254 @@
+"""The in-shard approximate search index (store/index.py, DESIGN.md §13).
+
+What this suite pins:
+
+* **Maintainer exactness** — unlike the routing summaries' undercount
+  credits, the bucket index knows each slot's bucket, so under arbitrary
+  insert/delete/update churn every live slot stays assigned, per-bucket
+  live counts stay *exact* (equal to a bincount oracle), and every ball
+  keeps covering its members.
+* **The exactness anchor** — with ``oversample`` large enough that the
+  cumulative-live walk never reaches its target, ``bucket_keep`` keeps
+  every live bucket and the candidate mask equals the valid mask, so a
+  ``search="approx"`` server answers *bit-identically* to the exact
+  collective on every route/compute mode.
+* **The serving contract** — on clustered workloads the approx tier
+  prunes candidates (fraction well below 1) while measured recall@l
+  against an exact twin stays at/above the floor; answers are tagged
+  ``recall_mode="approx"`` and the shadow recall audit stays clean.
+* **Generation coupling** — ``serving_snapshot()`` hands out snapshot,
+  summaries, and index with equal generations across flushes, repacks,
+  and background maintenance; a store/config bucket-knob conflict fails
+  at construction like the routing-sketch mismatch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.runtime import KnnServer
+from repro.store import MutableStore
+from repro.store.index import (IndexMaintainer, bucket_keep,
+                               candidate_fraction, candidate_mask)
+
+DIM = 8
+L_MAX = 16
+_SENT = 2**31 - 1
+
+
+# ---- maintainer invariants ----------------------------------------------
+
+def _check_invariants(m, pts, valid):
+    """The maintainer's exactness contract against brute-force oracles."""
+    k, cap, b = m.k, m.cap, m.num_buckets
+    idx = m.freeze(0)
+    # every live slot assigned, every dead slot unassigned
+    assert ((idx.assign >= 0) == valid).all()
+    for j in range(k):
+        sl = slice(j * cap, (j + 1) * cap)
+        a = idx.assign[sl][valid[sl]]
+        # exact live counts: a bincount over the true assignment
+        oracle = np.bincount(a, minlength=b) if a.size else np.zeros(b, int)
+        assert (idx.live[j] == oracle).all(), j
+        # assignment only to occupied bucket slots
+        assert (a < idx.count[j]).all()
+        # covering: each member within its ball (+ tiny float slack)
+        mine = np.flatnonzero(valid[sl])
+        for slot, t in zip(mine, idx.assign[sl][valid[sl]]):
+            d = np.sqrt(((pts[sl][slot] - idx.centers[j, t]) ** 2).sum())
+            assert d <= idx.radii[j, t] * (1 + 1e-9) + 1e-9, (j, t)
+
+
+def test_maintainer_exact_live_under_churn(rng):
+    k, cap, b = 4, 48, 3
+    m = IndexMaintainer(k, cap, dim=DIM, num_buckets=b)
+    pts = np.zeros((k * cap, DIM))
+    valid = np.zeros(k * cap, bool)
+    for step in range(600):
+        op = rng.integers(0, 3)
+        slot = int(rng.integers(0, k * cap))
+        p = rng.normal(scale=10.0, size=DIM)
+        if op == 0 and not valid[slot]:           # insert into free slot
+            m.insert(slot // cap, slot, p)
+            pts[slot], valid[slot] = p, True
+        elif op == 1 and valid[slot]:             # delete
+            m.delete(slot)
+            valid[slot] = False
+        elif op == 2 and valid[slot]:             # in-place update
+            m.update(slot, p)
+            pts[slot] = p
+    _check_invariants(m, pts, valid)
+    # an exact rebuild restores the same invariants from scratch
+    m.rebuild(pts, valid)
+    _check_invariants(m, pts, valid)
+    with pytest.raises(ValueError):
+        IndexMaintainer(k, cap, DIM, num_buckets=0)
+
+
+def test_bucket_keep_anchor_padding_and_shard_gate(rng):
+    k, cap, b = 4, 32, 4
+    m = IndexMaintainer(k, cap, dim=DIM, num_buckets=b)
+    pts = rng.normal(scale=20.0, size=(k * cap, DIM))
+    valid = rng.random(k * cap) < 0.7
+    m.rebuild(pts, valid)
+    idx = m.freeze(3)
+    q = rng.normal(scale=20.0, size=(3, DIM))
+    ls = np.array([4, 0, 4])
+    occ = ((np.arange(b)[None, :] < idx.count[:, None]) & (idx.live > 0))
+
+    # exactness anchor: an unreachable target keeps every live bucket,
+    # and the slot mask degenerates to the valid mask (frac == 1.0)
+    keep = bucket_keep(idx, q, ls, oversample=1e9)
+    assert (keep[0] == occ).all() and (keep[2] == occ).all()
+    assert (candidate_mask(idx, keep.any(axis=0), cap) == valid).all()
+    assert candidate_fraction(idx, keep.any(axis=0)) == 1.0
+
+    # padding rows (l=0) keep nothing
+    assert not keep[1].any()
+
+    # routing gate: a shard the router dropped contributes no buckets
+    sk = np.ones((3, k), bool)
+    sk[:, 2] = False
+    keep_g = bucket_keep(idx, q, ls, shard_keep=sk, oversample=1e9)
+    assert not keep_g[:, 2].any()
+    assert (keep_g[0, :2] == occ[:2]).all()
+
+    # finite oversample on clustered data actually prunes
+    far = np.concatenate([rng.normal(loc=200.0, scale=0.5,
+                                     size=(k * cap // 2, DIM)),
+                          rng.normal(loc=-200.0, scale=0.5,
+                                     size=(k * cap - k * cap // 2, DIM))])
+    m.rebuild(far, np.ones(k * cap, bool))
+    idx2 = m.freeze(4)
+    q2 = np.full((1, DIM), 200.0)
+    keep2 = bucket_keep(idx2, q2, np.array([4]), oversample=2.0)
+    frac = candidate_fraction(idx2, keep2.any(axis=0))
+    assert frac < 0.9                      # the far half was dropped
+
+
+# ---- serving: the approx tier end to end --------------------------------
+
+def _mk_cfg(**kw):
+    base = dict(dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(4,),
+                sampler="selection")
+    base.update(kw)
+    return CONFIG.replace(**base)
+
+
+def _clustered(rng, k=8, per_shard=24, scale=50.0):
+    centers = rng.normal(size=(k, DIM)) * scale
+    pts = (centers[:, None, :]
+           + rng.normal(size=(k, per_shard, DIM))).reshape(-1, DIM)
+    return pts.astype(np.float32), centers
+
+
+@pytest.mark.parametrize("route,compute", [("exact", "host"),
+                                           ("pruned", "host"),
+                                           ("pruned", "device")])
+def test_huge_oversample_bit_identical_to_exact(mesh8, rng, route, compute):
+    """The serving-level exactness anchor, on every route/compute mode:
+    search="approx" with an unreachable oversample target is
+    byte-identical to the search="exact" twin (same points, same keys).
+    """
+    pts, centers = _clustered(rng)
+    kw = dict(route=route, route_compute=compute)
+    se = KnnServer(pts, cfg=_mk_cfg(**kw), mesh=mesh8, axis_name="x")
+    sa = KnnServer(pts, cfg=_mk_cfg(search="approx", index_buckets=4,
+                                    index_oversample=1e9, **kw),
+                   mesh=mesh8, axis_name="x")
+    qs = (centers[[0, 3, 5]]
+          + rng.normal(size=(3, DIM))).astype(np.float32)
+    re_ = se.query_batch(qs, [4, 2, 4])
+    ra = sa.query_batch(qs, [4, 2, 4])
+    for a, b in zip(re_, ra):
+        assert a.dists.tobytes() == b.dists.tobytes()
+        assert a.ids.tobytes() == b.ids.tobytes()
+        assert a.recall_mode == "exact" and b.recall_mode == "approx"
+
+
+@pytest.mark.parametrize("route,compute", [("exact", "host"),
+                                           ("pruned", "host"),
+                                           ("pruned", "device")])
+def test_approx_recall_floor_and_candidate_reduction(mesh8, rng, route,
+                                                     compute):
+    """The measured contract on a clustered workload: recall@l against
+    the exact twin stays >= the floor while the candidate fraction
+    drops well below 1 — the tier prunes without (measurably) lying.
+    The shadow recall audit sees the same thing live."""
+    pts, centers = _clustered(rng)
+    kw = dict(route=route, route_compute=compute)
+    se = KnnServer(pts, cfg=_mk_cfg(**kw), mesh=mesh8, axis_name="x")
+    sa = KnnServer(pts, cfg=_mk_cfg(search="approx", index_buckets=4,
+                                    obs_audit_every=1, **kw),
+                   mesh=mesh8, axis_name="x")
+    sa.warmup()
+    recalls = []
+    for wave in range(4):
+        qs = (centers[[wave, wave + 2, wave + 4]]
+              + rng.normal(size=(3, DIM))).astype(np.float32)
+        re_ = se.query_batch(qs, [4] * 3)
+        ra = sa.query_batch(qs, [4] * 3)
+        for a, b in zip(re_, ra):
+            truth = set(a.ids[a.ids != _SENT].tolist())
+            recalls.append(len(truth & set(b.ids.tolist()))
+                           / max(len(truth), 1))
+    assert min(recalls) >= 0.95, recalls
+    snap = sa.obs_snapshot()
+    cf = snap["metrics"]["serve.candidate_fraction"]
+    assert cf["count"] >= 4
+    assert cf["mean"] < 0.75               # clusters actually pruned
+    shadow = snap["audit"]["shadow"]
+    assert shadow["mode"] == "recall" and shadow["checks"] >= 4
+    assert shadow["divergences"] == 0
+    assert shadow["recall"]["min"] >= 0.95
+
+
+def test_store_backed_generation_coupling_through_churn(mesh8, rng):
+    """serving_snapshot() hands out (snapshot, summaries, index) with
+    equal generations across flushes, tombstone-triggered repacks, and
+    the adaptive maintainer's hooks; served answers keep the measured
+    recall through the churn; an index-knob conflict fails loudly."""
+    cfg = _mk_cfg(search="approx", index_buckets=4, route="pruned",
+                  obs_audit_every=1, store_capacity_per_shard=96,
+                  store_staging_size=32, summary_pivots=2,
+                  retighten_every=4, store_compact_tombstone_frac=0.3)
+    store = MutableStore(DIM, mesh=mesh8, axis_name="x",
+                         **cfg.store_kwargs())
+    assert store.index_buckets == 4
+    srv = KnnServer(store=store, cfg=cfg)
+    pts, centers = _clustered(rng, per_shard=40)
+    store.insert(pts)
+    store.flush()
+    gens = set()
+    for phase in range(3):
+        snap, summ, idx = store.serving_snapshot()
+        assert idx.generation == snap.generation == summ.generation
+        gens.add(snap.generation)
+        qs = (centers[[phase, phase + 3]]
+              + rng.normal(size=(2, DIM))).astype(np.float32)
+        for r in srv.query_batch(qs, [4, 4]):
+            assert r.recall_mode == "approx"
+            assert r.generation == snap.generation
+        # heavy deletes push past the tombstone trigger -> repack ->
+        # index rebuilt at the new generation
+        live = store.live_arrays()[0]
+        store.delete(rng.permutation(live)[:len(live) // 3])
+        store.flush()
+    assert len(gens) == 3                  # churn really swapped epochs
+    assert srv.obs_snapshot()["audit"]["shadow"]["divergences"] == 0
+
+    with pytest.raises(ValueError, match="index mismatch"):
+        KnnServer(store=store, cfg=cfg.replace(index_buckets=7))
+    # an exact-search server on an indexed store is fine (ignores it)
+    exact_srv = KnnServer(store=store, cfg=cfg.replace(search="exact"))
+    assert exact_srv.query_batch(centers[:1], [4])[0].recall_mode == "exact"
+    store.close()
+
+
+def test_search_knob_validation():
+    with pytest.raises(ValueError, match="search"):
+        KnnServer(np.zeros((8, DIM), np.float32),
+                  cfg=_mk_cfg(search="fuzzy"))
+    with pytest.raises(ValueError, match="index_buckets"):
+        KnnServer(np.zeros((8, DIM), np.float32),
+                  cfg=_mk_cfg(search="approx", index_buckets=0))

@@ -378,3 +378,41 @@ def test_server_stats_concurrent_observe_and_snapshot():
     assert final["padded_rows"] == want_pad
     assert final["touched_shards"] == want_t
     assert final["routed_batches"] == want_rb
+
+
+def test_server_stats_rejects_touched_sentinel():
+    """Satellite of the -1 sentinel fix: QueryResult.shards_touched
+    defaults to -1 ("never routed"), and a leaked sentinel must never
+    enter the prune-rate inputs — it would silently *raise* the
+    reported rate.  observe() counts it as invalid instead."""
+    stats = ServerStats()
+    stats.observe(4, 4, touched=3)
+    stats.observe(4, 4, touched=-1)        # the sentinel, leaked
+    stats.observe(4, 4, touched=-7)        # any negative, same treatment
+    stats.observe(4, 4, touched=0)         # zero is a real observation
+    s = stats.snapshot()
+    assert s["touched_shards"] == 3
+    assert s["routed_batches"] == 2        # touched=3 and touched=0
+    assert s["invalid_touched"] == 2
+    assert s["batches"] == 4               # batch counting is unaffected
+
+
+@pytest.mark.parametrize("route", ["exact", "pruned"])
+def test_touched_sentinel_never_served_or_observed(mesh8, pts, route):
+    """Both routes end to end: every served result carries a
+    non-negative shards_touched (the -1 default never escapes
+    _dispatch), the prune math saw no invalid observations, and the
+    serve.touched_shards histogram observed only real counts — exactly
+    one per dispatched batch, k under route="exact"."""
+    srv = _server(pts, mesh8, route=route)
+    rng = np.random.default_rng(9)
+    res = srv.query_batch(rng.normal(size=(6, DIM)).astype(np.float32),
+                          [8] * 6)
+    assert all(r.shards_touched >= 0 for r in res)
+    if route == "exact":
+        assert all(r.shards_touched == K for r in res)
+    s = srv.stats.snapshot()
+    assert s["invalid_touched"] == 0
+    hist = srv.obs.metrics.get("serve.touched_shards").snapshot()
+    assert hist["count"] == s["batches"]
+    assert hist["min"] >= 0

@@ -75,6 +75,50 @@ def test_histogram_identical_values_exact_and_edge_cases():
     assert GROWTH < 1.05
 
 
+def test_histogram_empty_explicit_and_full_key_snapshot():
+    """Empty-histogram oracle: quantile is NaN at *every* q (never the
+    +inf/-inf min/max seeds), and snapshot carries the full key set so
+    readers indexing ["p99"]/["mean"] unconditionally never KeyError on
+    a histogram that simply hasn't fired yet (e.g. serve.route_s under
+    route="exact")."""
+    h = Histogram()
+    for q in (0.0, 0.01, 0.5, 0.99, 1.0):
+        assert math.isnan(h.quantile(q)), q
+    snap = h.snapshot()
+    assert snap["count"] == 0
+    assert set(snap) == {"count", "sum", "mean", "min", "max",
+                         "p50", "p90", "p99"}
+    assert snap["sum"] == 0.0 and snap["mean"] == 0.0
+    assert snap["min"] == 0.0 and snap["max"] == 0.0      # seeds hidden
+    assert all(math.isnan(snap[k]) for k in ("p50", "p90", "p99"))
+    assert not any(math.isinf(v) for v in snap.values()
+                   if isinstance(v, float))
+
+
+def test_histogram_single_observation_and_extreme_q_oracle():
+    """Nearest-rank edges against the sorted oracle: one observation
+    answers every q with itself; q=0.0 is the min and q=1.0 the max of
+    any sample."""
+    h = Histogram()
+    h.observe(0.25)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == pytest.approx(0.25), q
+    snap = h.snapshot()
+    assert snap["count"] == 1
+    assert snap["min"] == snap["max"] == 0.25
+    assert snap["mean"] == pytest.approx(0.25)
+    samples = [0.003, 0.5, 0.02, 0.11, 7.0]
+    h2 = Histogram()
+    for v in samples:
+        h2.observe(v)
+    # multi-sample edges: within one geometric bucket (~2.2%) of the
+    # true order statistic, and never outside the observed range
+    assert h2.quantile(0.0) == pytest.approx(min(samples), rel=0.05)
+    assert h2.quantile(1.0) == pytest.approx(max(samples), rel=0.05)
+    assert min(samples) <= h2.quantile(0.0) <= max(samples)
+    assert min(samples) <= h2.quantile(1.0) <= max(samples)
+
+
 def test_registry_create_or_get_and_type_collision():
     reg = MetricsRegistry()
     c = reg.counter("a.count")
@@ -260,6 +304,40 @@ def test_shadow_auditor_sampling_and_divergence():
     assert snap["details"][0]["batch_id"] == 5
     with pytest.raises(ValueError):
         ShadowAuditor(reg, every=0)
+    with pytest.raises(ValueError, match="mode"):
+        ShadowAuditor(reg, every=1, mode="fuzzy")
+
+
+def test_shadow_auditor_recall_mode():
+    """mode="recall" (the search="approx" contract): per-row recall@l
+    against the exact replay's finite ids, minimum over rows, floored.
+    Sentinel-only rows (padding / l=0) are vacuous; the measured
+    minimum lands in the snapshot's recall histogram."""
+    sent = 2**31 - 1
+    reg = MetricsRegistry()
+    s = ShadowAuditor(reg, every=1, mode="recall", floor=0.75)
+    exact_i = np.array([[1, 2, 3, 4],
+                        [10, 11, sent, sent],
+                        [sent, sent, sent, sent]], np.int32)
+    d = np.zeros_like(exact_i, np.float32)
+    # row recalls 4/4, 2/2 -> min 1.0: passes
+    assert s.check(exact_i.copy(), exact_i.copy(),
+                   lambda: (d, exact_i.copy()))
+    # row0 drops one true id (3/4 = 0.75, at the floor): still passes
+    near = exact_i.copy()
+    near[0, 3] = 99
+    assert s.check(d, near, lambda: (d, exact_i.copy()))
+    # row1 misses both true ids -> min 0.0: flagged with the measurement
+    bad = exact_i.copy()
+    bad[1, :2] = [98, 99]
+    assert not s.check(d, bad, lambda: (d, exact_i.copy()), batch_id=3)
+    snap = s.snapshot()
+    assert snap["mode"] == "recall" and snap["floor"] == 0.75
+    assert snap["checks"] == 3 and snap["divergences"] == 1
+    assert snap["details"][0]["min_recall"] == 0.0
+    assert snap["details"][0]["batch_id"] == 3
+    assert snap["recall"]["count"] == 3
+    assert snap["recall"]["min"] == 0.0
 
 
 # ---- serving integration -------------------------------------------------

@@ -616,3 +616,60 @@ def test_summary_covering_invariants_under_mutation(rng):
                              store.cap)
     assert inv["radius_violation"] <= 1e-9
     assert inv["projection_violation"] <= 1e-9
+
+
+def test_pivot_live_undercount_and_threshold_soundness(rng):
+    """Per-pivot routing accounting under heavy deletes: the per-ball
+    live credits stay a *safe undercount* of true ball membership
+    (insert credits exactly one ball; delete debits every occupied
+    containing ball, so no ball is ever over-credited), per-shard
+    totals never exceed the live count, and the ball-granular
+    cumulative-live threshold inside route_shards stays sound — the
+    kept mask always contains every shard holding a true f64 top-l
+    winner, for every row."""
+    store = MutableStore(DIM, capacity_per_shard=M, axis_name="x",
+                         summary_pivots=4, staging_size=10 ** 9)
+    clusters = 2 * K
+    centers = rng.normal(scale=30.0, size=(clusters, DIM))
+    for c in range(clusters):
+        store.insert((centers[c]
+                      + rng.normal(size=(20, DIM))).astype(np.float32))
+    store.flush()
+
+    la = np.array([1, 8, 256, 40], np.int32)
+    for wave in range(3):
+        ids = store.live_arrays()[0]
+        store.delete(rng.permutation(ids)[: int(len(ids) * 0.45)])
+        store.insert((centers[rng.integers(0, clusters)]
+                      + rng.normal(size=(8, DIM))).astype(np.float32))
+        store.flush()
+        summ = store.summaries()
+        pts_, valid_ = store._pts, store._valid
+
+        # (a) undercount oracle, ball by ball
+        for j in range(K):
+            sl = slice(j * store.cap, (j + 1) * store.cap)
+            live_pts = pts_[sl][valid_[sl]].astype(np.float64)
+            assert (summ.pivot_live[j] >= 0).all()
+            assert summ.pivot_live[j].sum() <= valid_[sl].sum()
+            for p in range(int(summ.pivot_count[j])):
+                if len(live_pts):
+                    d = np.sqrt(((live_pts - summ.pivots[j, p]) ** 2)
+                                .sum(-1))
+                    r = summ.pivot_radii[j, p]
+                    true_in = int((d <= r * (1 + 1e-9) + 1e-9).sum())
+                else:
+                    true_in = 0
+                assert summ.pivot_live[j, p] <= true_in, (wave, j, p)
+
+        # (b) bound soundness: kept shards cover the true f64 winners
+        q = (centers[rng.integers(0, clusters, B)]
+             + rng.normal(size=(B, DIM))).astype(np.float32)
+        mask = route_shards(summ, q, la, slack=CONFIG.route_slack)
+        slots = np.flatnonzero(valid_)
+        for b_ in range(B):
+            d = ((pts_[slots].astype(np.float64)
+                  - q[b_].astype(np.float64)) ** 2).sum(-1)
+            top = slots[np.argsort(d, kind="stable")[:int(la[b_])]]
+            for shard in set(top // store.cap):
+                assert mask[b_, shard], (wave, b_, shard)
