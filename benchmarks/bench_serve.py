@@ -32,10 +32,18 @@ over identical points and an identical query stream, on the clustered
 AND the drifting workloads, with the recall floor and the >=3x
 candidate-reduction target *hard-asserted* (ISSUE 8 acceptance) — the
 ``index`` block of the JSON, re-checked offline by
-``benchmarks/check_obs.py``.  Emits CSV rows like every other bench
-module plus ``BENCH_serve.json`` with sustained queries/sec, p50/p99
-request latency, and mean rounds/messages/shards_touched per
-configuration.
+``benchmarks/check_obs.py``.  The operator layer (ISSUE 9) rides the
+same sections: the obs server runs a deliberately impossible latency
+SLO that must fire and clear (burn-rate engine, obs/slo.py), serves its
+metrics over an ephemeral HTTP endpoint whose Prometheus text is
+round-tripped and written to ``--prom-out``, the clustered approx arm
+attaches one query-explain report whose kept-bucket set must match the
+recomputed keep rule, and every run appends one stamped summary row to
+the tracked perf ledger (``--history``, benchmarks/perf_ledger.py) that
+``benchmarks/check_perf.py`` judges against a rolling baseline.  Emits
+CSV rows like every other bench module plus ``BENCH_serve.json`` with
+sustained queries/sec, p50/p99 request latency, and mean
+rounds/messages/shards_touched per configuration.
 
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src:. python benchmarks/bench_serve.py --out BENCH_serve.json
@@ -43,8 +51,10 @@ configuration.
 
 try:
     from benchmarks import common  # noqa: F401  (claims the 8-device mesh)
+    from benchmarks import perf_ledger
 except ImportError:  # run as a plain script: python benchmarks/bench_serve.py
     import common
+    import perf_ledger
 
 import argparse
 import json
@@ -348,7 +358,8 @@ def _forced_tiny_adaptive() -> dict:
     return out
 
 
-def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
+def _obs_section(bursts: int, per_shard: int, emit, trace_out=None,
+                 prom_out=None) -> dict:
     """Observability section (DESIGN.md §12): the flight recorder priced
     and proved on the serving plane.
 
@@ -366,6 +377,17 @@ def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
     tests/test_obs.py assert the contract+shadow zeros and the trace's
     well-formedness; the overhead guard lives in the test suite where
     it can retry, not here where one noisy CPU run would gate CI).
+
+    The same server also proves the operator layer end-to-end (ISSUE 9):
+    a deliberately impossible latency SLO (``slo_latency_p99_s=1e-6``)
+    makes every request a bad event, so the burn-rate engine must fire
+    during serving and clear once the fast window drains after quiesce —
+    the section asserts >= 1 alert fired AND cleared, and exports the
+    trace *after* the clear so the ``slo.alert`` span lands in the
+    artifact.  The metrics endpoint is bound on an ephemeral port
+    (``obs_http_port=-1``) and the Prometheus text actually served over
+    HTTP is round-tripped through ``parse_prometheus_text`` and written
+    to ``--prom-out`` for the ``check_obs`` gate.
     """
     from repro.data import sharded_clusters
     from repro.runtime import KnnServer
@@ -380,7 +402,12 @@ def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
         retighten_every=4, split_radius_factor=1.2,
         maintenance="background",
         store_capacity_per_shard=cap, store_staging_size=staging,
-        obs_trace=True, obs_audit_every=4)
+        obs_trace=True, obs_audit_every=4,
+        # forced-breach SLO: no request finishes in a microsecond, so
+        # every event is bad and the alert must fire mid-serving
+        slo_latency_p99_s=1e-6, slo_fast_window_s=0.4,
+        slo_slow_window_s=1.2,
+        obs_http_port=-1)
     store = MutableStore(DIM, mesh=common.kmachine_mesh(), axis_name="x",
                          **cfg.store_kwargs())
     order = np.random.default_rng(29).permutation(len(pts))
@@ -443,10 +470,46 @@ def _obs_section(bursts: int, per_shard: int, emit, trace_out=None) -> dict:
     }
     section.update(common.obs_section(srv))
     assert section["contract_checks"] > 0 and section["shadow_checks"] > 0
+
+    # SLO verdict: the impossible latency objective must have fired
+    # during serving, and must clear once the fast window drains after
+    # quiesce.  Poll obs_snapshot — every snapshot re-evaluates, so the
+    # clear lands as soon as the window ages out.
+    slo_deadline = time.perf_counter() + 15
+    slo = srv.obs_snapshot()["slo"]
+    while (slo["alerts_cleared"] == 0
+           and time.perf_counter() < slo_deadline):
+        time.sleep(0.1)
+        slo = srv.obs_snapshot()["slo"]
+    assert slo["alerts_fired"] >= 1, "forced-breach SLO never fired"
+    assert slo["alerts_cleared"] >= 1, "forced-breach SLO never cleared"
+    assert not slo["firing"], f"still firing after drain: {slo['firing']}"
+    section["slo"] = slo
+
+    # Prometheus exposition fetched over the wire from the ephemeral
+    # endpoint this server bound, round-tripped through the strict
+    # parser, and written out for the check_obs gate.
+    from urllib.request import urlopen
+    from repro.obs.export import parse_prometheus_text
+    with urlopen(f"http://127.0.0.1:{srv._http.port}/metrics",
+                 timeout=10) as resp:
+        prom_text = resp.read().decode("utf-8")
+    parsed = parse_prometheus_text(prom_text)
+    assert "knn_serve_latency_s" in parsed, sorted(parsed)[:8]
+    section["prometheus"] = {"metrics": len(parsed)}
+    if prom_out:
+        with open(prom_out, "w") as f:
+            f.write(prom_text)
+        section["prometheus"]["path"] = prom_out
+        emit(f"# wrote {prom_out} ({len(parsed)} metrics)")
+
+    # Export the trace AFTER the clear so the slo.fire / slo.clear /
+    # slo.alert spans are part of the artifact check_obs validates.
     if trace_out:
         n_spans = srv.export_trace_jsonl(trace_out)
         section["trace_out"] = {"path": trace_out, "spans": n_spans}
         emit(f"# wrote {trace_out} ({n_spans} spans)")
+    srv.close()
 
     # Instrumented-vs-off overhead A/B (static selection server, the
     # simplest repeatable workload): arm "on" = tracing + contract
@@ -594,6 +657,23 @@ def _index_section(bursts: int, per_shard: int, per_step: int, steps: int,
         f"clustered candidate reduction {arm['candidate_reduction']:.2f}x "
         f"below the 3x target")
     assert arm["shadow"]["divergences"] == 0, arm["shadow"]
+
+    # Operator-layer demo (ISSUE 9): the last routed approx query of
+    # the recall sweep explains itself, and the report's kept-bucket
+    # set must agree with a from-scratch recompute of the keep rule
+    # (ExplainRecord.build re-runs routing_detail + bucket_keep on the
+    # captured snapshot and compares — ``kept_matches_recompute``).
+    rep = sa.explain_last(1)[0]
+    assert rep["schema"] == "knn.explain.v1", rep["schema"]
+    assert rep["routing"]["mode"] == "pruned", rep["routing"]
+    assert rep["request"]["recall_mode"] == "approx", rep["request"]
+    assert rep["index"]["enabled"], rep["index"]
+    assert rep["index"]["kept_matches_recompute"], rep["index"]
+    section["explain"] = rep
+    emit(f"# explain: row {rep['request']['row']} kept "
+         f"{len(rep['routing']['kept_shards'])}/{common.K_MACHINES} shards, "
+         f"{len(rep['index']['kept_buckets'])} buckets, recompute match")
+
     emit(common.row(
         "serve_index_clustered_approx", 1e6 / arm["approx"]["qps"],
         f"recall_min={arm['recall_min']:.3f} "
@@ -690,9 +770,12 @@ def _drive(srv, rng, bursts: int, centers=None) -> dict:
 
 
 def run(emit=print, out_path=None, smoke: bool = False,
-        trace_out=None) -> dict:
+        trace_out=None, prom_out=None, history=None) -> dict:
     """``smoke=True`` is the CI dry-run: tiny store, few bursts — proves
-    the script end-to-end (build, warmup, drive, JSON emit) in seconds."""
+    the script end-to-end (build, warmup, drive, JSON emit) in seconds.
+    ``history`` names the perf ledger (BENCH_history.jsonl) this run
+    appends its summary row to; ``benchmarks/check_perf.py`` judges the
+    row against the rolling baseline of prior rows."""
     n_points = common.K_MACHINES * 256 if smoke else N_POINTS
     bursts = 4 if smoke else BURSTS
     rng = np.random.default_rng(7)
@@ -747,7 +830,7 @@ def run(emit=print, out_path=None, smoke: bool = False,
     # exported flight-recorder trace + the instrumented-vs-off A/B
     report["obs"] = _obs_section(
         bursts, per_shard=64 if smoke else 512, emit=emit,
-        trace_out=trace_out)
+        trace_out=trace_out, prom_out=prom_out)
     # in-shard index A/B (store/index.py): exact vs approx on the
     # clustered and drifting workloads, recall floor + 3x candidate
     # reduction hard-asserted (ISSUE 8 acceptance)
@@ -763,6 +846,11 @@ def run(emit=print, out_path=None, smoke: bool = False,
         with open(out_path, "w") as f:
             json.dump(report, f, indent=2)
         emit(f"# wrote {out_path}")
+    if history:
+        row = perf_ledger.summarize(report)
+        perf_ledger.append_row(row, history)
+        emit(f"# appended perf row ({row['git_commit']}, "
+             f"smoke={row['smoke']}) to {history}")
     return report
 
 
@@ -774,10 +862,18 @@ def main():
     ap.add_argument("--trace-out", default="BENCH_trace.jsonl",
                     help="flight-recorder span export (JSONL; "
                          "benchmarks/check_obs.py validates it)")
+    ap.add_argument("--prom-out", default="BENCH_prom.txt",
+                    help="Prometheus text exposition fetched from the "
+                         "obs HTTP endpoint during the obs section")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="perf ledger to append this run's summary row "
+                         "to ('' disables; benchmarks/check_perf.py "
+                         "judges the row)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     run(emit=print, out_path=args.out, smoke=args.smoke,
-        trace_out=args.trace_out)
+        trace_out=args.trace_out, prom_out=args.prom_out,
+        history=args.history)
 
 
 if __name__ == "__main__":

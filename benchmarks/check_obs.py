@@ -16,13 +16,21 @@ flight-recorder JSONL — against the PR's acceptance bar:
     query (a request tree with queued + serve children AND a dispatch
     tree with snapshot, route, kernel, and resolve stages) racing at
     least one committed maintenance cycle;
-  * the per-stage latency breakdown is present (p50/p99 per stage).
+  * the per-stage latency breakdown is present (p50/p99 per stage);
+  * the operator layer (ISSUE 9): the ``index`` section carries a
+    well-formed query-explain report for a routed approx query whose
+    kept-bucket set matched the recomputed keep rule; the ``obs``
+    section's forced-breach SLO fired AND cleared (with the slo.* spans
+    present in the trace artifact); and the ``--prom`` Prometheus text
+    file parses under the strict round-trip parser with the serving
+    histograms present and internally consistent.
 
 Pure stdlib + the obs package; exits non-zero with a named reason on the
 first failed check.
 
   PYTHONPATH=src:. python benchmarks/check_obs.py \
-      --bench /tmp/BENCH_serve_smoke.json --trace /tmp/BENCH_trace.jsonl
+      --bench /tmp/BENCH_serve_smoke.json --trace /tmp/BENCH_trace.jsonl \
+      --prom /tmp/BENCH_prom_smoke.txt
 """
 
 import argparse
@@ -30,6 +38,8 @@ import collections
 import json
 import sys
 
+from repro.obs.explain import SCHEMA as EXPLAIN_SCHEMA
+from repro.obs.export import parse_prometheus_text
 from repro.obs.trace import build_trees
 
 
@@ -104,6 +114,91 @@ def check_index(path: str):
           f"(floor {floor})")
 
 
+def check_explain(path: str):
+    """The query-explain acceptance (ISSUE 9): the clustered approx arm
+    must carry one well-formed report for a routed approx query, and
+    the report itself must attest that its kept-bucket set matched the
+    from-scratch recompute of the keep rule (the bench asserts this
+    inline; the gate re-reads it from the artifact)."""
+    with open(path) as f:
+        report = json.load(f)
+    rep = report.get("index", {}).get("explain")
+    if not rep:
+        fail(f"{path} index section has no 'explain' report")
+    if rep.get("schema") != EXPLAIN_SCHEMA:
+        fail(f"explain schema {rep.get('schema')!r} != {EXPLAIN_SCHEMA!r}")
+    for key in ("batch", "request", "routing", "index", "timings",
+                "maintenance"):
+        if key not in rep:
+            fail(f"explain report missing the {key!r} section")
+    if rep["request"]["recall_mode"] != "approx":
+        fail("explain report is not for an approx query")
+    if rep["routing"]["mode"] != "pruned":
+        fail("explain report is not for a routed (pruned) query")
+    shards = rep["routing"]["shards"]
+    kept = [s["shard"] for s in shards if s["kept"]]
+    if kept != rep["routing"]["kept_shards"]:
+        fail(f"explain routing inconsistent: per-shard rows keep {kept}, "
+             f"kept_shards says {rep['routing']['kept_shards']}")
+    for s in shards:
+        if s["kept"] and not (s["lower"] <= rep["routing"]["threshold_eff"]):
+            fail(f"explain shard {s['shard']}: kept but lower bound "
+                 f"{s['lower']} above threshold_eff")
+    if not rep["index"]["enabled"]:
+        fail("explain report has the index tier disabled")
+    if not rep["index"]["kept_matches_recompute"]:
+        fail("explain kept-bucket set does not match the recomputed "
+             "keep rule")
+    print(f"check_obs: explain ok — row {rep['request']['row']} "
+          f"(l={rep['request']['l']}) kept shards "
+          f"{rep['routing']['kept_shards']}, "
+          f"{len(rep['index']['kept_buckets'])} buckets, recompute match")
+
+
+def check_slo(path: str):
+    """The forced-breach SLO scenario: the bench ran an impossible
+    latency objective, so the artifact must show the alert both fired
+    and cleared, with nothing left firing."""
+    with open(path) as f:
+        report = json.load(f)
+    slo = report.get("obs", {}).get("slo")
+    if not slo:
+        fail(f"{path} obs section has no 'slo' snapshot")
+    if slo["alerts_fired"] < 1:
+        fail("forced-breach SLO never fired")
+    if slo["alerts_cleared"] < 1:
+        fail("forced-breach SLO never cleared")
+    if slo["firing"]:
+        fail(f"SLO still firing at export time: {slo['firing']}")
+    if "latency_p99" not in slo["objectives"]:
+        fail("latency_p99 objective missing from the SLO snapshot")
+    print(f"check_obs: slo ok — {slo['alerts_fired']} fired / "
+          f"{slo['alerts_cleared']} cleared, none firing")
+
+
+def check_prom(path: str):
+    """The exposition artifact: strict-parse the Prometheus text the
+    bench fetched over HTTP (the parser enforces TYPE lines, strictly
+    increasing le bounds, cumulative monotonicity, and +Inf == count)
+    and require the serving histograms."""
+    with open(path) as f:
+        text = f.read()
+    try:
+        parsed = parse_prometheus_text(text)
+    except ValueError as exc:
+        fail(f"{path} is not valid Prometheus text exposition: {exc}")
+    if not parsed:
+        fail(f"{path} parsed to zero metrics")
+    for required in ("knn_serve_latency_s", "knn_serve_kernel_s"):
+        payload = parsed.get(required)
+        if not payload:
+            fail(f"prometheus export missing {required}")
+        if payload.get("type") == "histogram" and payload["count"] <= 0:
+            fail(f"prometheus histogram {required} is empty")
+    print(f"check_obs: prom ok — {len(parsed)} metrics parsed from "
+          f"{path}")
+
+
 def check_trace(path: str):
     records = []
     with open(path) as f:
@@ -146,19 +241,30 @@ def check_trace(path: str):
         fail("no committed maintenance cycle in the trace window")
     if by_name["maint.cycle"] == 0 or by_name["maint.prepare"] == 0:
         fail("maintenance cycle/prepare spans missing")
+    # the bench exports the trace after the forced-breach SLO cleared,
+    # so the fire/clear transitions and the closed alert interval must
+    # all be present as spans
+    for slo_span in ("slo.fire", "slo.clear", "slo.alert"):
+        if by_name[slo_span] == 0:
+            fail(f"SLO span {slo_span!r} missing from the trace export")
     print(f"check_obs: trace ok — {len(records)} spans, {len(trees)} trees, "
           f"{complete_requests} complete request trees, "
           f"{complete_dispatches} complete dispatch trees, "
-          f"{by_name['maint.commit']} maintenance commits")
+          f"{by_name['maint.commit']} maintenance commits, "
+          f"{by_name['slo.alert']} slo alert intervals")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="/tmp/BENCH_serve_smoke.json")
     ap.add_argument("--trace", default="/tmp/BENCH_trace_smoke.jsonl")
+    ap.add_argument("--prom", default="/tmp/BENCH_prom_smoke.txt")
     args = ap.parse_args()
     check_bench(args.bench)
     check_index(args.bench)
+    check_explain(args.bench)
+    check_slo(args.bench)
+    check_prom(args.prom)
     check_trace(args.trace)
     print("check_obs: PASS")
 

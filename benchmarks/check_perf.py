@@ -1,0 +1,184 @@
+"""Bench-regression sentinel (make bench-smoke / obs-smoke gate).
+
+Compares the bench report a run just produced against the rolling
+baseline in the tracked ``BENCH_history.jsonl`` ledger (median of the
+last 5 rows with the same smoke flag — see benchmarks/perf_ledger.py)
+and fails CI when the run regresses past noise-tolerant bounds:
+
+  * p50/p99 latency may grow to at most 1.6x baseline + 2.0 ms — wide
+    enough that shared-runner jitter never trips it, tight enough that
+    an injected 2x p99 regression demonstrably fails (--self-test
+    proves both directions on a synthetic ledger);
+  * throughput (selection qps and the routed arm's qps) may drop to at
+    most baseline / 1.6;
+  * routing efficiency may decay by at most one extra touched shard,
+    and the approximate tier's candidate fraction by at most
+    1.5x + 0.05 absolute;
+  * measured recall_min may not fall more than 0.02 below baseline
+    (the bench already hard-asserts the configured floor inline);
+  * contract violations and shadow divergences must be exactly zero —
+    correctness counters get no noise allowance.
+
+A run with no prior same-flag rows passes as a bootstrap (the seeded
+ledger on main means CI always has a baseline).  Pure stdlib — this
+gate must run even where jax cannot import.
+
+  python benchmarks/check_perf.py --report /tmp/BENCH_serve_smoke.json \
+      --history BENCH_history.jsonl
+  python benchmarks/check_perf.py --self-test
+"""
+
+import argparse
+import json
+import sys
+
+try:
+    from benchmarks import perf_ledger
+except ImportError:
+    import perf_ledger
+
+# Multiplicative headroom on latency bounds / throughput floors, and
+# the absolute slack (ms) that keeps tiny-baseline smoke runs from
+# flapping on scheduler noise.
+LATENCY_FACTOR = 1.6
+LATENCY_SLACK_MS = 2.0
+THROUGHPUT_FACTOR = 1.6
+SHARDS_SLACK = 1.0
+CAND_FACTOR = 1.5
+CAND_SLACK = 0.05
+RECALL_SLACK = 0.02
+
+
+def _check(row: dict, base: dict) -> list:
+    """All bound violations of ``row`` against ``base`` (empty = pass)."""
+    bad = []
+
+    def upper(field, bound, label):
+        v = row.get(field)
+        if v is None or base.get(field) is None:
+            return
+        if float(v) > bound:
+            bad.append(f"{field}: {float(v):.4g} > {label} = {bound:.4g} "
+                       f"(baseline {base[field]:.4g})")
+
+    def lower(field, bound, label):
+        v = row.get(field)
+        if v is None or base.get(field) is None:
+            return
+        if float(v) < bound:
+            bad.append(f"{field}: {float(v):.4g} < {label} = {bound:.4g} "
+                       f"(baseline {base[field]:.4g})")
+
+    for field in ("p50_ms", "p99_ms"):
+        if base.get(field) is not None:
+            upper(field, base[field] * LATENCY_FACTOR + LATENCY_SLACK_MS,
+                  f"{LATENCY_FACTOR}x + {LATENCY_SLACK_MS}ms")
+    for field in ("qps", "routed_qps"):
+        if base.get(field) is not None:
+            lower(field, base[field] / THROUGHPUT_FACTOR,
+                  f"baseline / {THROUGHPUT_FACTOR}")
+    if base.get("shards_touched") is not None:
+        upper("shards_touched", base["shards_touched"] + SHARDS_SLACK,
+              f"baseline + {SHARDS_SLACK}")
+    if base.get("candidate_fraction") is not None:
+        upper("candidate_fraction",
+              base["candidate_fraction"] * CAND_FACTOR + CAND_SLACK,
+              f"{CAND_FACTOR}x + {CAND_SLACK}")
+    if base.get("recall_min") is not None:
+        lower("recall_min", base["recall_min"] - RECALL_SLACK,
+              f"baseline - {RECALL_SLACK}")
+    for field in ("contract_violations", "shadow_divergences"):
+        v = row.get(field)
+        if v is not None and int(v) != 0:
+            bad.append(f"{field}: {v} != 0 (correctness counters get "
+                       f"no noise allowance)")
+    return bad
+
+
+def check(row: dict, history: list, *, window: int = 5) -> int:
+    """Print the verdict for one ledger row; 0 = pass, 1 = regression."""
+    base = perf_ledger.baseline(history, smoke=row.get("smoke", False),
+                                window=window)
+    flavor = "smoke" if row.get("smoke") else "full"
+    if base is None:
+        print(f"check_perf: PASS (bootstrap — no prior {flavor} rows "
+              f"in the ledger)")
+        return 0
+    bad = _check(row, base)
+    if bad:
+        print(f"check_perf: FAIL vs {base['rows']}-row {flavor} baseline "
+              f"(commits {', '.join(base['commits'])}):")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print(f"check_perf: PASS vs {base['rows']}-row {flavor} baseline — "
+          f"p99 {row.get('p99_ms'):.2f}ms (baseline "
+          f"{base['p99_ms']:.2f}ms), qps {row.get('qps'):.0f} "
+          f"(baseline {base['qps']:.0f})")
+    return 0
+
+
+def self_test() -> int:
+    """Prove the sentinel in both directions on a synthetic ledger: an
+    unregressed row passes, and an injected 2x p99 regression fails."""
+    base_row = {
+        "schema": perf_ledger.SCHEMA, "git_commit": "selftest",
+        "smoke": True, "qps": 120.0, "p50_ms": 8.0, "p99_ms": 20.0,
+        "routed_qps": 90.0, "shards_touched": 2.5,
+        "candidate_fraction": 0.25, "recall_min": 0.99,
+        "contract_violations": 0, "shadow_divergences": 0,
+    }
+    history = [dict(base_row) for _ in range(5)]
+
+    ok_row = dict(base_row, p99_ms=24.0, qps=100.0)  # in-noise drift
+    if check(ok_row, history) != 0:
+        print("check_perf: SELF-TEST FAIL — in-noise row was rejected")
+        return 1
+
+    bad_row = dict(base_row, p99_ms=40.0)  # injected 2x p99 regression
+    if check(bad_row, history) == 0:
+        print("check_perf: SELF-TEST FAIL — 2x p99 regression passed")
+        return 1
+
+    slow_row = dict(base_row, qps=50.0)  # >1.6x throughput collapse
+    if check(slow_row, history) == 0:
+        print("check_perf: SELF-TEST FAIL — qps collapse passed")
+        return 1
+
+    dirty_row = dict(base_row, contract_violations=1)
+    if check(dirty_row, history) == 0:
+        print("check_perf: SELF-TEST FAIL — contract violation passed")
+        return 1
+
+    print("check_perf: SELF-TEST PASS — clean row accepted; 2x p99, "
+          "qps collapse, and contract violation all rejected")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", default="/tmp/BENCH_serve_smoke.json",
+                    help="bench_serve JSON report to judge")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="tracked perf ledger to baseline against")
+    ap.add_argument("--window", type=int, default=5,
+                    help="rows per rolling baseline")
+    ap.add_argument("--self-test", action="store_true",
+                    help="prove the bounds on a synthetic ledger")
+    args = ap.parse_args()
+    if args.self_test:
+        sys.exit(self_test())
+    with open(args.report) as f:
+        report = json.load(f)
+    row = perf_ledger.summarize(report)
+    history = perf_ledger.load_history(args.history)
+    # The run that produced --report usually appended its own row
+    # already; judge it against the rows that precede it.
+    if history and history[-1].get("timestamp") == row.get("timestamp") \
+            and history[-1].get("git_commit") == row.get("git_commit"):
+        history = history[:-1]
+    sys.exit(check(row, history, window=args.window))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Perf-regression ledger: the repo's tracked bench trajectory.
+
+``BENCH_serve.json`` is overwritten by every run — before this module
+the repo had *no* memory of whether a commit made serving worse.  Now
+every ``bench_serve`` run (smoke and full-size) appends one stamped
+summary row to ``BENCH_history.jsonl`` — a tracked, append-only ledger
+keyed by ``git_commit`` — and ``benchmarks/check_perf.py`` compares the
+current run against a rolling baseline of prior rows with
+noise-tolerant bounds, failing CI on a regression.
+
+A row is deliberately small and flat (one JSON object per line): the
+headline qps/p50/p99 of the selection sampler, the routed arm's qps and
+touched-shard count, the approximate tier's candidate fraction and
+measured recall floor, and the contract/shadow audit counters.  Smoke
+and full-size rows carry a ``smoke`` flag and are baselined separately
+— their absolute numbers differ by an order of magnitude.
+
+Stdlib + nothing: this module is imported by CI gates that must not
+depend on jax being importable.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+from typing import Optional
+
+SCHEMA = "knn.perf.v1"
+
+# The numeric fields a baseline is computed over (median per field
+# across the window of prior same-flag rows).
+NUMERIC_FIELDS = (
+    "qps", "p50_ms", "p99_ms", "routed_qps", "shards_touched",
+    "candidate_fraction", "recall_min",
+)
+
+
+def summarize(report: dict) -> dict:
+    """One ledger row from a full ``bench_serve`` report dict (the
+    ``BENCH_serve.json`` payload, after ``common.stamp``)."""
+    sel = report.get("selection", {})
+    pruned = report.get("routing", {}).get("pruned", {})
+    clustered = report.get("index", {}).get("clustered", {})
+    obs = report.get("obs", {})
+    meta = report.get("meta", {})
+    return {
+        "schema": SCHEMA,
+        "git_commit": meta.get("git_commit", "unknown"),
+        "timestamp": meta.get("timestamp", ""),
+        "jax_version": meta.get("jax_version", ""),
+        "smoke": bool(report.get("smoke", False)),
+        "n_points": report.get("n_points"),
+        "qps": sel.get("qps"),
+        "p50_ms": sel.get("p50_ms"),
+        "p99_ms": sel.get("p99_ms"),
+        "routed_qps": pruned.get("qps"),
+        "shards_touched": pruned.get("mean_shards_touched"),
+        "candidate_fraction": clustered.get("candidate_fraction_mean"),
+        "recall_min": clustered.get("recall_min"),
+        "contract_checks": obs.get("contract_checks"),
+        "contract_violations": obs.get("contract_violations"),
+        "shadow_checks": obs.get("shadow_checks"),
+        "shadow_divergences": obs.get("shadow_divergences"),
+    }
+
+
+def append_row(row: dict, path: str) -> None:
+    """Append one row to the JSONL ledger (created if absent)."""
+    with open(path, "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+
+
+def load_history(path: str) -> list:
+    """All ledger rows, oldest first; [] for a missing file.  A
+    malformed line raises — the ledger is tracked, corruption is a
+    repo bug, not an operational condition to paper over."""
+    try:
+        f = open(path)
+    except FileNotFoundError:
+        return []
+    with f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def baseline(history: list, *, smoke: bool,
+             window: int = 5) -> Optional[dict]:
+    """Rolling baseline: per-field median over the newest ``window``
+    rows with the same smoke flag.  None when no prior row matches
+    (bootstrap — the first run of a flavor has nothing to regress
+    against)."""
+    same = [r for r in history
+            if bool(r.get("smoke", False)) == bool(smoke)][-window:]
+    if not same:
+        return None
+    base = {"rows": len(same),
+            "commits": [r.get("git_commit", "unknown") for r in same]}
+    for field in NUMERIC_FIELDS:
+        vals = [float(r[field]) for r in same
+                if r.get(field) is not None]
+        base[field] = statistics.median(vals) if vals else None
+    return base

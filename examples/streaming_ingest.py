@@ -17,7 +17,11 @@ pruned routing (Section 8) pays on the mutable store too:
      summaries, and the same queries now touch *fewer* shards — the
      locality win, shown end-to-end (shards_touched before vs after),
   5. run queries *concurrently* with an ingest thread: every request
-     resolves (epoch swaps drop nothing), spanning many generations.
+     resolves (epoch swaps drop nothing), spanning many generations,
+  6. finale (the operator layer, DESIGN.md §14): the declared latency
+     SLO's burn-rate snapshot and one per-query explain report — why
+     the last query touched the shards it touched, straight from
+     ``QueryResult.explain()``.
 
   PYTHONPATH=src python examples/streaming_ingest.py
 """
@@ -57,7 +61,8 @@ def main():
                          store_compact_imbalance_frac=0.25,
                          route="pruned",            # summary-pruned routing
                          placement="affinity",      # locality-aware inserts
-                         redeal="proximity")        # cluster-coherent repack
+                         redeal="proximity",        # cluster-coherent repack
+                         slo_latency_p99_s=0.5)     # a declared promise
     store = MutableStore(DIM, axis_name="machines", **cfg.store_kwargs())
     server = KnnServer(store=store, cfg=cfg)
     server.warmup()
@@ -133,6 +138,30 @@ def main():
           f"(zero dropped by {max(gens) - min(gens)} epoch swaps)")
     print(f"final: generation {store.generation}, live {store.live_count}, "
           f"stats {store.stats}")
+
+    # -- 6. the operator layer: SLO burn rate + a query-explain report --
+    slo = server.obs_snapshot()["slo"]
+    lat = slo["objectives"]["latency_p99"]
+    print(f"slo latency_p99 <= {lat['bound']}s: "
+          f"burn fast/slow {lat['burn_fast']:.2f}/{lat['burn_slow']:.2f} "
+          f"over {lat['slow_events']} requests, "
+          f"{slo['alerts_fired']} alerts fired "
+          f"({len(slo['firing'])} firing now)")
+    rep = server.explain_last(1)[0]
+    kept = rep["routing"]["kept_shards"]
+    print(f"explain (last query, batch {rep['batch']['id']} @ generation "
+          f"{rep['batch']['generation']}):")
+    print(f"  routing [{rep['routing']['mode']}/"
+          f"{rep['routing']['compute']}]: kept shards {kept} of {K} "
+          f"(threshold_eff {rep['routing']['threshold_eff']:.1f})")
+    for s in rep["routing"]["shards"]:
+        mark = "KEEP " if s["kept"] else "prune"
+        print(f"    shard {s['shard']}: {mark} lower {s['lower']:.1f} "
+              f"upper {s['upper']:.1f}")
+    print(f"  timings: queued {rep['timings']['queued_s'] * 1e3:.2f}ms, "
+          f"kernel {rep['timings']['kernel_s'] * 1e3:.2f}ms, "
+          f"total {rep['timings']['latency_s'] * 1e3:.2f}ms; "
+          f"maintenance raced: {rep['maintenance']['raced_commit']}")
 
 
 if __name__ == "__main__":

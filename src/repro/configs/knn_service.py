@@ -171,6 +171,39 @@ class KnnServiceConfig:
     # round/message contract auditor is always on (it is arithmetic on
     # numbers the server already computes).
     obs_audit_every: int = 0
+    # ---- SLO engine (obs/slo.py) — all objectives opt-in ----------------
+    # Each knob declares one promise; leaving it at its zero default
+    # leaves that objective un-monitored, and with no objective declared
+    # the server constructs no engine at all.  Fired/cleared alerts
+    # surface as slo.* spans in the trace ring, slo.alerts_* counters in
+    # the registry, and obs_snapshot()["slo"].
+    # Per-request end-to-end latency promise (seconds; the p99 framing:
+    # with the default 1% budget, the burn rate is 1.0 exactly when 1%
+    # of windowed requests exceed the bound).  0 = off.
+    slo_latency_p99_s: float = 0.0
+    # Shadow-audited minimum recall@l promise (lower bound; only
+    # meaningful with obs_audit_every > 0 on an approx server).  0 = off.
+    slo_recall_floor: float = 0.0
+    # Answer-generation staleness promise: how many generations behind
+    # the store head an answer may be computed (epoch-swapped serving is
+    # normally 0-1 behind).  0 = off.
+    slo_staleness_generations: int = 0
+    # Promise that the Theorem-1 round/message envelope never trips
+    # (any contract-audit violation is a bad event).  False = off.
+    slo_contract_violations: bool = False
+    # Multi-window burn-rate mechanics: an alert fires when the bad-
+    # event fraction over BOTH windows exceeds burn_threshold × budget,
+    # and clears when the fast window's burn drops back under threshold.
+    slo_fast_window_s: float = 60.0
+    slo_slow_window_s: float = 300.0
+    slo_burn_threshold: float = 1.0
+    slo_budget: float = 0.01
+    # ---- metrics exposition endpoint (obs/export.py) --------------------
+    # >0: serve Prometheus text (/metrics), OTLP-ish JSON
+    # (/metrics.json), and the full obs snapshot (/obs) on this
+    # localhost port via a stdlib ThreadingHTTPServer; -1: bind an
+    # ephemeral port (tests); 0 (default): no endpoint.
+    obs_http_port: int = 0
 
     def replace(self, **kw) -> "KnnServiceConfig":
         return dataclasses.replace(self, **kw)

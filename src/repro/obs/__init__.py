@@ -25,15 +25,19 @@ are cheap and every consumer of ``snapshot()`` expects them).
 from __future__ import annotations
 
 from repro.obs.audit import ContractAuditor, ShadowAuditor
+from repro.obs.explain import BatchCapture, ExplainRecord
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
-                               default_registry)
+                               Window, default_registry)
+from repro.obs.slo import SloEngine, SloObjective
 from repro.obs.trace import (NULL_TRACER, NullTracer, Span, Tracer,
                              build_trees)
 
 __all__ = [
     "ObsPlane", "Tracer", "NullTracer", "NULL_TRACER", "Span",
-    "build_trees", "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "default_registry", "ContractAuditor", "ShadowAuditor",
+    "build_trees", "Counter", "Gauge", "Histogram", "Window",
+    "MetricsRegistry", "default_registry", "ContractAuditor",
+    "ShadowAuditor", "BatchCapture", "ExplainRecord", "SloEngine",
+    "SloObjective",
 ]
 
 

@@ -154,6 +154,7 @@ class ShadowAuditor:
         self._divergences = registry.counter("audit.shadow.divergences")
         self._recall = (registry.histogram("audit.shadow.recall")
                         if mode == "recall" else None)
+        self.last_min_recall: Optional[float] = None
         self.details: list = []
 
     def due(self) -> bool:
@@ -179,6 +180,7 @@ class ShadowAuditor:
         else:
             min_recall = self._min_recall(served_ids, exact_i)
             self._recall.observe(min_recall)
+            self.last_min_recall = min_recall
             ok = min_recall >= self.floor
             detail["min_recall"] = min_recall
         self._checks.inc()

@@ -31,6 +31,8 @@ from __future__ import annotations
 import json
 import math
 import threading
+import time
+from collections import deque
 from typing import Optional
 
 GROWTH = 2.0 ** (1.0 / 16.0)
@@ -124,6 +126,18 @@ class Histogram:
                 return min(max(mid, self.min), self.max)
         return self.max
 
+    def bucket_counts(self) -> tuple:
+        """``([(upper_edge, count), ...] ascending, underflow)`` — the raw
+        geometric bucket layout for the exposition exporters
+        (obs/export.py turns these into cumulative ``le`` buckets).
+        ``upper_edge`` is the bucket's exclusive-ish upper boundary
+        ``GROWTH**(idx+1)``; the underflow count holds observations
+        <= 0, which sort below every positive edge."""
+        with self._lock:
+            edges = [(math.exp((idx + 1) * _LOG_G), c)
+                     for idx, c in sorted(self._buckets.items())]
+            return edges, self._underflow
+
     def snapshot(self) -> dict:
         with self._lock:
             if self.count == 0:
@@ -145,6 +159,84 @@ class Histogram:
                 "p90": self._quantile_locked(0.90),
                 "p99": self._quantile_locked(0.99),
             }
+
+
+class Window:
+    """Sliding *time*-window series — the registry's fourth metric type,
+    added for the SLO engine (obs/slo.py).
+
+    A histogram aggregates forever; an SLO burn rate is a statement about
+    the last N seconds.  A Window keeps raw ``(t, v)`` observations in a
+    bounded deque (age- and length-trimmed on every write, so memory is
+    O(max_len) regardless of traffic) and answers *windowed* reads:
+    count/sum/min/max/quantile over exactly the observations younger than
+    ``window_s``.  Reads sort the windowed slice at call time — windows
+    are bounded and reads happen once per SLO evaluation, not per
+    request, so O(w log w) at read beats any per-observe bookkeeping.
+
+    Timestamps are ``time.monotonic()`` floats; pass ``t=``/``now=``
+    explicitly to replay a synthetic stream in tests (the SLO burn-rate
+    units drive a fake clock through here).
+    """
+
+    __slots__ = ("_lock", "_events", "max_age_s", "max_len", "count",
+                 "total")
+
+    def __init__(self, max_age_s: float = 900.0, max_len: int = 32768):
+        self._lock = threading.Lock()
+        self._events: deque = deque()       # (t, v), ascending t
+        self.max_age_s = float(max_age_s)
+        self.max_len = int(max_len)
+        self.count = 0                      # lifetime observations
+        self.total = 0.0
+
+    def observe(self, v: float, t: Optional[float] = None) -> None:
+        t = time.monotonic() if t is None else float(t)
+        v = float(v)
+        with self._lock:
+            self.count += 1
+            self.total += v
+            self._events.append((t, v))
+            self._trim_locked(t)
+
+    def _trim_locked(self, now: float) -> None:
+        horizon = now - self.max_age_s
+        ev = self._events
+        while ev and (ev[0][0] < horizon or len(ev) > self.max_len):
+            ev.popleft()
+
+    def _window_values(self, window_s: float, now: Optional[float]):
+        now = time.monotonic() if now is None else float(now)
+        horizon = now - float(window_s)
+        with self._lock:
+            return [v for (t, v) in self._events if t >= horizon]
+
+    def window(self, window_s: float, now: Optional[float] = None) -> dict:
+        """Aggregates over observations younger than ``window_s``; the
+        empty window returns count 0 and NaN extremes (never ±inf)."""
+        vals = self._window_values(window_s, now)
+        if not vals:
+            return {"count": 0, "sum": 0.0, "mean": math.nan,
+                    "min": math.nan, "max": math.nan}
+        return {"count": len(vals), "sum": float(sum(vals)),
+                "mean": float(sum(vals)) / len(vals),
+                "min": min(vals), "max": max(vals)}
+
+    def quantile(self, q: float, window_s: float,
+                 now: Optional[float] = None) -> float:
+        """Exact nearest-rank q-quantile of the windowed observations
+        (sorted at read time; NaN when the window is empty)."""
+        vals = sorted(self._window_values(window_s, now))
+        if not vals:
+            return math.nan
+        rank = min(max(int(math.ceil(q * len(vals))), 1), len(vals))
+        return vals[rank - 1]
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {"count": self.count, "sum": self.total,
+                    "retained": len(self._events),
+                    "max_age_s": self.max_age_s}
 
 
 class MetricsRegistry:
@@ -181,6 +273,16 @@ class MetricsRegistry:
 
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
+
+    def window(self, name: str) -> Window:
+        return self._get(name, Window)
+
+    def items(self) -> list:
+        """Sorted ``(name, metric object)`` pairs — the exporter surface
+        (obs/export.py needs the live objects for histogram bucket
+        layout, not just ``snapshot()``'s quantile digest)."""
+        with self._lock:
+            return sorted(self._metrics.items())
 
     def get(self, name: str):
         """The metric object, or None (read-only peek; no create)."""

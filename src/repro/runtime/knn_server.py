@@ -92,6 +92,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import NamedTuple, Optional
 
@@ -104,7 +105,9 @@ from repro.configs.knn_service import CONFIG, KnnServiceConfig
 from repro.core import knn as knn_mod
 from repro.kernels import ops as kops
 from repro.kernels import routing as routing_mod
-from repro.obs import ContractAuditor, ObsPlane, ShadowAuditor
+from repro.obs import (BatchCapture, ContractAuditor, ExplainRecord,
+                       ObsPlane, ShadowAuditor, SloEngine)
+from repro.obs.export import ObsHttpServer
 from repro.obs.metrics import default_registry
 from repro.parallel.compat import make_mesh, shard_map
 from repro.store import index as index_mod
@@ -164,6 +167,16 @@ class QueryResult(NamedTuple):
     generation: int = 0    # store epoch the answer was computed against
     shards_touched: int = -1   # carrying batch's touched-shard count
     recall_mode: str = "exact"   # "exact" | "approx" (bucket index used)
+    explain_ref: object = None   # ExplainRecord handle (obs/explain.py)
+
+    def explain(self) -> Optional[dict]:
+        """The per-query explain report (obs/explain.py SCHEMA):
+        per-shard routing bounds and threshold, per-bucket keep
+        decisions, stage timings, and any maintenance commit that raced
+        the request — assembled lazily on first call from the dispatch's
+        cheap capture, cached after.  None for results constructed
+        without a capture (hand-built in tests)."""
+        return None if self.explain_ref is None else self.explain_ref.build()
 
 
 @dataclasses.dataclass
@@ -437,6 +450,24 @@ class KnnServer:
             floor=cfg.recall_floor)
             if cfg.obs_audit_every > 0 else None)
         self._env_by_bucket = dict(zip(cfg.bucket_sizes, self.envelopes))
+        # ---- operator layer (obs/explain.py, obs/slo.py, obs/export.py,
+        # DESIGN.md §14) ----
+        # Explain captures are always on: per dispatch they cost one
+        # small object of references to things the dispatch already
+        # holds; the report itself is assembled lazily.  The ring keeps
+        # the newest records for explain_last().
+        self._explains: deque = deque(maxlen=256)
+        # The SLO engine exists only when the config declares at least
+        # one objective (slo_* knobs); it shares this server's registry
+        # (event windows) and tracer (alert spans).
+        self._slo = SloEngine.from_config(cfg, reg, self.obs.tracer)
+        # Metrics exposition endpoint: >0 = that localhost port, -1 =
+        # ephemeral (tests), 0 = off.
+        self._http = None
+        if cfg.obs_http_port != 0:
+            self._http = ObsHttpServer(
+                reg, port=max(cfg.obs_http_port, 0),
+                snapshot_fn=self.obs_snapshot)
 
     # ---- compiled dispatch ---------------------------------------------
 
@@ -688,12 +719,32 @@ class KnnServer:
             "trace": self.obs.tracer.stats(),
             "audit": {"contract": self._contract.snapshot(),
                       "shadow": shadow},
+            "slo": (self._slo.snapshot() if self._slo is not None
+                    else {"objectives": {}, "firing": [],
+                          "alerts_fired": 0, "alerts_cleared": 0}),
             "placement": self.placement_stats(),
         }
+
+    def explain_last(self, n: int = 1) -> list[dict]:
+        """Built explain reports of the newest ``n`` resolved requests
+        (oldest of the n first) — the operator's "why was that one
+        slow/broad?" entry point; ``QueryResult.explain()`` answers the
+        same for a result you still hold."""
+        if n < 1:
+            return []
+        recs = list(self._explains)[-n:]
+        return [r.build() for r in recs]
 
     def export_trace_jsonl(self, path_or_file) -> int:
         """Dump the tracer ring as JSONL (0 spans when tracing is off)."""
         return self.obs.tracer.export_jsonl(path_or_file)
+
+    def close(self) -> None:
+        """Quiesce the micro-batcher and release the exposition endpoint
+        (idempotent; servers without an endpoint just stop())."""
+        self.stop()
+        if self._http is not None:
+            self._http.close()
 
     def warmup(self):
         """Compile every bucket shape up front (one trace per bucket)."""
@@ -819,12 +870,16 @@ class KnnServer:
             operands, generation, summ, idx = self._backing_arrays()
             if self._store is not None:
                 n_live = int(self._store.live_per_shard.sum())
+                maint0 = self._store.maint_commit_clock()
             else:
                 n_live = self.m_local * self.k
+                maint0 = (0, None)
             sspan.end(generation=generation, n_live=n_live)
             t_snap1 = time.perf_counter()
             t_route0 = t_route1 = None
             cand_frac = None       # search="approx" kept-live fraction
+            keep_arr = None        # (k, b) batch-union bucket keep
+            active_arr = None      # (k,) batch-union shard keep
             kattrs = dict(path=env["path"], l2_path=env["l2_path"],
                           fallback=env["fallback_reason"] or "")
             if self._route_fn is not None:
@@ -843,15 +898,17 @@ class KnnServer:
                     (d, i, iters, surv, active,
                      keep_any) = self._route_fn(operands, packed, *iops,
                                                 q, l_arr, key)
+                    keep_arr = np.asarray(keep_any).reshape(
+                        self.k, idx.num_buckets)
                     cand_frac = index_mod.candidate_fraction(
-                        idx, np.asarray(keep_any).reshape(
-                            self.k, idx.num_buckets))
+                        idx, keep_arr)
                 else:
                     d, i, iters, surv, active = self._route_fn(
                         operands, packed, q, l_arr, key)
                 d, i = np.asarray(d), np.asarray(i)
                 surv, iters = np.asarray(surv), int(iters)
-                touched = int(np.asarray(active).sum())
+                active_arr = np.asarray(active)
+                touched = int(active_arr.sum())
                 kspan.end(touched=touched)
                 t_kern1 = time.perf_counter()
                 tracer.record("route", t_kern0, t_kern1, parent=dspan,
@@ -871,6 +928,7 @@ class KnnServer:
                 active_rows = summaries_mod.route_shards(
                     summ, q, l_arr, slack=self.cfg.route_slack)
                 active = active_rows.any(axis=0)
+                active_arr = active
                 touched = int(active.sum())
                 extra = ()
                 if self._indexed:
@@ -878,7 +936,7 @@ class KnnServer:
                     # per-row shard keep gates which buckets can
                     # compete, the batch-union bucket keep becomes the
                     # (n,) per-slot candidate operand (store/index.py).
-                    pcand, cand_frac = self._host_candidates(
+                    pcand, cand_frac, keep_arr = self._host_candidates(
                         idx, q, l_arr, active_rows)
                     extra = (pcand,)
                 rspan.end(touched=touched)
@@ -901,7 +959,7 @@ class KnnServer:
                                          t0=t_route0, compute="host",
                                          indexed=True)
                     batch_spans.append(rspan)
-                    pcand, cand_frac = self._host_candidates(
+                    pcand, cand_frac, keep_arr = self._host_candidates(
                         idx, q, l_arr, None)
                     extra = (pcand,)
                     rspan.end()
@@ -940,10 +998,40 @@ class KnnServer:
         # so its envelope is checked against the same width.
         audit_l = (self.cfg.l_max if self.cfg.sampler == "gather"
                    else l_real)
-        self._contract.check(
+        contract_ok = self._contract.check(
             l_max=audit_l, n_live=n_live, rounds=rounds, messages=messages,
             use_sampling=self.cfg.use_sampling, sampler=self.cfg.sampler,
             generation=generation)
+        if self._store is not None:
+            maint1 = self._store.maint_commit_clock()
+            head_generation = self._store.generation
+        else:
+            maint1 = (0, None)
+            head_generation = generation
+        if self._slo is not None:
+            self._slo.measure("contract", 0.0 if contract_ok else 1.0)
+        # One capture per dispatch: references to what the dispatch
+        # already holds (frozen summaries/index, its own padded query
+        # block) plus the scalars above — the explain reports assemble
+        # lazily from it (obs/explain.py).
+        capture = BatchCapture(
+            batch_id=batch_id, bucket=bucket, n_real=n,
+            generation=generation, route=self.cfg.route,
+            route_compute=("device" if self._route_fn is not None
+                           else "host"),
+            search=self.cfg.search, slack=self.cfg.route_slack,
+            oversample=self.cfg.index_oversample,
+            queries=q, ls=l_arr, summaries=summ, index=idx,
+            active=active_arr, keep_any=keep_arr, touched=touched,
+            candidate_fraction=cand_frac,
+            timings={
+                "snapshot_s": t_snap1 - t_snap0,
+                "route_s": (t_route1 - t_route0
+                            if t_route0 is not None else None),
+                "kernel_s": t_kern1 - t_kern0,
+            },
+            maint_before=maint0[0], maint_after=maint1[0],
+            maint_last=maint1[1], contract_ok=contract_ok)
         # Shadow-exact audit: replay every Nth pruned/indexed batch
         # through the same executable with every shard active and every
         # slot a candidate — the exact collective at this generation
@@ -964,6 +1052,11 @@ class KnnServer:
                     generation=generation, batch_id=batch_id,
                     touched=touched)
                 aspan.annotate(diverged=not ok)
+                if (self._slo is not None
+                        and self._shadow.mode == "recall"
+                        and self._shadow.last_min_recall is not None):
+                    self._slo.measure("recall_min",
+                                      self._shadow.last_min_recall)
 
         t_res0 = time.perf_counter()
         vspan = tracer.begin("resolve", parent=dspan, t0=t_res0)
@@ -987,6 +1080,11 @@ class KnnServer:
                 safe = np.clip(ids, 0, len(self._values) - 1)
                 values = np.where(ids == _ID_SENTINEL, -1,
                                   self._values[safe])
+            xrec = ExplainRecord(
+                capture, row, l=rec.l, dists=dists, ids=ids,
+                queued_s=t_dispatch - rec.t_enqueue,
+                latency_s=t_done - rec.t_enqueue)
+            self._explains.append(xrec)
             _resolve(rec.future, result=QueryResult(
                 dists=dists, ids=ids, values=values, l=rec.l,
                 iterations=iters, rounds=rounds, messages=messages,
@@ -994,7 +1092,8 @@ class KnnServer:
                 queued_s=t_dispatch - rec.t_enqueue,
                 latency_s=t_done - rec.t_enqueue,
                 generation=generation, shards_touched=touched,
-                recall_mode="approx" if self._indexed else "exact"))
+                recall_mode="approx" if self._indexed else "exact",
+                explain_ref=xrec))
             if rec.span is not None:
                 tracer.record("queued", rec.t_enqueue, t_dispatch,
                               parent=rec.span)
@@ -1006,6 +1105,11 @@ class KnnServer:
             self._m["queued"].observe(t_dispatch - rec.t_enqueue)
             self._m["latency"].observe(
                 time.perf_counter() - rec.t_enqueue)
+            if self._slo is not None:
+                self._slo.measure("latency_p99",
+                                  time.perf_counter() - rec.t_enqueue)
+                self._slo.measure("staleness",
+                                  head_generation - generation)
         vspan.end()
         dspan.end(touched=touched, generation=generation)
         t_res1 = time.perf_counter()
@@ -1025,6 +1129,11 @@ class KnnServer:
             m["touched"].observe(touched)
         if cand_frac is not None:
             m["cand_frac"].observe(cand_frac)
+        # Explain reports assemble only after the dispatch completes, so
+        # this late fill is always visible to them.
+        capture.timings["resolve_s"] = t_res1 - t_res0
+        if self._slo is not None:
+            self._slo.evaluate()
 
     def _exact_replay(self, operands, all_on, q, l_arr, key):
         """The exact collective for one dispatched batch: the same
@@ -1042,16 +1151,19 @@ class KnnServer:
 
     def _host_candidates(self, idx, q, l_arr, shard_keep):
         """Host-path bucket prologue for one micro-batch: the (n,)
-        per-slot candidate operand and the kept-live fraction
-        (store/index.py ``bucket_keep`` -> union across rows ->
+        per-slot candidate operand, the kept-live fraction, and the
+        (k, b) batch-union bucket keep itself (the explain capture
+        reports it and cross-checks it against the recomputed rule) —
+        store/index.py ``bucket_keep`` -> union across rows ->
         ``candidate_mask``; ``shard_keep`` is the per-row routing
-        decision, None = all shards compete)."""
+        decision, None = all shards compete."""
         keep = index_mod.bucket_keep(
             idx, q, l_arr, shard_keep=shard_keep,
             oversample=self.cfg.index_oversample)
         keep_any = keep.any(axis=0)
         pcand = index_mod.candidate_mask(idx, keep_any, self.m_local)
-        return pcand, index_mod.candidate_fraction(idx, keep_any)
+        return (pcand, index_mod.candidate_fraction(idx, keep_any),
+                keep_any)
 
     # ---- background micro-batcher ---------------------------------------
 

@@ -273,6 +273,9 @@ class MaintenanceWorker:
             st.stats.retightens += 1
             self.stats.retightens += 1
             self.stats.commits += 1
+            st._note_maint_commit({
+                "kind": "retighten", "shard": int(j),
+                "generation": int(st._snap.generation)})
         tracer.record("maint.commit", t_commit, time.perf_counter(),
                       parent=cspan, kind="retighten", shard=j,
                       generation=st._snap.generation)
@@ -404,6 +407,10 @@ class MaintenanceWorker:
             st._record_history()
             self.stats.repacks += 1
             self.stats.commits += 1
+            st._note_maint_commit({
+                "kind": str(kind), "redeal": str(redeal or st.redeal),
+                "reason": str(reason), "generation": int(gen),
+                "replayed": len(journal)})
         tracer.record("maint.commit", t_commit, time.perf_counter(),
                       parent=cspan, kind=kind, generation=gen,
                       replayed=len(journal))

@@ -263,6 +263,14 @@ class MutableStore:
         # the same trace/registry as the queries racing them).  Unattached
         # stores trace into the shared no-op and record no metrics.
         self._obs = None
+        # Maintenance-commit clock: a monotone count of committed
+        # maintenance cycles (retighten/repack, inline or background)
+        # plus the last commit's facts.  The serving layer samples it
+        # before and after each dispatch so explain reports can say
+        # whether a commit raced the request (obs/explain.py) and the
+        # SLO staleness objective can reason about churn.
+        self._maint_commits = 0
+        self._last_maint_commit: Optional[dict] = None
         self._worker: Optional[maintenance_mod.MaintenanceWorker] = None
         if self.maintenance == "background":
             self._worker = maintenance_mod.MaintenanceWorker(
@@ -281,6 +289,21 @@ class MutableStore:
 
     def _obs_registry(self):
         return self._obs.metrics if self._obs is not None else None
+
+    def _note_maint_commit(self, info: dict) -> None:
+        """Advance the maintenance-commit clock.  Called by the
+        maintenance plane *with the store lock already held* (both
+        commit sites sit inside their lock block), so this must not —
+        and does not — re-acquire it."""
+        self._maint_commits += 1
+        self._last_maint_commit = dict(info, seq=self._maint_commits)
+
+    def maint_commit_clock(self) -> tuple:
+        """(commit count, last commit info dict or None) — one lock
+        acquisition, so a before/after pair brackets a dispatch
+        consistently."""
+        with self._lock:
+            return self._maint_commits, self._last_maint_commit
 
     def close(self) -> None:
         """Stop the background maintenance worker (no-op when inline or

@@ -430,19 +430,25 @@ def pipeline_error_bound(s: ShardSummaries, queries: np.ndarray) -> np.ndarray:
     return 16.0 * (dim + 1) * _F32_EPS * (qn + R) ** 2
 
 
-def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
-                 *, slack: float = 1e-4) -> np.ndarray:
-    """(B, k) bool — shard j may hold one of row b's ``ls[b]`` winners.
+def routing_detail(s: ShardSummaries, queries: np.ndarray, ls,
+                   *, slack: float = 1e-4) -> dict:
+    """The routing decision *with its working shown* — the per-shard
+    bounds and threshold that :func:`route_shards` computes internally,
+    returned as a dict of arrays for the query-explain reports
+    (obs/explain.py) and any offline audit:
 
-    Exact by construction: T_b is the upper bound at which the cumulative
-    live count (shards visited in ascending-upper-bound order) reaches
-    ``ls[b]``, so the l-th NN distance is <= T_b; a shard is kept unless
-    ``lb > T_b·(1+slack) + err_b`` with ``err_b`` the magnitude-absolute
-    f32 rounding bound (:func:`pipeline_error_bound`) — it cannot contain
-    a winner even under the computed-distance order the pipeline actually
-    ranks by (module docstring).  Rows with ``ls[b] == 0`` (the
-    micro-batcher's bucket padding) route nowhere; if the total live
-    count is below l, every live shard stays active.
+    * ``lower`` / ``upper`` — (B, k) distance-squared bounds per shard,
+    * ``threshold`` — (B,) T_b: the cumulative-live upper-bound walk's
+      stopping value (min'd with the ball-granular pivot threshold),
+    * ``threshold_eff`` — (B,) T_b·(1+slack) + err_b, the value the
+      lower-bound test actually compares against,
+    * ``keep`` — (B, k) bool, identical to :func:`route_shards`.
+
+    Deterministic pure-f64 host math over a frozen summaries object:
+    calling this again with the same (summaries, queries, ls, slack)
+    reproduces the dispatch-time decision bit for bit, which is what
+    lets explain reports be assembled lazily instead of taxing the
+    dispatch hot path.
     """
     q = np.atleast_2d(np.asarray(queries, np.float64))
     B = q.shape[0]
@@ -465,8 +471,27 @@ def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
         # undercounts, so min() can only tighten (never drop a winner)
         T = np.minimum(T, tp)
     T_eff = T * (1.0 + slack) + pipeline_error_bound(s, q)
-    return ((s.live[None, :] > 0) & (lb <= T_eff[:, None])
+    keep = ((s.live[None, :] > 0) & (lb <= T_eff[:, None])
             & (ls[:, None] > 0))
+    return {"lower": lb, "upper": ub, "threshold": T,
+            "threshold_eff": T_eff, "keep": keep}
+
+
+def route_shards(s: ShardSummaries, queries: np.ndarray, ls,
+                 *, slack: float = 1e-4) -> np.ndarray:
+    """(B, k) bool — shard j may hold one of row b's ``ls[b]`` winners.
+
+    Exact by construction: T_b is the upper bound at which the cumulative
+    live count (shards visited in ascending-upper-bound order) reaches
+    ``ls[b]``, so the l-th NN distance is <= T_b; a shard is kept unless
+    ``lb > T_b·(1+slack) + err_b`` with ``err_b`` the magnitude-absolute
+    f32 rounding bound (:func:`pipeline_error_bound`) — it cannot contain
+    a winner even under the computed-distance order the pipeline actually
+    ranks by (module docstring).  Rows with ``ls[b] == 0`` (the
+    micro-batcher's bucket padding) route nowhere; if the total live
+    count is below l, every live shard stays active.
+    """
+    return routing_detail(s, queries, ls, slack=slack)["keep"]
 
 
 def summary_invariants(s: ShardSummaries, points: np.ndarray,

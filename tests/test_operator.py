@@ -1,0 +1,398 @@
+"""Operator layer (ISSUE 9): explain reports, SLO burn rates, exporters.
+
+What this suite pins, layer by layer:
+
+* **Window metrics keep honest clocks** — sliding-window aggregates and
+  quantiles over an explicit synthetic timebase, so the SLO engine's
+  evidence can be replayed deterministically.
+* **Burn-rate arithmetic has units** — with the standard 1% budget, a
+  window whose bad fraction is exactly the budget burns at exactly 1.0;
+  the fire/clear state machine walks a synthetic clock through breach,
+  page, and recovery, emitting the slo.* spans and counters on the way.
+* **The exporters round-trip** — Prometheus text exposition parses back
+  under the strict parser (golden TYPE/le lines, cumulative bucket
+  monotonicity, +Inf == _count), the OTLP-ish JSON keeps the
+  bounds/bucketCounts shape contract, and the stdlib HTTP endpoint
+  serves all three views on an ephemeral port.
+* **Explain reports are deterministic** — the same query at the same
+  key and generation builds a byte-identical ``deterministic_json``
+  (volatile timings/maintenance/batch-id stripped), and the report's
+  kept-shard / kept-bucket sets match a from-scratch recompute of the
+  routing and index keep rules.
+* **The server wires it together** — a forced-breach latency SLO fires
+  and clears on a live server, and the config-bound HTTP endpoint
+  exposes the same registry the snapshot reads.
+"""
+
+import io
+import json
+import time
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import CONFIG
+from repro.obs.explain import (SCHEMA as EXPLAIN_SCHEMA, deterministic_json,
+                               export_jsonl)
+from repro.obs.export import (ObsHttpServer, metric_name, otlp_json,
+                              parse_prometheus_text, prometheus_text)
+from repro.obs.metrics import MetricsRegistry, Window
+from repro.obs.slo import SloEngine, SloObjective
+from repro.obs.trace import NULL_TRACER, Tracer
+from repro.runtime import KnnServer
+
+DIM = 8
+L_MAX = 16
+
+
+# ---- sliding-window metrics ----------------------------------------------
+
+def test_window_aggregates_on_synthetic_clock():
+    w = Window()
+    for t in range(10):                      # one event per second, t=0..9
+        w.observe(float(t), t=float(t))
+    agg = w.window(5.0, now=9.0)             # [9-5, 9] -> t in {4..9}
+    assert agg["count"] == 6
+    assert agg["sum"] == pytest.approx(4 + 5 + 6 + 7 + 8 + 9)
+    assert agg["min"] == 4.0 and agg["max"] == 9.0
+    assert agg["mean"] == pytest.approx(6.5)
+    # the full horizon still holds everything
+    assert w.window(100.0, now=9.0)["count"] == 10
+    # an empty slice reports NaN extremes, zero count
+    empty = w.window(5.0, now=100.0)
+    assert empty["count"] == 0 and np.isnan(empty["min"])
+
+
+def test_window_quantile_nearest_rank():
+    w = Window()
+    for i, v in enumerate([10.0, 20.0, 30.0, 40.0]):
+        w.observe(v, t=float(i))
+    assert w.quantile(0.5, 100.0, now=3.0) == 20.0
+    assert w.quantile(1.0, 100.0, now=3.0) == 40.0
+    assert np.isnan(w.quantile(0.5, 0.1, now=100.0))
+
+
+# ---- SLO burn-rate engine ------------------------------------------------
+
+def _engine(**kw):
+    reg = MetricsRegistry()
+    eng = SloEngine(
+        reg, kw.pop("tracer", NULL_TRACER),
+        [SloObjective("latency_p99", "upper", 0.1)],
+        fast_window_s=kw.pop("fast", 10.0),
+        slow_window_s=kw.pop("slow", 50.0), **kw)
+    return eng, reg
+
+
+def test_burn_rate_units_on_synthetic_stream():
+    """With budget=0.01, bad fraction == budget burns at exactly 1.0 —
+    the SRE framing: burn 1.0 spends the error budget exactly on
+    schedule, and only burn > threshold pages."""
+    eng, _ = _engine(budget=0.01, fast=1000.0, slow=1000.0)
+    # 100 events, exactly 1 bad (0.2s > the 0.1s bound)
+    for i in range(100):
+        eng.measure("latency_p99", 0.2 if i == 0 else 0.01, now=float(i))
+    snap = eng.snapshot(now=100.0)
+    obj = snap["objectives"]["latency_p99"]
+    assert obj["burn_fast"] == pytest.approx(1.0)
+    assert obj["bad_fast"] == 1.0 and obj["fast_events"] == 100
+    # burn == threshold does NOT fire (strict inequality)
+    assert snap["alerts_fired"] == 0 and not obj["firing"]
+    # double the bad fraction -> burn 2.0 -> pages
+    eng.measure("latency_p99", 0.2, now=101.0)
+    snap = eng.snapshot(now=101.0)
+    assert snap["objectives"]["latency_p99"]["burn_fast"] == pytest.approx(
+        101 / 101 * (2 / 101) / 0.01)
+    assert snap["alerts_fired"] == 1
+
+
+def test_fire_and_clear_walk_a_synthetic_clock():
+    tracer = Tracer(capacity=64)
+    eng, reg = _engine(tracer=tracer, budget=0.01)
+    # 5 bad events inside both windows -> breach on both -> fire
+    for i in range(5):
+        eng.measure("latency_p99", 1.0, now=float(i))
+    events = eng.evaluate(now=5.0)
+    assert [e["event"] for e in events] == ["fire"]
+    assert eng.snapshot(now=5.0)["firing"] == ["latency_p99"]
+    # nothing new for 20s: the 10s fast window drains -> clear
+    events = eng.evaluate(now=25.0)
+    assert [e["event"] for e in events] == ["clear"]
+    assert events[0]["fired_for_s"] == pytest.approx(20.0)
+    snap = eng.snapshot(now=25.0)
+    assert snap["alerts_fired"] == 1 and snap["alerts_cleared"] == 1
+    assert snap["firing"] == []
+    names = [s["name"] for s in tracer.spans()]
+    assert names.count("slo.fire") == 1
+    assert names.count("slo.clear") == 1
+    alert = [s for s in tracer.spans() if s["name"] == "slo.alert"]
+    assert len(alert) == 1
+    assert alert[0]["t1"] - alert[0]["t0"] == pytest.approx(20.0)
+
+
+def test_min_events_gate_blocks_thin_windows():
+    eng, _ = _engine(budget=0.01)
+    for i in range(3):                        # 3 < _MIN_EVENTS
+        eng.measure("latency_p99", 1.0, now=float(i))
+    assert eng.evaluate(now=3.0) == []
+    assert eng.snapshot(now=3.0)["alerts_fired"] == 0
+
+
+def test_slow_window_vetoes_a_fast_blip():
+    """A burst of bad events inside the fast window only pages if the
+    slow window agrees — here the slow window holds enough good history
+    to keep its burn under threshold."""
+    eng, _ = _engine(budget=0.05, fast=10.0, slow=50.0)
+    for i in range(96):                       # 96 good events, t=0..47.5
+        eng.measure("latency_p99", 0.01, now=i * 0.5)
+    for i in range(4):                        # 4 bad events at the end
+        eng.measure("latency_p99", 1.0, now=48.0 + i * 0.4)
+    snap = eng.snapshot(now=49.9)
+    obj = snap["objectives"]["latency_p99"]
+    # fast window (last 10s): 4 bad of 20 -> burn 4.0, well over
+    # threshold; slow window (50s): 4 bad of 100 -> burn 0.8, under
+    assert obj["burn_fast"] > 1.0
+    assert obj["burn_slow"] <= 1.0
+    assert snap["alerts_fired"] == 0
+
+
+def test_from_config_is_opt_in():
+    reg = MetricsRegistry()
+    assert SloEngine.from_config(CONFIG, reg, NULL_TRACER) is None
+    eng = SloEngine.from_config(
+        CONFIG.replace(slo_latency_p99_s=0.5, slo_contract_violations=True),
+        reg, NULL_TRACER)
+    snap = eng.snapshot()
+    assert set(snap["objectives"]) == {"latency_p99", "contract"}
+    # unknown measurements are ignored, declared ones land
+    eng.measure("recall_min", 0.0)
+    eng.measure("contract", 1.0)
+    assert snap["objectives"]["contract"]["kind"] == "upper"
+    with pytest.raises(ValueError):
+        SloEngine(reg, NULL_TRACER, [])       # no objectives: use from_config
+    with pytest.raises(ValueError):
+        SloObjective("x", "sideways", 1.0)
+
+
+# ---- exporters -----------------------------------------------------------
+
+def _populated_registry() -> MetricsRegistry:
+    reg = MetricsRegistry()
+    reg.counter("serve.batches").inc(7)
+    reg.gauge("store.live_points").set(123.0)
+    h = reg.histogram("serve.latency_s")
+    for v in (0.001, 0.002, 0.004, 0.01, 0.05, 1.5):
+        h.observe(v)
+    reg.window("slo.events.latency_p99").observe(1.0)   # skipped in prom
+    return reg
+
+
+def test_prometheus_golden_format_and_round_trip():
+    reg = _populated_registry()
+    text = prometheus_text(reg)
+    # golden lines: naming, TYPE declarations, the counter suffix
+    assert "# TYPE knn_serve_batches_total counter" in text
+    assert "knn_serve_batches_total 7" in text
+    assert "# TYPE knn_store_live_points gauge" in text
+    assert "# TYPE knn_serve_latency_s histogram" in text
+    assert 'knn_serve_latency_s_bucket{le="+Inf"} 6' in text
+    assert "knn_serve_latency_s_count 6" in text
+    parsed = parse_prometheus_text(text)
+    assert parsed["knn_serve_batches_total"] == {
+        "type": "counter", "value": 7.0}
+    assert parsed["knn_store_live_points"]["value"] == 123.0
+    hist = parsed["knn_serve_latency_s"]
+    assert hist["count"] == 6.0
+    assert hist["sum"] == pytest.approx(0.001 + 0.002 + 0.004 + 0.01
+                                        + 0.05 + 1.5)
+    # cumulative bucket counts are monotone non-decreasing, end at count
+    counts = [c for _, c in hist["buckets"]]
+    assert counts == sorted(counts)
+    assert counts[-1] == hist["count"]
+    # windows are an SLO-internal type, not an exposition metric
+    assert not any("slo_events" in name for name in parsed)
+
+
+def test_prometheus_parser_rejects_malformations():
+    with pytest.raises(ValueError):           # no TYPE declaration
+        parse_prometheus_text("knn_mystery 1.0\n")
+    bad_cumulative = (
+        "# TYPE knn_h histogram\n"
+        'knn_h_bucket{le="1.0"} 5\n'
+        'knn_h_bucket{le="2.0"} 3\n'          # decreasing
+        'knn_h_bucket{le="+Inf"} 5\n'
+        "knn_h_sum 1.0\nknn_h_count 5\n")
+    with pytest.raises(ValueError):
+        parse_prometheus_text(bad_cumulative)
+    inf_mismatch = (
+        "# TYPE knn_h histogram\n"
+        'knn_h_bucket{le="1.0"} 5\n'
+        'knn_h_bucket{le="+Inf"} 5\n'
+        "knn_h_sum 1.0\nknn_h_count 9\n")     # +Inf != count
+    with pytest.raises(ValueError):
+        parse_prometheus_text(inf_mismatch)
+
+
+def test_otlp_shape_contract():
+    reg = _populated_registry()
+    doc = otlp_json(reg)
+    metrics = doc["resourceMetrics"][0]["scopeMetrics"][0]["metrics"]
+    by_name = {m["name"]: m for m in metrics}
+    assert by_name["knn_serve_batches_total"]["sum"]["isMonotonic"]
+    pt = by_name["knn_serve_latency_s"]["histogram"]["dataPoints"][0]
+    # OTLP contract: len(bucketCounts) == len(explicitBounds) + 1
+    assert len(pt["bucketCounts"]) == len(pt["explicitBounds"]) + 1
+    assert sum(pt["bucketCounts"]) == pt["count"] == 6
+    assert pt["sum"] == pytest.approx(1.567)
+
+
+def test_metric_name_mangling():
+    assert metric_name("serve.latency_s") == "knn_serve_latency_s"
+    assert metric_name("maint.plan-probe") == "knn_maint_plan_probe"
+
+
+def test_http_server_serves_all_three_views():
+    reg = _populated_registry()
+    with ObsHttpServer(reg, port=0,
+                       snapshot_fn=lambda: {"hello": "operator"}) as http:
+        base = f"http://127.0.0.1:{http.port}"
+        with urllib.request.urlopen(f"{base}/metrics", timeout=10) as r:
+            assert r.headers["Content-Type"].startswith("text/plain")
+            parsed = parse_prometheus_text(r.read().decode())
+        assert parsed["knn_serve_batches_total"]["value"] == 7.0
+        with urllib.request.urlopen(f"{base}/metrics.json", timeout=10) as r:
+            doc = json.loads(r.read().decode())
+        assert "resourceMetrics" in doc
+        with urllib.request.urlopen(f"{base}/obs", timeout=10) as r:
+            assert json.loads(r.read().decode()) == {"hello": "operator"}
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"{base}/nope", timeout=10)
+    http.close()                              # idempotent
+
+
+# ---- explain reports -----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def explain_server(mesh8):
+    """A tiny routed approx server over a cluster-per-shard layout —
+    the configuration whose explain reports exercise every section."""
+    k = 8
+    rng = np.random.default_rng(3)
+    centers = rng.normal(size=(k, DIM)).astype(np.float32) * 40.0
+    pts = np.concatenate([
+        c + rng.normal(size=(64, DIM)).astype(np.float32) for c in centers])
+    cfg = CONFIG.replace(
+        dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(1, 2, 4),
+        sampler="selection", route="pruned", search="approx",
+        index_buckets=4, max_wait_ms=0.5)
+    srv = KnnServer(pts, cfg=cfg, mesh=mesh8, axis_name="x")
+    srv.warmup()
+    yield srv, centers
+    srv.stop()
+
+
+def test_explain_report_sections_and_recompute(explain_server):
+    srv, centers = explain_server
+    q = centers[2] + 0.25
+    res = srv.query_batch(np.asarray([q]), [4])[0]
+    rep = res.explain()
+    assert rep["schema"] == EXPLAIN_SCHEMA
+    assert set(rep) == {"schema", "batch", "request", "routing", "index",
+                        "timings", "maintenance"}
+    assert rep["request"]["l"] == 4
+    assert rep["request"]["recall_mode"] == "approx"
+    assert rep["routing"]["mode"] == "pruned"
+    assert len(rep["routing"]["shards"]) == 8
+    kept = [s["shard"] for s in rep["routing"]["shards"] if s["kept"]]
+    assert kept == rep["routing"]["kept_shards"]
+    assert rep["batch"]["shards_touched"] == len(kept)
+    # every kept shard's lower bound admits the threshold; every pruned
+    # shard's does not — the keep rule, re-read off the report itself
+    for s in rep["routing"]["shards"]:
+        if s["kept"]:
+            assert s["lower"] <= rep["routing"]["threshold_eff"]
+        else:
+            assert s["lower"] > rep["routing"]["threshold_eff"]
+    assert rep["index"]["enabled"]
+    assert rep["index"]["kept_matches_recompute"]
+    assert rep["index"]["kept_buckets"], "approx query kept no buckets?"
+    assert rep["timings"]["latency_s"] > 0.0
+    assert rep["maintenance"]["commits_before"] == 0  # static server
+
+
+def test_explain_determinism_byte_identical(explain_server):
+    srv, centers = explain_server
+    q = centers[5] - 0.125
+    r1 = srv.query_batch(np.asarray([q]), [4])[0]
+    r2 = srv.query_batch(np.asarray([q]), [4])[0]
+    rep1, rep2 = r1.explain(), r2.explain()
+    assert rep1["batch"]["id"] != rep2["batch"]["id"]   # different batches
+    j1, j2 = deterministic_json(rep1), deterministic_json(rep2)
+    assert j1 == j2                                     # byte-identical
+    stable = json.loads(j1)
+    assert "timings" not in stable and "maintenance" not in stable
+    assert "id" not in stable["batch"]
+    # a different query is a different stable report
+    r3 = srv.query_batch(np.asarray([centers[1]]), [4])[0]
+    assert deterministic_json(r3.explain()) != j1
+
+
+def test_explain_last_ring_and_jsonl_export(explain_server):
+    srv, centers = explain_server
+    qs = np.stack([centers[i % 8] for i in range(3)]).astype(np.float32)
+    srv.query_batch(qs, [4, 4, 4])
+    reports = srv.explain_last(2)
+    assert len(reports) == 2
+    assert all(r["schema"] == EXPLAIN_SCHEMA for r in reports)
+    assert srv.explain_last(0) == []
+    buf = io.StringIO()
+    n = export_jsonl(srv.explain_last(3), buf)
+    lines = [json.loads(x) for x in buf.getvalue().splitlines()]
+    assert n == len(lines) == 3
+    assert all(r["schema"] == EXPLAIN_SCHEMA for r in lines)
+
+
+# ---- server integration --------------------------------------------------
+
+def test_server_forced_breach_slo_fires_and_clears(mesh8):
+    rng = np.random.default_rng(11)
+    pts = rng.normal(size=(512, DIM)).astype(np.float32)
+    cfg = CONFIG.replace(
+        dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(1, 2, 4, 8),
+        sampler="selection", max_wait_ms=0.5,
+        slo_latency_p99_s=1e-9,               # nothing is this fast
+        slo_fast_window_s=0.3, slo_slow_window_s=0.9)
+    srv = KnnServer(pts, cfg=cfg, mesh=mesh8, axis_name="x")
+    srv.warmup()
+    try:
+        qs = rng.normal(size=(8, DIM)).astype(np.float32)
+        srv.query_batch(qs, [4] * 8)          # 8 bad events in one dispatch
+        snap = srv.obs_snapshot()["slo"]
+        assert snap["alerts_fired"] >= 1
+        assert "latency_p99" in snap["firing"]
+        deadline = time.perf_counter() + 15
+        while (snap["alerts_cleared"] == 0
+               and time.perf_counter() < deadline):
+            time.sleep(0.05)
+            snap = srv.obs_snapshot()["slo"]
+        assert snap["alerts_cleared"] >= 1 and snap["firing"] == []
+    finally:
+        srv.close()
+
+
+def test_server_http_endpoint_from_config(mesh8):
+    rng = np.random.default_rng(13)
+    pts = rng.normal(size=(256, DIM)).astype(np.float32)
+    cfg = CONFIG.replace(dim=DIM, l=4, l_max=L_MAX, bucket_sizes=(1, 2),
+                         sampler="selection", obs_http_port=-1)
+    srv = KnnServer(pts, cfg=cfg, mesh=mesh8, axis_name="x")
+    try:
+        srv.query_batch(rng.normal(size=(2, DIM)).astype(np.float32), [4, 4])
+        url = f"http://127.0.0.1:{srv._http.port}/metrics"
+        with urllib.request.urlopen(url, timeout=10) as r:
+            parsed = parse_prometheus_text(r.read().decode())
+        assert parsed["knn_serve_latency_s"]["count"] >= 2
+    finally:
+        srv.close()
+    assert srv._http._thread is None or not srv._http._thread.is_alive()
