@@ -105,8 +105,11 @@ bench-smoke: smoke-artifacts
 # complete routed-query tree racing a committed maintenance cycle, and
 # (ISSUE 9) the operator layer: a well-formed query-explain report
 # whose kept-bucket set matches the recomputed keep rule, the
-# forced-breach SLO fired AND cleared (slo.* spans in the trace), and
-# the Prometheus exposition parsing under the strict round-trip parser.
+# forced-breach SLO fired AND cleared (slo.* spans in the trace), the
+# Prometheus exposition parsing under the strict round-trip parser,
+# and (ISSUE 10) the label-prediction contract: exact arm
+# oracle-identical, ensemble arms holding the accuracy floor at
+# messages == shards_touched with a clean accuracy-mode shadow audit.
 obs-smoke: smoke-artifacts
 	$(PYTHONPATH_PREFIX):. python benchmarks/check_obs.py \
 		--bench $(SMOKE_BENCH) \

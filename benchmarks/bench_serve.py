@@ -32,7 +32,15 @@ over identical points and an identical query stream, on the clustered
 AND the drifting workloads, with the recall floor and the >=3x
 candidate-reduction target *hard-asserted* (ISSUE 8 acceptance) — the
 ``index`` block of the JSON, re-checked offline by
-``benchmarks/check_obs.py``.  The operator layer (ISSUE 9) rides the
+``benchmarks/check_obs.py``.  A seventh section runs the
+label-prediction A/B (src/repro/predict/, DESIGN.md §15) on a labeled
+Gaussian mixture with known Bayes-optimal labels: the exact vote fold
+(hard-asserted bit-identical to the single-machine oracle) against the
+one-message-per-shard ensemble (hard-asserted onto rounds == 1 and
+messages == shards_touched per query, accuracy >= the configured
+floor, accuracy-mode shadow audit clean) — the ``predict`` block of
+the JSON with its accuracy-vs-message-bill table, re-checked offline
+by ``check_obs.py check_predict``.  The operator layer (ISSUE 9) rides the
 same sections: the obs server runs a deliberately impossible latency
 SLO that must fire and clear (burn-rate engine, obs/slo.py), serves its
 metrics over an ephemeral HTTP endpoint whose Prometheus text is
@@ -720,6 +728,153 @@ def _index_section(bursts: int, per_shard: int, per_step: int, steps: int,
     return section
 
 
+def _oracle_votes(pts, labels, qs, ls, num_classes: int) -> np.ndarray:
+    """Single-machine oracle vote per query: f64 distances, stable sort,
+    ties toward the lowest class — the ground truth the exact predict
+    arm must match bit-for-bit (tests/test_predict.py pins the same
+    oracle across every route/compute/search mode)."""
+    d = ((qs[:, None, :].astype(np.float64)
+          - pts[None].astype(np.float64)) ** 2).sum(-1)
+    out = np.empty(len(qs), np.float32)
+    for i, (row, l) in enumerate(zip(d, ls)):
+        idx = np.argsort(row, kind="stable")[:l]
+        out[i] = np.bincount(labels[idx], minlength=num_classes).argmax()
+    return out
+
+
+def _drive_predict(srv, bursts: int, centers, num_classes: int,
+                   *, oracle=None) -> dict:
+    """Closed-loop labeled load: queries are fresh draws from the same
+    mixture (component label known), so every answer is scored against
+    the Bayes-optimal label; with ``oracle`` (the (pts, labels) pair)
+    every exact answer is additionally hard-asserted bit-identical to
+    the single-machine vote.  Ensemble answers are hard-asserted onto
+    the one-message-per-shard bill: rounds == 1 and messages ==
+    shards_touched on every query."""
+    from repro.data import bayes_labels
+    rng = np.random.default_rng(29)          # same load on every arm
+    burst_sizes = [1, 3, 8, 16, 5, 16, 2, 16]
+    lat, msgs, rounds, touched = [], [], [], []
+    correct = total = oracle_mismatches = 0
+    ensemble = srv.cfg.predict_mode == "ensemble"
+    t0 = None
+    for burst in range(WARM_BURSTS + bursts):
+        if burst == WARM_BURSTS:
+            t0 = time.perf_counter()
+        bs = burst_sizes[burst % len(burst_sizes)]
+        qlab = rng.integers(0, num_classes, bs)
+        qs = (centers[qlab] + rng.normal(size=(bs, DIM))).astype(np.float32)
+        ls = [L_MIX[(burst + j) % len(L_MIX)] for j in range(bs)]
+        results = srv.query_batch(qs, ls)
+        if burst < WARM_BURSTS:
+            continue
+        truth = bayes_labels(qs, centers)
+        want = (None if oracle is None else
+                _oracle_votes(oracle[0], oracle[1], qs, ls, num_classes))
+        for j, r in enumerate(results):
+            lat.append(r.latency_s)
+            msgs.append(r.messages)
+            rounds.append(r.rounds)
+            touched.append(r.shards_touched)
+            total += 1
+            correct += int(r.label == truth[j])
+            if want is not None and r.label != want[j]:
+                oracle_mismatches += 1
+            if ensemble:
+                assert r.rounds == 1 and r.messages == r.shards_touched, (
+                    f"ensemble bill broken: rounds={r.rounds} "
+                    f"messages={r.messages} touched={r.shards_touched}")
+    wall = time.perf_counter() - t0
+    lat = np.asarray(lat)
+    return {
+        "queries": total,
+        "qps": total / wall,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "accuracy": correct / total,
+        "oracle_mismatches": (None if oracle is None
+                              else oracle_mismatches),
+        "mean_messages": float(np.mean(msgs)),
+        "mean_rounds": float(np.mean(rounds)),
+        "mean_shards_touched": float(np.mean(touched)),
+        "bill_messages_eq_touched": bool(ensemble),
+    }
+
+
+def _predict_section(bursts: int, n_per_class: int, emit) -> dict:
+    """Label-prediction A/B (src/repro/predict/, DESIGN.md §15): the
+    exact fold vs one-message-per-shard ensemble on a labeled Gaussian
+    mixture with known Bayes-optimal labels (data/synthetic.py
+    ``labeled_mixture``).  Hard-asserts the PR's accuracy-vs-message-
+    bill contract inline (check_obs.py ``check_predict`` re-asserts it
+    from the JSON artifact):
+
+      * exact arm — every served label bit-identical to the
+        single-machine oracle vote (zero mismatches tolerated);
+      * ensemble arm — rounds == 1 and messages == shards_touched on
+        every query, accuracy >= the configured ``accuracy_floor``, and
+        the accuracy-mode shadow auditor active with zero flagged
+        batches.
+
+    The ``bill`` table prices what the ensemble's O(C)-message protocol
+    costs in accuracy against what the exact fold's extra round buys.
+    """
+    from repro.data import labeled_mixture
+    from repro.runtime import KnnServer
+    num_classes = 4
+    n = num_classes * n_per_class
+    pts, labels, centers = labeled_mixture(
+        n, DIM, num_classes, separation=8.0, seed=23)
+    base = CONFIG.replace(
+        dim=DIM, l=8, l_max=L_MAX, bucket_sizes=BUCKETS,
+        sampler="selection", num_classes=num_classes, predict="vote",
+        route="pruned", route_compute="host", obs_audit_every=2)
+    section = {"n_points": n, "num_classes": num_classes,
+               "separation": 8.0, "accuracy_floor": base.accuracy_floor}
+
+    arms = (("exact", base.replace(predict_mode="exact")),
+            ("ensemble", base.replace(predict_mode="ensemble")),
+            ("ensemble_k1", base.replace(predict_mode="ensemble",
+                                         local_k=1)))
+    for name, cfg in arms:
+        srv = KnnServer(pts, labels=labels, cfg=cfg,
+                        mesh=common.kmachine_mesh(), axis_name="x")
+        srv.warmup()
+        oracle = (pts, labels) if name == "exact" else None
+        arm = _drive_predict(srv, bursts, centers, num_classes,
+                             oracle=oracle)
+        arm["local_k"] = cfg.local_k
+        if name == "exact":
+            assert arm["oracle_mismatches"] == 0, (
+                f"exact predict diverged from the single-machine oracle "
+                f"on {arm['oracle_mismatches']} queries")
+        else:
+            assert arm["accuracy"] >= base.accuracy_floor, (
+                f"{name} accuracy {arm['accuracy']:.3f} below the "
+                f"{base.accuracy_floor} floor")
+            shadow = srv.obs_snapshot()["audit"]["shadow"]
+            assert shadow["mode"] == "accuracy" and shadow["checks"] > 0
+            assert shadow["divergences"] == 0, shadow
+            arm["shadow"] = {k: shadow[k] for k in
+                             ("mode", "checks", "divergences", "floor")}
+            arm["agreement"] = shadow["agreement"]
+        section[name] = arm
+        emit(common.row(
+            f"serve_predict_{name}", 1e6 / arm["qps"],
+            f"acc={arm['accuracy']:.3f} msgs={arm['mean_messages']:.1f} "
+            f"rounds={arm['mean_rounds']:.1f} "
+            f"touched={arm['mean_shards_touched']:.2f}"))
+    # the headline table: what one O(C) message per touched shard costs
+    # in accuracy against the exact fold's extra round + (t-1) messages
+    section["bill"] = [
+        {"mode": name, "local_k": section[name]["local_k"],
+         "accuracy": section[name]["accuracy"],
+         "mean_messages": section[name]["mean_messages"],
+         "mean_rounds": section[name]["mean_rounds"]}
+        for name, _ in arms]
+    return section
+
+
 def _drive(srv, rng, bursts: int, centers=None) -> dict:
     """Closed-loop load: submit a burst, flush, repeat.  Burst sizes cycle
     through the bucket spectrum so padding and bucket choice both get
@@ -841,6 +996,11 @@ def run(emit=print, out_path=None, smoke: bool = False,
         steps=6 if smoke else 12,
         window=2 if smoke else 4,
         emit=emit)
+    # label-prediction A/B (src/repro/predict/): exact fold hard-matched
+    # to the single-machine oracle vote; one-message-per-shard ensemble
+    # hard-held to messages == touched_shards and the accuracy floor
+    report["predict"] = _predict_section(
+        bursts, n_per_class=128 if smoke else 1024, emit=emit)
     common.stamp(report)
     if out_path:
         with open(out_path, "w") as f:

@@ -17,6 +17,11 @@ flight-recorder JSONL — against the PR's acceptance bar:
     tree with snapshot, route, kernel, and resolve stages) racing at
     least one committed maintenance cycle;
   * the per-stage latency breakdown is present (p50/p99 per stage);
+  * the label-prediction contract (ISSUE 10): the exact arm matched the
+    single-machine oracle vote on every query, and every ensemble arm
+    held the accuracy floor under the one-message-per-shard bill
+    (messages == shards_touched, one round) with the accuracy-mode
+    shadow auditor active and clean;
   * the operator layer (ISSUE 9): the ``index`` section carries a
     well-formed query-explain report for a routed approx query whose
     kept-bucket set matched the recomputed keep rule; the ``obs``
@@ -155,6 +160,57 @@ def check_explain(path: str):
           f"{len(rep['index']['kept_buckets'])} buckets, recompute match")
 
 
+def check_predict(path: str):
+    """The label-prediction contract (ISSUE 10), re-asserted from the
+    JSON artifact: the exact arm matched the single-machine oracle vote
+    on every query; every ensemble arm held the accuracy floor under
+    the one-message-per-shard bill (messages == shards_touched, one
+    round) with the accuracy-mode shadow auditor active and clean."""
+    with open(path) as f:
+        report = json.load(f)
+    pred = report.get("predict")
+    if not pred:
+        fail(f"{path} has no 'predict' section")
+    floor = pred["accuracy_floor"]
+    exact = pred.get("exact")
+    if not exact:
+        fail("predict section missing the 'exact' arm")
+    if exact["oracle_mismatches"] != 0:
+        fail(f"predict/exact: {exact['oracle_mismatches']} answers "
+             f"diverged from the single-machine oracle vote")
+    for arm_name in ("ensemble", "ensemble_k1"):
+        arm = pred.get(arm_name)
+        if not arm:
+            fail(f"predict section missing the {arm_name!r} arm")
+        if not arm["bill_messages_eq_touched"]:
+            fail(f"predict/{arm_name}: per-query messages == "
+                 f"shards_touched was not asserted")
+        if arm["mean_rounds"] != 1.0:
+            fail(f"predict/{arm_name}: mean rounds "
+                 f"{arm['mean_rounds']} != 1 (one-message protocol)")
+        if arm["accuracy"] < floor:
+            fail(f"predict/{arm_name}: accuracy {arm['accuracy']:.3f} "
+                 f"below the {floor} floor")
+        shadow = arm["shadow"]
+        if shadow["mode"] != "accuracy":
+            fail(f"predict/{arm_name}: shadow auditor not in "
+                 f"accuracy mode")
+        if shadow["checks"] <= 0:
+            fail(f"predict/{arm_name}: accuracy shadow auditor "
+                 f"never ran")
+        if shadow["divergences"] != 0:
+            fail(f"predict/{arm_name}: {shadow['divergences']} "
+                 f"agreement-floor violations flagged")
+    if len(pred.get("bill", [])) < 3:
+        fail("predict section missing the accuracy-vs-message-bill "
+             "table")
+    print(f"check_obs: predict ok — exact oracle-identical on "
+          f"{exact['queries']} queries at {exact['mean_messages']:.0f} "
+          f"msgs/query; ensemble {pred['ensemble']['accuracy']:.3f} "
+          f"accuracy at {pred['ensemble']['mean_messages']:.0f} "
+          f"msgs/query (floor {floor})")
+
+
 def check_slo(path: str):
     """The forced-breach SLO scenario: the bench ran an impossible
     latency objective, so the artifact must show the alert both fired
@@ -263,6 +319,7 @@ def main():
     check_bench(args.bench)
     check_index(args.bench)
     check_explain(args.bench)
+    check_predict(args.bench)
     check_slo(args.bench)
     check_prom(args.prom)
     check_trace(args.trace)

@@ -16,6 +16,10 @@ and fails CI when the run regresses past noise-tolerant bounds:
     1.5x + 0.05 absolute;
   * measured recall_min may not fall more than 0.02 below baseline
     (the bench already hard-asserts the configured floor inline);
+  * the ensemble-prediction arm's accuracy may not fall more than 0.02
+    below baseline, and its per-query message bill may not grow by
+    more than one message (the bench hard-asserts messages ==
+    shards_touched per query inline);
   * contract violations and shadow divergences must be exactly zero —
     correctness counters get no noise allowance.
 
@@ -47,6 +51,8 @@ SHARDS_SLACK = 1.0
 CAND_FACTOR = 1.5
 CAND_SLACK = 0.05
 RECALL_SLACK = 0.02
+ACCURACY_SLACK = 0.02
+MESSAGES_SLACK = 1.0
 
 
 def _check(row: dict, base: dict) -> list:
@@ -87,6 +93,14 @@ def _check(row: dict, base: dict) -> list:
     if base.get("recall_min") is not None:
         lower("recall_min", base["recall_min"] - RECALL_SLACK,
               f"baseline - {RECALL_SLACK}")
+    if base.get("predict_accuracy") is not None:
+        lower("predict_accuracy",
+              base["predict_accuracy"] - ACCURACY_SLACK,
+              f"baseline - {ACCURACY_SLACK}")
+    if base.get("predict_messages") is not None:
+        upper("predict_messages",
+              base["predict_messages"] + MESSAGES_SLACK,
+              f"baseline + {MESSAGES_SLACK}")
     for field in ("contract_violations", "shadow_divergences"):
         v = row.get(field)
         if v is not None and int(v) != 0:
@@ -126,6 +140,7 @@ def self_test() -> int:
         "smoke": True, "qps": 120.0, "p50_ms": 8.0, "p99_ms": 20.0,
         "routed_qps": 90.0, "shards_touched": 2.5,
         "candidate_fraction": 0.25, "recall_min": 0.99,
+        "predict_accuracy": 0.97, "predict_messages": 8.0,
         "contract_violations": 0, "shadow_divergences": 0,
     }
     history = [dict(base_row) for _ in range(5)]
@@ -150,8 +165,15 @@ def self_test() -> int:
         print("check_perf: SELF-TEST FAIL — contract violation passed")
         return 1
 
+    dumb_row = dict(base_row, predict_accuracy=0.80)
+    if check(dumb_row, history) == 0:
+        print("check_perf: SELF-TEST FAIL — prediction accuracy "
+              "collapse passed")
+        return 1
+
     print("check_perf: SELF-TEST PASS — clean row accepted; 2x p99, "
-          "qps collapse, and contract violation all rejected")
+          "qps collapse, contract violation, and accuracy collapse "
+          "all rejected")
     return 0
 
 

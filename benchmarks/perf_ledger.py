@@ -11,7 +11,8 @@ noise-tolerant bounds, failing CI on a regression.
 A row is deliberately small and flat (one JSON object per line): the
 headline qps/p50/p99 of the selection sampler, the routed arm's qps and
 touched-shard count, the approximate tier's candidate fraction and
-measured recall floor, and the contract/shadow audit counters.  Smoke
+measured recall floor, the ensemble-prediction arm's accuracy and
+per-query message bill, and the contract/shadow audit counters.  Smoke
 and full-size rows carry a ``smoke`` flag and are baselined separately
 — their absolute numbers differ by an order of magnitude.
 
@@ -32,6 +33,7 @@ SCHEMA = "knn.perf.v1"
 NUMERIC_FIELDS = (
     "qps", "p50_ms", "p99_ms", "routed_qps", "shards_touched",
     "candidate_fraction", "recall_min",
+    "predict_accuracy", "predict_messages",
 )
 
 
@@ -41,6 +43,7 @@ def summarize(report: dict) -> dict:
     sel = report.get("selection", {})
     pruned = report.get("routing", {}).get("pruned", {})
     clustered = report.get("index", {}).get("clustered", {})
+    ensemble = report.get("predict", {}).get("ensemble", {})
     obs = report.get("obs", {})
     meta = report.get("meta", {})
     return {
@@ -57,6 +60,8 @@ def summarize(report: dict) -> dict:
         "shards_touched": pruned.get("mean_shards_touched"),
         "candidate_fraction": clustered.get("candidate_fraction_mean"),
         "recall_min": clustered.get("recall_min"),
+        "predict_accuracy": ensemble.get("accuracy"),
+        "predict_messages": ensemble.get("mean_messages"),
         "contract_checks": obs.get("contract_checks"),
         "contract_violations": obs.get("contract_violations"),
         "shadow_checks": obs.get("shadow_checks"),

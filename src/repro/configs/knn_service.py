@@ -154,6 +154,37 @@ class KnnServiceConfig:
     # approx batch whose measured recall@l drops below this floor.
     recall_floor: float = 0.95
 
+    # ---- label prediction (src/repro/predict/) --------------------------
+    # What to predict from the neighbors' label payloads: "none" (default)
+    # serves ids/distances only; "vote" majority-votes a class id over
+    # num_classes classes; "regress" means the label values.  Requires a
+    # labeled backing (MutableStore with_labels=True, or the static
+    # labels= constructor arg).
+    predict: str = "none"
+    # How the prediction is computed: "exact" runs Algorithm 2 and folds
+    # the winner mask into the vote inside the fused executable — the
+    # label is bit-identical to a single-machine vote/mean over the true
+    # l nearest neighbors, for +1 round / +(t-1) messages (the class
+    # histogram crossing the network).  "ensemble" skips the selection
+    # collectives entirely: each routed shard answers its local-kNN vote
+    # in ONE message (arXiv 1812.05005) and the host aggregates — the
+    # message bill is exactly touched_shards, and accuracy-vs-exact is a
+    # measured contract (accuracy_floor).  Ensemble requires
+    # search="exact" and host-computed routing (route_compute="host").
+    predict_mode: str = "exact"
+    # Ensemble local-k rule: 0 (auto) uses ceil(l / touched_shards) — the
+    # budget split arXiv 1812.05005 analyzes, which degenerates to the
+    # exact vote on a 1-shard store; >0 pins every shard's local k.
+    local_k: int = 0
+    # The ensemble accuracy contract: the accuracy-mode shadow audit
+    # (obs/audit.py) flags any sampled batch whose ensemble-vs-exact
+    # label agreement drops below this floor.
+    accuracy_floor: float = 0.9
+    # Label-agreement SLO (obs/slo.py): lower bound on the shadow-audited
+    # agreement fraction, burn-rate-windowed like the recall floor.
+    # 0 = off.
+    slo_label_agreement_floor: float = 0.0
+
     # ---- observability plane (src/repro/obs/) ---------------------------
     # Flight-recorder tracing: when on, the server records spans for the
     # full request lifecycle (enqueue -> queued -> dispatch -> snapshot ->
@@ -231,7 +262,8 @@ class KnnServiceConfig:
             split_radius_factor=self.split_radius_factor,
             maintenance=self.maintenance,
             index_buckets=self.index_buckets if self.search == "approx"
-            else 0)
+            else 0,
+            with_labels=self.predict != "none")
 
 
 CONFIG = KnnServiceConfig()

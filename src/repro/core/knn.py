@@ -51,6 +51,7 @@ class KnnResult(NamedTuple):
     prune: sampling.PruneResult     # Lemma 2.3 stats
     dists: jax.Array | None         # (B, l) replicated, or None
     ids: jax.Array | None           # (B, l) replicated, or None
+    local_labels: jax.Array | None = None  # (B, L) labels aligned with mask
 
 
 def squared_l2_distances(queries: jax.Array, points: jax.Array) -> jax.Array:
@@ -67,24 +68,39 @@ def squared_l2_distances(queries: jax.Array, points: jax.Array) -> jax.Array:
     return jnp.maximum(q2 - 2.0 * qp + p2[None, :], 0.0)
 
 
-def local_top_l(d: jax.Array, ids: jax.Array, l: int):
+def local_top_l(d: jax.Array, ids: jax.Array, l: int, extra=None):
     """Per-shard top-l smallest (Algorithm 2, Step 2), +inf sentinel padded.
 
     ``d``: (B, m) distances, ``ids``: (B, m) or (m,) global ids.  When the
     shard holds fewer than l points the paper pads with "fake" sentinel
     points of infinite value; callers with m < l must pre-pad (XLA shapes are
     static, so the pad is part of the buffer layout, not data-dependent).
+
+    ``extra`` ((m,) or (B, m), optional) is a per-slot payload — the
+    prediction plane's label buffer — reordered by the *same* top-l
+    permutation, so ``extra[b, i]`` stays the payload of the point behind
+    ``d[b, i]``/``ids[b, i]``.  With ``extra`` the return is a 3-tuple
+    (payload pad slots carry 0; they sit behind +inf distances, which
+    every consumer masks on).
     """
     if ids.ndim == 1:
         ids = jnp.broadcast_to(ids[None], d.shape)
+    if extra is not None and extra.ndim == 1:
+        extra = jnp.broadcast_to(extra[None], d.shape)
     m = d.shape[-1]
     if m <= l:
         pad = l - m
         d = jnp.pad(d, ((0, 0), (0, pad)), constant_values=jnp.inf)
         ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=2**31 - 1)
+        if extra is not None:
+            return d, ids, jnp.pad(extra, ((0, 0), (0, pad)))
         return d, ids
     neg_top, top_idx = lax.top_k(-d, l)
-    return -neg_top, jnp.take_along_axis(ids, top_idx, axis=-1)
+    out_d = -neg_top
+    out_ids = jnp.take_along_axis(ids, top_idx, axis=-1)
+    if extra is not None:
+        return out_d, out_ids, jnp.take_along_axis(extra, top_idx, axis=-1)
+    return out_d, out_ids
 
 
 def gather_selected(d, gid, mask, l: int, *, axis_name: str):
@@ -174,6 +190,7 @@ def _knn_pipeline(
     points, point_ids, queries, l_buf, l_run, key, *,
     axis_name, distances_fn, use_sampling, num_pivots, gather_results,
     point_valid=None, shard_active=None, point_candidates=None,
+    point_labels=None,
 ) -> KnnResult:
     """Shared Algorithm 2 body.
 
@@ -191,13 +208,23 @@ def _knn_pipeline(
     ``shard_active`` (optional) is the pruned-routing whole-shard flag
     (:func:`_apply_shard_routing`); ``point_candidates`` ((m,) bool,
     optional) is the approximate in-shard candidate mask
-    (:func:`_fold_candidates`).
+    (:func:`_fold_candidates`).  ``point_labels`` ((m,) f32, optional)
+    is the prediction plane's per-slot payload, carried through the
+    local top-l permutation into ``KnnResult.local_labels`` so
+    :func:`knn_classify`/:func:`knn_regress` can vote over exactly the
+    selected winners (tombstoned / routed-away / non-candidate slots
+    never reach the mask, so they never vote).
     """
     point_valid = _apply_shard_routing(point_valid, shard_active,
                                        points.shape[0])
     point_valid = _fold_candidates(point_valid, point_candidates)
     d_full = _masked_distances(distances_fn, queries, points, point_valid)
-    d, gid = local_top_l(d_full, point_ids, l_buf)               # (B, l_buf)
+    labels_top = None
+    if point_labels is not None:
+        d, gid, labels_top = local_top_l(d_full, point_ids, l_buf,
+                                         extra=point_labels)
+    else:
+        d, gid = local_top_l(d_full, point_ids, l_buf)           # (B, l_buf)
 
     if use_sampling:
         prune = sampling.sample_prune(d, key, l_run, axis_name=axis_name)
@@ -217,7 +244,8 @@ def _knn_pipeline(
     if gather_results:
         dists, ids = gather_selected(d, gid, mask, l_buf, axis_name=axis_name)
     return KnnResult(mask=mask, local_dists=d, local_ids=gid, selection=sel,
-                     prune=prune, dists=dists, ids=ids)
+                     prune=prune, dists=dists, ids=ids,
+                     local_labels=labels_top)
 
 
 def knn_query(
@@ -235,6 +263,7 @@ def knn_query(
     point_valid: jax.Array | None = None,
     shard_active: jax.Array | None = None,
     point_candidates: jax.Array | None = None,
+    point_labels: jax.Array | None = None,
 ) -> KnnResult:
     """Full Algorithm 2 inside a shard_map context.
 
@@ -245,13 +274,15 @@ def knn_query(
     stores — invalid slots are treated as the paper's +inf fake points.
     ``shard_active`` (optional): this shard's ``route="pruned"`` flag —
     False masks the whole shard the same way (store/summaries.py).
+    ``point_labels`` ((m,) f32, optional): the prediction plane's label
+    payload, returned top-l-aligned in ``KnnResult.local_labels``.
     """
     return _knn_pipeline(
         points, point_ids, queries, l, l, key, axis_name=axis_name,
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
         point_valid=point_valid, shard_active=shard_active,
-        point_candidates=point_candidates)
+        point_candidates=point_candidates, point_labels=point_labels)
 
 
 def knn_query_batched(
@@ -270,6 +301,7 @@ def knn_query_batched(
     point_valid: jax.Array | None = None,
     shard_active: jax.Array | None = None,
     point_candidates: jax.Array | None = None,
+    point_labels: jax.Array | None = None,
 ) -> KnnResult:
     """Algorithm 2 with a *per-request* neighbor count — the serving form.
 
@@ -295,7 +327,7 @@ def knn_query_batched(
         distances_fn=distances_fn, use_sampling=use_sampling,
         num_pivots=num_pivots, gather_results=gather_results,
         point_valid=point_valid, shard_active=shard_active,
-        point_candidates=point_candidates)
+        point_candidates=point_candidates, point_labels=point_labels)
 
 
 def knn_simple(

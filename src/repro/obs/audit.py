@@ -39,7 +39,11 @@ in dists/ids is counted and detailed.  Sampling keeps the cost at
 Under ``search="approx"`` (DESIGN.md Section 13) bit-identity is no
 longer the contract — the auditor's ``mode="recall"`` instead measures
 recall@l of the served answer against the exact replay and flags any
-batch whose minimum row recall dips below the configured floor.
+batch whose minimum row recall dips below the configured floor.  Under
+ensemble prediction (DESIGN.md Section 15) the served answer is a label
+from one-message-per-shard local votes — ``mode="accuracy"`` measures
+its agreement with the exact-fold replay's label and flags any batch
+whose agreement fraction dips below the accuracy floor.
 
 Zero-dependency: stdlib only (answers are compared through
 ``.tobytes()``, which any array provides).
@@ -136,15 +140,23 @@ class ShadowAuditor:
       the floor counts as a divergence; the observed minimum also feeds
       the ``audit.shadow.recall`` histogram so the snapshot reports the
       measured contract, not just pass/fail.
+    * ``mode="accuracy"`` — the ensemble-prediction contract
+      (``predict_mode="ensemble"``, predict/ensemble.py): the served
+      label comes from per-shard local votes, so bit-identity to the
+      exact vote is not promised — instead the agreement fraction over
+      the batch's real rows (label equality vs the exact-fold replay;
+      a batch with no real rows is vacuously 1.0) must stay at or above
+      ``floor``.  Checked through :meth:`check_labels`; the observed
+      fraction feeds the ``audit.shadow.agreement`` histogram.
     """
 
     def __init__(self, registry: MetricsRegistry, *, every: int,
                  mode: str = "bytes", floor: float = 0.95):
         if every < 1:
             raise ValueError("every must be >= 1 (use None/off upstream)")
-        if mode not in ("bytes", "recall"):
-            raise ValueError(f"mode must be 'bytes' or 'recall', "
-                             f"got {mode!r}")
+        if mode not in ("bytes", "recall", "accuracy"):
+            raise ValueError(f"mode must be 'bytes', 'recall' or "
+                             f"'accuracy', got {mode!r}")
         self.every = int(every)
         self.mode = mode
         self.floor = float(floor)
@@ -154,7 +166,10 @@ class ShadowAuditor:
         self._divergences = registry.counter("audit.shadow.divergences")
         self._recall = (registry.histogram("audit.shadow.recall")
                         if mode == "recall" else None)
+        self._agreement = (registry.histogram("audit.shadow.agreement")
+                           if mode == "accuracy" else None)
         self.last_min_recall: Optional[float] = None
+        self.last_agreement: Optional[float] = None
         self.details: list = []
 
     def due(self) -> bool:
@@ -195,6 +210,42 @@ class ShadowAuditor:
                     "touched": int(touched), **detail})
         return ok
 
+    def check_labels(self, served_labels, ls, exact_fn, *,
+                     generation: int = -1, batch_id: int = -1,
+                     touched: int = -1) -> bool:
+        """``mode="accuracy"`` entry point: replay through ``exact_fn``
+        (the exact-fold executable at the same generation/key, all
+        shards active — returns the (B,) exact label vector) and measure
+        the agreement fraction over the batch's real rows (``ls > 0``);
+        returns True while it holds the floor."""
+        if self.mode != "accuracy":
+            raise RuntimeError(f"check_labels needs mode='accuracy', "
+                               f"auditor is {self.mode!r}")
+        exact = exact_fn()
+        agree = total = 0
+        for s, e, l in zip(served_labels.tolist(), exact.tolist(),
+                           ls.tolist()):
+            if l <= 0:
+                continue                    # bucket padding: no answer owed
+            total += 1
+            agree += int(s == e)
+        agreement = agree / total if total else 1.0
+        self._agreement.observe(agreement)
+        self.last_agreement = agreement
+        self._checks.inc()
+        ok = agreement >= self.floor
+        if not ok:
+            self._divergences.inc()
+            with self._lock:
+                if len(self.details) >= _MAX_DETAILS:
+                    self.details.pop(0)
+                self.details.append({
+                    "generation": int(generation),
+                    "batch_id": int(batch_id),
+                    "touched": int(touched),
+                    "agreement": agreement})
+        return ok
+
     @staticmethod
     def _min_recall(served_ids, exact_ids) -> float:
         """Minimum per-row recall@l of the served answer against the
@@ -223,4 +274,7 @@ class ShadowAuditor:
             if self.mode == "recall":
                 snap["floor"] = self.floor
                 snap["recall"] = self._recall.snapshot()
+            elif self.mode == "accuracy":
+                snap["floor"] = self.floor
+                snap["agreement"] = self._agreement.snapshot()
             return snap

@@ -21,6 +21,8 @@ python scalars/lists: ``batch`` (id, bucket, generation, touched,
 contract verdict), ``request`` (row, l, recall_mode, content digests),
 ``routing`` (per-shard bounds + threshold + keep), ``index``
 (per-bucket keep, recompute cross-check, candidate fraction),
+``predict`` (the label answer, its mode and confidence, and — for
+ensemble mode — the per-shard vote table and local-k split),
 ``timings`` (queue/snapshot/route/kernel/resolve stage seconds), and
 ``maintenance`` (whether a store commit raced the request, and which).
 :func:`deterministic_json` serializes the *stable* subset — timings,
@@ -68,7 +70,8 @@ class BatchCapture:
                  "queries", "ls", "summaries", "index", "active",
                  "keep_any", "touched", "candidate_fraction", "timings",
                  "maint_before", "maint_after", "maint_last",
-                 "contract_ok")
+                 "contract_ok", "predict", "predict_mode", "labels",
+                 "confidences", "local_k", "shard_answers", "votes")
 
     def __init__(self, **kw):
         for name in self.__slots__:
@@ -130,6 +133,7 @@ class ExplainRecord:
             },
             "routing": routing,
             "index": self._index_section(np, shard_keep),
+            "predict": self._predict_section(np),
             "timings": {
                 "queued_s": self.queued_s,
                 "latency_s": self.latency_s,
@@ -215,6 +219,36 @@ class ExplainRecord:
             # the flag then honestly reports whether it did.
             sec["kept_matches_recompute"] = bool(
                 (actual == recomputed_any).all())
+        return sec
+
+    def _predict_section(self, np):
+        """The label answer with its working: mode, label, confidence;
+        for ensemble mode additionally this row's local-k split, the
+        per-shard answer table (class histogram per shard for "vote",
+        [sum, count] per shard for "regress") and the shard-vote tally
+        the majority was taken over — all captured from the dispatch's
+        own aggregation inputs, no recomputation."""
+        cap = self.capture
+        if not cap.predict or cap.predict == "none":
+            return {"enabled": False}
+        r = self.row
+        sec = {
+            "enabled": True,
+            "predict": cap.predict,
+            "mode": cap.predict_mode,
+            "label": float(np.asarray(cap.labels)[r]),
+            "confidence": float(np.asarray(cap.confidences)[r]),
+        }
+        if cap.local_k is not None:
+            sec["local_k"] = int(np.asarray(cap.local_k)[r])
+        if cap.shard_answers is not None:
+            table = np.asarray(cap.shard_answers)[:, r]      # (k, C|2)
+            cast = int if cap.predict == "vote" else float
+            sec["shard_answers"] = [[cast(v) for v in row]
+                                    for row in table]
+        if cap.votes is not None:
+            sec["shard_votes"] = [int(v)
+                                  for v in np.asarray(cap.votes)[r]]
         return sec
 
 

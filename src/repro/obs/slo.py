@@ -3,11 +3,13 @@ metrics registry's sliding windows.
 
 The flight recorder (trace ring, histograms, auditors) answers "what
 happened"; this module answers the operator's standing question — "are
-we *currently* violating what we promised?" — for four promises the
+we *currently* violating what we promised?" — for five promises the
 config can declare (configs/knn_service.py ``slo_*`` knobs):
 
 * ``latency_p99`` — per-request end-to-end latency bound (seconds),
 * ``recall_min`` — shadow-audited minimum recall@l floor (approx tier),
+* ``label_agreement`` — shadow-audited ensemble-vs-exact label
+  agreement floor (ensemble prediction tier),
 * ``staleness`` — answer generation lag behind the store head
   (generations; an epoch-swapped server normally serves lag 0/1),
 * ``contract`` — Theorem-1 round/message envelope verdicts (any
@@ -116,6 +118,10 @@ class SloEngine:
         if getattr(cfg, "slo_recall_floor", 0.0) > 0.0:
             objectives.append(SloObjective(
                 "recall_min", "lower", cfg.slo_recall_floor))
+        if getattr(cfg, "slo_label_agreement_floor", 0.0) > 0.0:
+            objectives.append(SloObjective(
+                "label_agreement", "lower",
+                cfg.slo_label_agreement_floor))
         if getattr(cfg, "slo_staleness_generations", 0) > 0:
             objectives.append(SloObjective(
                 "staleness", "upper", cfg.slo_staleness_generations))

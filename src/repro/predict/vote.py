@@ -1,0 +1,60 @@
+"""Exact-mode prediction fold — runs inside the fused shard_map body.
+
+Takes the :class:`repro.core.knn.KnnResult` of Algorithm 2 (whose winner
+``mask`` marks exactly the l global nearest neighbors, per-shard) plus
+the top-l-aligned label payload and reduces it to one label +
+confidence per query with a single psum — the class histogram / value
+sum is the only thing that crosses the network, never the points or
+labels themselves (the paper's privacy note extends to inference).
+
+Determinism contract: classification ties break toward the *lowest*
+class id (``argmax`` returns the first maximum), identically on every
+backend and every shard count — two fresh servers with the same key and
+generation produce identical label bytes (tests/test_predict.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import knn
+
+
+def exact_predict(res: knn.KnnResult, l_run, *, predict: str,
+                  num_classes: int, axis_name: str):
+    """Fold the winner mask into a label; ``(label, confidence, detail)``.
+
+    ``predict="vote"``: majority class over the l winners via
+    :func:`repro.core.knn.knn_classify` (1 psum of (B, C) int32).
+    ``label`` is the class id as f32, ``confidence`` the winning class's
+    vote share, ``detail`` the replicated (B, C) histogram.
+
+    ``predict="regress"``: mean label value over the l winners (1 psum
+    of two (B,) f32 reductions).  ``label`` is the mean, ``confidence``
+    the fraction of the requested l actually found (short rows — fewer
+    live points than l — report < 1), ``detail`` the stacked
+    (B, 2) [sum, count].
+
+    Rows with ``l_run == 0`` (micro-batch bucket padding) have an empty
+    mask: they come back label −1 / confidence 0 (vote) or 0 / 0
+    (regress) and never influence live rows.
+    """
+    labels = res.local_labels
+    l_f = jnp.maximum(jnp.asarray(l_run, jnp.float32), 1.0)
+    if predict == "vote":
+        cls, hist = knn.knn_classify(res.mask, labels.astype(jnp.int32),
+                                     num_classes, axis_name=axis_name)
+        total = jnp.sum(hist, axis=-1)
+        top = jnp.max(hist, axis=-1)
+        conf = top.astype(jnp.float32) / jnp.maximum(
+            total.astype(jnp.float32), 1.0)
+        label = jnp.where(total > 0, cls, -1).astype(jnp.float32)
+        return label, conf, hist
+    # regress: one psum carries both reductions (a pytree psum fuses)
+    num = jnp.sum(jnp.where(res.mask, labels, 0.0), axis=-1)
+    den = jnp.sum(res.mask.astype(jnp.float32), axis=-1)
+    num, den = lax.psum((num, den), axis_name)
+    label = num / jnp.maximum(den, 1.0)
+    conf = den / l_f
+    return label, conf, jnp.stack([num, den], axis=-1)

@@ -85,6 +85,19 @@ decision runs as the second stage of the same Pallas prologue
 (kernels/routing.index_mask), so the candidate mask also rides the
 batch's own launch.  benchmarks/bench_serve.py runs the exact-vs-approx
 A/B and hard-asserts the recall floor at the candidate-reduction target.
+
+With ``cfg.predict`` set (src/repro/predict/, DESIGN.md Section 15) the
+server also answers the paper's endgame — a label for the query — in one
+of two modes.  ``predict_mode="exact"`` folds the Algorithm 2 winner
+mask into a class vote / value mean *inside* the fused executable (one
+extra psum: only the histogram crosses the network; +1 round, +(t-1)
+messages) and is bit-identical to a single-machine vote over the true
+l nearest neighbors.  ``predict_mode="ensemble"`` skips the selection
+collectives entirely: each routed shard answers its local-kNN vote in
+ONE message (arXiv 1812.05005) and the host aggregates — the message
+bill is exactly ``touched_shards``, and the accuracy gap vs exact is a
+measured contract (``cfg.accuracy_floor``, ShadowAuditor
+mode="accuracy", bench_serve's accuracy-vs-message-bill table).
 """
 
 from __future__ import annotations
@@ -110,6 +123,7 @@ from repro.obs import (BatchCapture, ContractAuditor, ExplainRecord,
 from repro.obs.export import ObsHttpServer
 from repro.obs.metrics import default_registry
 from repro.parallel.compat import make_mesh, shard_map
+from repro import predict as predict_mod
 from repro.store import index as index_mod
 from repro.store import summaries as summaries_mod
 
@@ -151,6 +165,15 @@ class QueryResult(NamedTuple):
     through the per-shard bucket index (``cfg.search``, store/index.py)
     and carries the measured recall contract (``cfg.recall_floor``,
     shadow-audited) instead.
+
+    ``label``/``confidence`` are the prediction plane's answer
+    (``cfg.predict``; None when prediction is off): the majority class
+    id (as f32; -1 when no live neighbor voted) with its vote share, or
+    the regression mean with the answering fraction.  ``predict_mode``
+    tags how it was computed: ``"exact"`` (bit-identical to a
+    single-machine vote over the true l-NN) or ``"ensemble"``
+    (one-message-per-shard local votes, host-aggregated — dists/ids are
+    all-sentinel because no point ever leaves its shard).
     """
 
     dists: np.ndarray
@@ -168,6 +191,9 @@ class QueryResult(NamedTuple):
     shards_touched: int = -1   # carrying batch's touched-shard count
     recall_mode: str = "exact"   # "exact" | "approx" (bucket index used)
     explain_ref: object = None   # ExplainRecord handle (obs/explain.py)
+    label: Optional[float] = None       # predicted class id / mean value
+    confidence: Optional[float] = None  # vote share / answering fraction
+    predict_mode: str = "none"   # "none" | "exact" | "ensemble"
 
     def explain(self) -> Optional[dict]:
         """The per-query explain report (obs/explain.py SCHEMA):
@@ -276,7 +302,7 @@ class KnnServer:
     request to fill a bucket before dispatching.
     """
 
-    def __init__(self, points=None, values=None, *, store=None,
+    def __init__(self, points=None, values=None, labels=None, *, store=None,
                  cfg: KnnServiceConfig = CONFIG, mesh=None,
                  axis_name: str = "knn", seed: int = 0):
         self.cfg = cfg
@@ -296,14 +322,55 @@ class KnnServer:
         if cfg.search == "approx" and cfg.index_buckets < 1:
             raise ValueError(f"search='approx' needs index_buckets >= 1, "
                              f"got {cfg.index_buckets}")
+        if cfg.predict not in ("none", "vote", "regress"):
+            raise ValueError(f"predict must be 'none', 'vote' or "
+                             f"'regress', got {cfg.predict!r}")
+        if cfg.predict_mode not in ("exact", "ensemble"):
+            raise ValueError(f"predict_mode must be 'exact' or 'ensemble', "
+                             f"got {cfg.predict_mode!r}")
         self._indexed = cfg.search == "approx"
-        self._store = store
-        if store is not None:
-            if points is not None or values is not None:
+        self._predict = cfg.predict != "none"
+        self._ensemble = self._predict and cfg.predict_mode == "ensemble"
+        if self._predict and cfg.sampler != "selection":
+            raise ValueError(
+                f"predict={cfg.predict!r} needs sampler='selection' "
+                f"(the gather baseline has no winner mask to vote over), "
+                f"got sampler={cfg.sampler!r}")
+        if self._ensemble:
+            # The ensemble executable is collective-free by construction
+            # (the one-message-per-shard bill is the whole point), so the
+            # per-row local-k split must be computed host-side from the
+            # touched-shard count — which rules out device routing — and
+            # the per-shard local top-l must be the true local top-l,
+            # which rules out the approximate bucket index.
+            if cfg.search != "exact":
                 raise ValueError(
-                    "pass either points/values or store=, not both")
+                    "predict_mode='ensemble' requires search='exact' "
+                    "(per-shard local votes need the true local top-l)")
+            if cfg.route == "pruned" and cfg.route_compute == "device":
+                raise ValueError(
+                    "predict_mode='ensemble' requires route_compute="
+                    "'host': the local-k split needs the touched-shard "
+                    "count before the launch")
+            if cfg.obs_audit_every > 0 and cfg.predict != "vote":
+                raise ValueError(
+                    "the accuracy shadow audit (obs_audit_every > 0 with "
+                    "predict_mode='ensemble') needs predict='vote' — "
+                    "label agreement is defined on class ids")
+        self._store = store
+        self._labels = None          # device label operand (predict only)
+        self._labels_host = None     # host mirror for labels_for (static)
+        if store is not None:
+            if points is not None or values is not None or labels is not None:
+                raise ValueError(
+                    "pass either points/values/labels or store=, not both")
             if mesh is not None and mesh != store.mesh:
                 raise ValueError("store-backed server uses the store's mesh")
+            if self._predict and not store.with_labels:
+                raise ValueError(
+                    f"predict={cfg.predict!r} needs a labeled store: "
+                    f"construct it with with_labels=True "
+                    f"(cfg.store_kwargs() does when predict != 'none')")
             self.axis_name = store.axis_name
             self.mesh = store.mesh
             self.k = store.k
@@ -334,6 +401,17 @@ class KnnServer:
             self._ids = jax.device_put(np.arange(n, dtype=np.int32), sharded)
             self._values = None if values is None else np.asarray(values,
                                                                   np.int32)
+            if labels is not None:
+                labels = np.asarray(labels, np.float32)
+                if labels.shape != (n,):
+                    raise ValueError(f"labels shape {labels.shape} != "
+                                     f"({n},)")
+                self._labels_host = labels
+                self._labels = jax.device_put(labels, sharded)
+            if self._predict and self._labels is None:
+                raise ValueError(
+                    f"predict={cfg.predict!r} on a static server needs "
+                    f"the labels= constructor argument")
 
         # Static-point routing summaries, built once at generation 0
         # (store-backed servers instead capture the store's
@@ -392,7 +470,11 @@ class KnnServer:
             kops.service_envelope(b, self.m_local, self.dim, cfg.l_max)
             for b in cfg.bucket_sizes]
 
+        # The exact-fold executable is built even for ensemble servers:
+        # it is the oracle the accuracy shadow audit replays through.
         self._fn = self._build_executable()
+        self._ensemble_fn = (self._build_ensemble_executable()
+                             if self._ensemble else None)
         # route_compute="device": fold the routing decision into the same
         # jitted program as the query (Pallas prologue, kernels/routing.py).
         # The packed summary operands are cached per frozen-summaries
@@ -443,11 +525,17 @@ class KnnServer:
         self._contract = ContractAuditor(reg, k=self.k)
         # The shadow replay audits whichever contract this server
         # serves: byte-identity for pruned exact routing, measured
-        # recall@l against the floor for the approximate index tier.
+        # recall@l against the floor for the approximate index tier,
+        # ensemble-vs-exact label agreement for ensemble prediction.
+        if self._ensemble:
+            audit_mode, audit_floor = "accuracy", cfg.accuracy_floor
+        elif self._indexed:
+            audit_mode, audit_floor = "recall", cfg.recall_floor
+        else:
+            audit_mode, audit_floor = "bytes", cfg.recall_floor
         self._shadow = (ShadowAuditor(
             reg, every=cfg.obs_audit_every,
-            mode="recall" if self._indexed else "bytes",
-            floor=cfg.recall_floor)
+            mode=audit_mode, floor=audit_floor)
             if cfg.obs_audit_every > 0 else None)
         self._env_by_bucket = dict(zip(cfg.bucket_sizes, self.envelopes))
         # ---- operator layer (obs/explain.py, obs/slo.py, obs/export.py,
@@ -501,20 +589,34 @@ class KnnServer:
         # (core/knn point_candidates); P(axis) hands each shard its own
         # slots.
         indexed = self._indexed
+        # cfg.predict adds one (n,) f32 per-slot label operand carried
+        # through the local top-l permutation (core/knn local_top_l
+        # extra=), and two replicated outputs: the predicted label and
+        # its confidence, folded from the winner mask inside the same
+        # program (predict/vote.py — one extra psum).
+        predicting = self._predict
 
         if cfg.sampler == "selection":
-            def body(pts, pids, pvalid, pcand, active, q, l_arr, key):
+            def body(pts, pids, pvalid, plabels, pcand, active, q, l_arr,
+                     key):
                 res = knn_mod.knn_query_batched(
                     pts, pids, q, l_max, l_arr, key, axis_name=axis,
                     distances_fn=distances_fn,
                     use_sampling=cfg.use_sampling,
                     num_pivots=cfg.num_pivots,
                     point_valid=pvalid, shard_active=active,
-                    point_candidates=pcand)
-                return (res.dists, res.ids, res.selection.iterations,
-                        res.prune.survivors)
+                    point_candidates=pcand, point_labels=plabels)
+                out = (res.dists, res.ids, res.selection.iterations,
+                       res.prune.survivors)
+                if plabels is None:
+                    return out
+                label, conf, _detail = predict_mod.exact_predict(
+                    res, l_arr, predict=cfg.predict,
+                    num_classes=cfg.num_classes, axis_name=axis)
+                return out + (label, conf)
         elif cfg.sampler == "gather":
-            def body(pts, pids, pvalid, pcand, active, q, l_arr, key):
+            def body(pts, pids, pvalid, plabels, pcand, active, q, l_arr,
+                     key):
                 sd, si = knn_mod.knn_simple(
                     pts, pids, q, l_max, axis_name=axis,
                     distances_fn=distances_fn, point_valid=pvalid,
@@ -530,7 +632,7 @@ class KnnServer:
             raise ValueError(f"unknown sampler {cfg.sampler!r}")
 
         # Operand layout composes by flag, always in this order:
-        #   pts, pids, [pvalid], [pcand], [active], q, l_arr, key
+        #   pts, pids, [pvalid], [plabels], [pcand], [active], q, l_arr, key
         # — every present optional operand is sharded P(axis).  The
         # dispatch/warmup/replay sites assemble operands in the same
         # order from the same flags.
@@ -538,17 +640,74 @@ class KnnServer:
             it = iter(a)
             pts, pids = next(it), next(it)
             pvalid = next(it) if masked else None
+            plabels = next(it) if predicting else None
             pcand = next(it) if indexed else None
             active = next(it) if routed else None
             q, l_arr, key = next(it), next(it), next(it)
-            return body(pts, pids, pvalid, pcand, active, q, l_arr, key)
+            return body(pts, pids, pvalid, plabels, pcand, active, q,
+                        l_arr, key)
 
-        n_sharded = 2 + int(masked) + int(indexed) + int(routed)
+        n_sharded = (2 + int(masked) + int(predicting) + int(indexed)
+                     + int(routed))
         in_specs = (P(axis),) * n_sharded + (P(None), P(None), P(None))
+        out_specs = (P(None), P(None), P(), P(None))
+        if predicting:
+            out_specs = out_specs + (P(None), P(None))
 
         return jax.jit(shard_map(
             fn, mesh=self.mesh, in_specs=in_specs,
-            out_specs=(P(None), P(None), P(), P(None)),
+            out_specs=out_specs,
+            check_vma=False))
+
+    def _build_ensemble_executable(self):
+        """The one-message-per-shard prediction program (predict/
+        ensemble.py, arXiv 1812.05005).
+
+        Collective-free by construction: each shard computes its masked
+        local top-l (tombstones, routed-away shards, and bucket padding
+        enter at +inf exactly as in the exact path) and reduces its
+        first ``kl`` finite candidates to a class histogram / (sum,
+        count) pair.  The output leaves the program *sharded*
+        (out_spec P(axis) → host (k, B, C)): in the k-machine model each
+        routed shard sends exactly one O(C) message and nothing else —
+        the ``messages == touched_shards`` bill ``_accounting`` charges
+        and bench_serve hard-asserts.  The per-row local-k operand
+        ``kl`` comes from the host (predict/ensemble.local_k_for), which
+        is why ensemble mode requires host-computed routing.
+        """
+        cfg = self.cfg
+        axis = self.axis_name
+        l_max = cfg.l_max
+        distances_fn = self._distances_fn()
+        masked = self._store is not None
+        routed = cfg.route == "pruned"
+        vote = cfg.predict == "vote"
+        num_classes = cfg.num_classes
+
+        def fn(*a):
+            it = iter(a)
+            pts, pids = next(it), next(it)
+            pvalid = next(it) if masked else None
+            plabels = next(it)
+            active = next(it) if routed else None
+            q, kl = next(it), next(it)
+            valid = knn_mod._apply_shard_routing(pvalid, active,
+                                                 pts.shape[0])
+            d_full = knn_mod._masked_distances(distances_fn, q, pts,
+                                               valid)
+            d, _gid, labels_top = knn_mod.local_top_l(
+                d_full, pids, l_max, extra=plabels)
+            if vote:
+                out = predict_mod.local_vote(d, labels_top, kl,
+                                             num_classes)
+            else:
+                out = predict_mod.local_mean(d, labels_top, kl)
+            return out[None]          # (1, B, C) -> stacked (k, B, C)
+
+        n_sharded = 3 + int(masked) + int(routed)
+        in_specs = (P(axis),) * n_sharded + (P(None), P(None))
+        return jax.jit(shard_map(
+            fn, mesh=self.mesh, in_specs=in_specs, out_specs=P(axis),
             check_vma=False))
 
     def _build_device_router(self):
@@ -579,9 +738,9 @@ class KnnServer:
             def routed(operands, packed, q, l_arr, key):
                 rows = kops.route_mask(q, l_arr, packed, slack=slack)
                 active = jnp.any(rows, axis=0)
-                d, i, iters, surv = inner(*operands, active, q, l_arr,
-                                          key)
-                return d, i, iters, surv, active
+                out = inner(*operands, active, q, l_arr, key)
+                # d, i, iters, surv [, label, conf] + the touched set
+                return tuple(out) + (active,)
 
             return jax.jit(routed)
 
@@ -595,9 +754,8 @@ class KnnServer:
                                     oversample=oversample)
             keep_any = jnp.any(brows, axis=0)          # (k·b,)
             cand = has & keep_any[colidx]              # (n,) slot mask
-            d, i, iters, surv = inner(*operands, cand, active, q, l_arr,
-                                      key)
-            return d, i, iters, surv, active, keep_any
+            out = inner(*operands, cand, active, q, l_arr, key)
+            return tuple(out) + (active, keep_any)
 
         return jax.jit(routed_indexed)
 
@@ -650,9 +808,14 @@ class KnnServer:
                 snap, summ, idx = self._store.serving_snapshot()
             else:
                 (snap, summ), idx = self._store.routing_snapshot(), None
-            return ((snap.points, snap.ids, snap.valid), snap.generation,
-                    summ, idx)
-        return (self._points, self._ids), 0, self._summaries, self._index0
+            ops = (snap.points, snap.ids, snap.valid)
+            if self._predict:
+                ops = ops + (snap.labels,)
+            return ops, snap.generation, summ, idx
+        ops = (self._points, self._ids)
+        if self._predict:
+            ops = ops + (self._labels,)
+        return ops, 0, self._summaries, self._index0
 
     def placement_stats(self) -> dict:
         """Locality and bound fidelity of the layout being served, as
@@ -759,6 +922,14 @@ class KnnServer:
                                      self._base_key)
                 jax.block_until_ready(out)
             return
+        if self._ensemble_fn is not None:
+            eops = operands
+            if self.cfg.route == "pruned":
+                eops = eops + (np.ones(self.k, bool),)
+            for b in self.cfg.bucket_sizes:
+                q = np.zeros((b, self.dim), np.float32)
+                kl = np.zeros(b, np.int32)
+                jax.block_until_ready(self._ensemble_fn(*eops, q, kl))
         if self._indexed:
             operands = operands + (np.ones(self.k * self.m_local, bool),)
         if self.cfg.route == "pruned":
@@ -768,6 +939,75 @@ class KnnServer:
             l_arr = np.zeros(b, np.int32)
             out = self._fn(*operands, q, l_arr, self._base_key)
             jax.block_until_ready(out)
+
+    # ---- store passthrough ----------------------------------------------
+    # The server is most callers' only handle on the serving stack, so
+    # the store's mutation and payload APIs are exposed here 1:1 (same
+    # signatures, same atomic-batch semantics).  Static servers raise:
+    # their point set is immutable by construction.
+
+    def _require_store(self, op: str):
+        if self._store is None:
+            raise ValueError(f"{op}() needs a store-backed server "
+                             f"(construct with store=)")
+        return self._store
+
+    def insert(self, points, ids=None, values=None, labels=None):
+        """Stage point insertions on the backing store; returns the
+        assigned global ids (see MutableStore.insert — ``values`` needs
+        with_values, ``labels`` needs with_labels)."""
+        return self._require_store("insert").insert(
+            points, ids=ids, values=values, labels=labels)
+
+    def update(self, ids, points, labels=None):
+        """Stage in-place point overwrites; omitted ``labels`` keep the
+        current label payload (MutableStore.update)."""
+        return self._require_store("update").update(ids, points,
+                                                    labels=labels)
+
+    def delete(self, ids):
+        """Stage deletions by global id (MutableStore.delete)."""
+        return self._require_store("delete").delete(ids)
+
+    def flush_store(self) -> int:
+        """Apply staged mutations as one epoch swap; returns the new
+        generation (MutableStore.flush)."""
+        return self._require_store("flush_store").flush()
+
+    @property
+    def with_values(self) -> bool:
+        """Whether answers carry the int payload table (store
+        with_values, or the static ``values=`` argument)."""
+        return (self._store.with_values if self._store is not None
+                else self._values is not None)
+
+    @property
+    def with_labels(self) -> bool:
+        """Whether a label payload is attached (store with_labels, or
+        the static ``labels=`` argument)."""
+        return (self._store.with_labels if self._store is not None
+                else self._labels is not None)
+
+    def values_for(self, ids):
+        """Map global ids to int payload values, -1 where absent."""
+        if self._store is not None:
+            return self._store.values_for(ids)
+        if self._values is None:
+            raise RuntimeError("server has no value payload")
+        ids = np.asarray(ids)
+        safe = np.clip(ids, 0, len(self._values) - 1)
+        return np.where(ids == _ID_SENTINEL, -1, self._values[safe])
+
+    def labels_for(self, ids):
+        """Map global ids to label payloads, NaN where absent."""
+        if self._store is not None:
+            return self._store.labels_for(ids)
+        if self._labels_host is None:
+            raise RuntimeError("server has no label payload")
+        ids = np.asarray(ids)
+        safe = np.clip(ids, 0, len(self._labels_host) - 1)
+        return np.where(ids == _ID_SENTINEL, np.nan,
+                        self._labels_host[safe]).astype(np.float32)
 
     # ---- request path ---------------------------------------------------
 
@@ -826,15 +1066,69 @@ class KnnServer:
         route="exact"): a pruned shard holds no candidates, so it never
         sends — the leader tree carries ``touched - 1`` peers' payloads
         per round instead of ``k - 1``.
+
+        Ensemble prediction replaces the whole selection pipeline: one
+        local pass, one O(C) answer per routed shard, zero collectives —
+        1 round, exactly ``touched`` messages (the contract bench_serve
+        hard-asserts per query).  Exact prediction adds the class
+        histogram / value-sum psum on top of selection: +1 round,
+        +(touched − 1) messages.
         """
         t = max(int(touched), 1)
+        if self._ensemble:
+            return 1, t
         if self.cfg.sampler == "gather":
             # one all-gather whose per-peer payload is l_max scalars
             return 1, (t - 1) * self.cfg.l_max
         rounds = 2 * iterations            # pivot all_gather + count psum
         rounds += 2 if self.cfg.use_sampling else 0   # sample + verify
         rounds += 2                        # result gather: count + pack
-        return rounds, (t - 1) * rounds
+        messages = (t - 1) * rounds
+        if self._predict:
+            rounds += 1                    # the exact-predict psum
+            messages += t - 1
+        return rounds, messages
+
+    def _unpack_outputs(self, out):
+        """Host-side view of one executable's outputs: ``(d, i, iters,
+        surv, pred)`` where ``pred`` is the ``(label, confidence)`` pair
+        when the config predicts and ``()`` otherwise (the executable's
+        output arity follows the same flag)."""
+        d, i, iters, surv = out[:4]
+        d, i = np.asarray(d), np.asarray(i)
+        surv, iters = np.asarray(surv), int(iters)
+        pred = tuple(np.asarray(x) for x in out[4:])
+        return d, i, iters, surv, pred
+
+    def _ensemble_call(self, operands, active, q, l_arr, touched):
+        """Serve one micro-batch in ensemble mode: local-k split on the
+        host, one collective-free launch, host aggregation.
+
+        Returns ``(d, i, iters, surv, pred, payload, votes, kl)`` shaped
+        like the exact path's outputs so the dispatch tail is shared:
+        ``d``/``i`` are all-sentinel (no point identity ever leaves its
+        shard — that is the mode's bill), ``payload`` the (k, B, C)
+        per-shard answers for the explain vote table, ``votes`` the
+        (B, C) shard-vote tally (classification only), ``kl`` the per-row
+        local-k actually used.
+        """
+        cfg = self.cfg
+        kl = predict_mod.local_k_for(l_arr, touched, cfg.local_k,
+                                     cfg.l_max)
+        ops = operands if active is None else operands + (active,)
+        payload = np.asarray(self._ensemble_fn(*ops, q, kl))
+        act = (np.ones(self.k, bool) if active is None
+               else np.asarray(active, bool))
+        if cfg.predict == "vote":
+            label, conf, votes = predict_mod.aggregate_vote(payload, act)
+        else:
+            label, conf = predict_mod.aggregate_regress(payload, act)
+            votes = None
+        b = q.shape[0]
+        d = np.full((b, cfg.l_max), np.inf, np.float32)
+        i = np.full((b, cfg.l_max), _ID_SENTINEL, np.int32)
+        surv = np.zeros(b, np.int32)
+        return d, i, 0, surv, (label, conf), payload, votes, kl
 
     def _dispatch(self, chunk: list[_Pending]):
         n = len(chunk)
@@ -880,6 +1174,8 @@ class KnnServer:
             cand_frac = None       # search="approx" kept-live fraction
             keep_arr = None        # (k, b) batch-union bucket keep
             active_arr = None      # (k,) batch-union shard keep
+            pred = ()              # (label, conf) when predicting
+            epayload = evotes = kl = None    # ensemble-mode extras
             kattrs = dict(path=env["path"], l2_path=env["l2_path"],
                           fallback=env["fallback_reason"] or "")
             if self._route_fn is not None:
@@ -895,18 +1191,16 @@ class KnnServer:
                 packed = self._packed_for(summ)
                 if self._indexed:
                     iops = self._index_ops_for(idx)
-                    (d, i, iters, surv, active,
-                     keep_any) = self._route_fn(operands, packed, *iops,
-                                                q, l_arr, key)
+                    *out, active, keep_any = self._route_fn(
+                        operands, packed, *iops, q, l_arr, key)
                     keep_arr = np.asarray(keep_any).reshape(
                         self.k, idx.num_buckets)
                     cand_frac = index_mod.candidate_fraction(
                         idx, keep_arr)
                 else:
-                    d, i, iters, surv, active = self._route_fn(
-                        operands, packed, q, l_arr, key)
-                d, i = np.asarray(d), np.asarray(i)
-                surv, iters = np.asarray(surv), int(iters)
+                    *out, active = self._route_fn(operands, packed, q,
+                                                  l_arr, key)
+                d, i, iters, surv, pred = self._unpack_outputs(out)
                 active_arr = np.asarray(active)
                 touched = int(active_arr.sum())
                 kspan.end(touched=touched)
@@ -944,10 +1238,14 @@ class KnnServer:
                 kspan = tracer.begin("kernel", parent=dspan, t0=t_route1,
                                      route_compute="host", **kattrs)
                 batch_spans.append(kspan)
-                d, i, iters, surv = self._fn(*operands, *extra, active,
-                                             q, l_arr, key)
-                d, i = np.asarray(d), np.asarray(i)
-                surv, iters = np.asarray(surv), int(iters)
+                if self._ensemble:
+                    (d, i, iters, surv, pred, epayload, evotes,
+                     kl) = self._ensemble_call(operands, active, q,
+                                               l_arr, touched)
+                else:
+                    out = self._fn(*operands, *extra, active, q, l_arr,
+                                   key)
+                    d, i, iters, surv, pred = self._unpack_outputs(out)
                 kspan.end()
                 t_kern0, t_kern1 = t_route1, time.perf_counter()
             else:
@@ -968,10 +1266,13 @@ class KnnServer:
                 kspan = tracer.begin("kernel", parent=dspan, t0=t_kern0,
                                      **kattrs)
                 batch_spans.append(kspan)
-                d, i, iters, surv = self._fn(*operands, *extra, q, l_arr,
-                                             key)
-                d, i = np.asarray(d), np.asarray(i)
-                surv, iters = np.asarray(surv), int(iters)
+                if self._ensemble:
+                    (d, i, iters, surv, pred, epayload, evotes,
+                     kl) = self._ensemble_call(operands, None, q, l_arr,
+                                               touched)
+                else:
+                    out = self._fn(*operands, *extra, q, l_arr, key)
+                    d, i, iters, surv, pred = self._unpack_outputs(out)
                 kspan.end()
                 t_kern1 = time.perf_counter()
         except Exception as exc:
@@ -1014,6 +1315,8 @@ class KnnServer:
         # already holds (frozen summaries/index, its own padded query
         # block) plus the scalars above — the explain reports assemble
         # lazily from it (obs/explain.py).
+        pmode = ("none" if not self._predict
+                 else "ensemble" if self._ensemble else "exact")
         capture = BatchCapture(
             batch_id=batch_id, bucket=bucket, n_real=n,
             generation=generation, route=self.cfg.route,
@@ -1024,6 +1327,10 @@ class KnnServer:
             queries=q, ls=l_arr, summaries=summ, index=idx,
             active=active_arr, keep_any=keep_arr, touched=touched,
             candidate_fraction=cand_frac,
+            predict=self.cfg.predict, predict_mode=pmode,
+            labels=(pred[0] if pred else None),
+            confidences=(pred[1] if pred else None),
+            local_k=kl, shard_answers=epayload, votes=evotes,
             timings={
                 "snapshot_s": t_snap1 - t_snap0,
                 "route_s": (t_route1 - t_route0
@@ -1040,23 +1347,40 @@ class KnnServer:
         # for search="approx" the auditor instead measures recall@l
         # against cfg.recall_floor.
         if (self._shadow is not None
-                and (self.cfg.route == "pruned" or self._indexed)
+                and (self.cfg.route == "pruned" or self._indexed
+                     or self._ensemble)
                 and self._shadow.due()):
             with tracer.span("shadow_audit", parent=dspan,
                              generation=generation) as aspan:
                 all_on = (np.ones(self.k, bool)
                           if self.cfg.route == "pruned" else None)
-                ok = self._shadow.check(
-                    d, i, lambda: self._exact_replay(operands, all_on, q,
-                                                     l_arr, key),
-                    generation=generation, batch_id=batch_id,
-                    touched=touched)
+                if self._ensemble:
+                    # Accuracy mode: replay through the exact-fold
+                    # executable (all shards active, same generation/key)
+                    # and measure ensemble-vs-exact label agreement over
+                    # the batch's real rows.
+                    ok = self._shadow.check_labels(
+                        pred[0], l_arr,
+                        lambda: self._exact_label_replay(
+                            operands, all_on, q, l_arr, key),
+                        generation=generation, batch_id=batch_id,
+                        touched=touched)
+                    if (self._slo is not None
+                            and self._shadow.last_agreement is not None):
+                        self._slo.measure("label_agreement",
+                                          self._shadow.last_agreement)
+                else:
+                    ok = self._shadow.check(
+                        d, i, lambda: self._exact_replay(operands, all_on,
+                                                         q, l_arr, key),
+                        generation=generation, batch_id=batch_id,
+                        touched=touched)
+                    if (self._slo is not None
+                            and self._shadow.mode == "recall"
+                            and self._shadow.last_min_recall is not None):
+                        self._slo.measure("recall_min",
+                                          self._shadow.last_min_recall)
                 aspan.annotate(diverged=not ok)
-                if (self._slo is not None
-                        and self._shadow.mode == "recall"
-                        and self._shadow.last_min_recall is not None):
-                    self._slo.measure("recall_min",
-                                      self._shadow.last_min_recall)
 
         t_res0 = time.perf_counter()
         vspan = tracer.begin("resolve", parent=dspan, t0=t_res0)
@@ -1093,7 +1417,10 @@ class KnnServer:
                 latency_s=t_done - rec.t_enqueue,
                 generation=generation, shards_touched=touched,
                 recall_mode="approx" if self._indexed else "exact",
-                explain_ref=xrec))
+                explain_ref=xrec,
+                label=(float(pred[0][row]) if pred else None),
+                confidence=(float(pred[1][row]) if pred else None),
+                predict_mode=pmode))
             if rec.span is not None:
                 tracer.record("queued", rec.t_enqueue, t_dispatch,
                               parent=rec.span)
@@ -1148,6 +1475,17 @@ class KnnServer:
             ops.append(all_on)
         d, i, *_ = self._fn(*ops, q, l_arr, key)
         return np.asarray(d), np.asarray(i)
+
+    def _exact_label_replay(self, operands, all_on, q, l_arr, key):
+        """The exact-mode prediction for one ensemble batch: the
+        exact-fold executable at the same generation and key with every
+        shard active — the oracle the accuracy shadow audit compares the
+        one-message-per-shard answer against."""
+        ops = list(operands)
+        if all_on is not None:
+            ops.append(all_on)
+        out = self._fn(*ops, q, l_arr, key)
+        return np.asarray(out[4])
 
     def _host_candidates(self, idx, q, l_arr, shard_keep):
         """Host-path bucket prologue for one micro-batch: the (n,)

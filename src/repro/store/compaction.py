@@ -139,6 +139,41 @@ def scatter_operands(slots, points: np.ndarray, ids: np.ndarray,
     return idx, upd_pts, upd_ids, upd_valid
 
 
+def payload_operand(slots, payload: np.ndarray, padded_len: int) -> np.ndarray:
+    """The label-payload column of one batched slot scatter, padded to
+    the same length (and aligned to the same rows) as the ``idx`` block
+    :func:`scatter_operands` built — padding rows carry zeros and are
+    dropped with their out-of-range indices."""
+    upd = np.zeros(padded_len, payload.dtype)
+    upd[:len(slots)] = payload[list(slots)]
+    return upd
+
+
+def remap_payload(payload: np.ndarray, old_ids: np.ndarray,
+                  old_valid: np.ndarray, new_ids: np.ndarray,
+                  new_valid: np.ndarray) -> np.ndarray:
+    """Carry a per-slot payload across a repack: every live id keeps its
+    payload, whatever slot the re-deal moved it to.
+
+    Vectorized id join (sort the old live ids once, searchsorted the new
+    layout's ids into them) — O(live log live), no per-point dict walk.
+    Free/dead slots in the new layout get zeros; they are masked by
+    ``new_valid`` everywhere the payload is read.
+    """
+    out = np.zeros_like(payload)
+    old_slots = np.flatnonzero(old_valid)
+    if old_slots.size == 0:
+        return out
+    oid = old_ids[old_slots]
+    order = np.argsort(oid)
+    oid_sorted = oid[order]
+    pay_sorted = payload[old_slots][order]
+    new_slots = np.flatnonzero(new_valid)
+    pos = np.searchsorted(oid_sorted, new_ids[new_slots])
+    out[new_slots] = pay_sorted[pos]
+    return out
+
+
 class RepackResult(NamedTuple):
     points: np.ndarray     # (k*cap, dim) new point mirror
     ids: np.ndarray        # (k*cap,) new id mirror (sentinel in free slots)

@@ -18,7 +18,8 @@ One daemon worker thread per store runs a plan / prepare / commit loop:
   O(k·sample·dim)) rather than the inline round-robin cursor, so the
   shard whose bounds decayed most gets served first.  Planning also
   opens the **journal**: from here until commit, ``_apply_locked``
-  records every applied op ``(kind, id, shard, new_point, old_point)``.
+  records every applied op
+  ``(kind, id, shard, new_point, old_point, label)``.
 
 * **Prepare (no lock).**  Everything expensive happens against captured
   copies: the exact per-shard recompute runs on a k=1 scratch
@@ -212,6 +213,7 @@ class MaintenanceWorker:
                 pts = st._pts.copy()
                 ids = st._ids.copy()
                 valid = st._valid.copy()
+                labels = (st._labels.copy() if st.with_labels else None)
                 if (plan[1] or st.redeal) == "proximity":
                     centroids, _, occupied = st._summ.placement_view()
                     seed_cents = (centroids[occupied]
@@ -226,7 +228,7 @@ class MaintenanceWorker:
             if plan[0] == "retighten":
                 self._retighten(plan[1], pj, tracer=tracer, cspan=cspan)
             else:
-                self._repack(plan, pts, ids, valid,
+                self._repack(plan, pts, ids, valid, labels,
                              seed_cents if plan[1] == "proximity" else None,
                              slack, tracer=tracer, cspan=cspan)
         finally:
@@ -256,7 +258,7 @@ class MaintenanceWorker:
                               reason="capture invalidated")
                 return
             # replay what raced the rebuild — shard j's ops only
-            for kind, _pid, shard, new_pt, old_pt in journal:
+            for kind, _pid, shard, new_pt, old_pt, _label in journal:
                 if shard != j:
                     continue
                 if kind == "insert":
@@ -282,7 +284,7 @@ class MaintenanceWorker:
 
     # ---- repack / split --------------------------------------------------
 
-    def _repack(self, plan, pts, ids, valid, seed_cents,
+    def _repack(self, plan, pts, ids, valid, labels, seed_cents,
                 slack: int, *, tracer=NULL_TRACER, cspan=None) -> None:
         from repro.store import mutable as mutable_mod
         st = self._store
@@ -299,6 +301,12 @@ class MaintenanceWorker:
             else:
                 res = compaction.repack(pts, ids, valid, st.k, st.cap,
                                         id_sentinel=mutable_mod.ID_SENTINEL)
+            # label payloads follow their points through the re-deal,
+            # remapped against the CAPTURED layout (the journal replays
+            # whatever raced this onto the staged mirrors below)
+            new_labels = (compaction.remap_payload(
+                labels, ids, valid, res.ids, res.valid)
+                if labels is not None else None)
             scratch = self._scratch(st.k)
             scratch.rebuild(res.points, res.valid, st.cap)
             # The approximate index tier rebuilds the same way: exact
@@ -317,6 +325,8 @@ class MaintenanceWorker:
             dev_pts = jax.device_put(res.points.copy(), st._sharding)
             dev_ids = jax.device_put(res.ids.copy(), st._sharding)
             dev_valid = jax.device_put(res.valid.copy(), st._sharding)
+            dev_labels = (jax.device_put(new_labels.copy(), st._sharding)
+                          if new_labels is not None else None)
 
         t_commit = time.perf_counter()
         with st._lock:
@@ -330,7 +340,7 @@ class MaintenanceWorker:
             new_pts, new_ids, new_valid = res.points, res.ids, res.valid
             slot_of, live, used = res.slot_of, res.live, res.used
             touched: set[int] = set()
-            for kind_op, pid, _shard, new_pt, old_pt in journal:
+            for kind_op, pid, _shard, new_pt, old_pt, label in journal:
                 if kind_op == "insert":
                     if st._placement.uses_centroids:
                         c, r, occ = scratch.placement_view()
@@ -358,6 +368,8 @@ class MaintenanceWorker:
                     new_pts[slot] = new_pt
                     new_ids[slot] = pid
                     new_valid[slot] = True
+                    if new_labels is not None:
+                        new_labels[slot] = label
                     slot_of[pid] = slot
                     touched.add(slot)
                 elif kind_op == "delete":
@@ -375,6 +387,8 @@ class MaintenanceWorker:
                     if scratch_idx is not None:
                         scratch_idx.update(slot, new_pt)
                     new_pts[slot] = new_pt
+                    if new_labels is not None and label is not None:
+                        new_labels[slot] = label
                     touched.add(slot)
                 self.stats.replayed_ops += 1
             if touched:
@@ -382,16 +396,26 @@ class MaintenanceWorker:
                     sorted(touched), new_pts, new_ids, new_valid,
                     st.total, st.dim,
                     id_sentinel=mutable_mod.ID_SENTINEL)
-                dev_pts, dev_ids, dev_valid = st._apply_fn(
-                    dev_pts, dev_ids, dev_valid, idx, up, ui, uv)
+                if new_labels is not None:
+                    ul = compaction.payload_operand(
+                        sorted(touched), new_labels, len(idx))
+                    dev_pts, dev_ids, dev_valid, dev_labels = st._apply_fn(
+                        dev_pts, dev_ids, dev_valid, dev_labels,
+                        idx, up, ui, uv, ul)
+                else:
+                    dev_pts, dev_ids, dev_valid = st._apply_fn(
+                        dev_pts, dev_ids, dev_valid, idx, up, ui, uv)
             # ---- install + epoch swap (identical publish sequence to
             # _apply_locked's repack arm) ----
             st._pts, st._ids, st._valid = new_pts, new_ids, new_valid
+            if new_labels is not None:
+                st._labels = new_labels
             st._slot_of, st._live, st._used = slot_of, live, used
             gen = st._snap.generation + 1
             st._snap = mutable_mod.StoreSnapshot(
                 generation=gen, points=dev_pts, ids=dev_ids,
-                valid=dev_valid, live=int(live.sum()))
+                valid=dev_valid, live=int(live.sum()),
+                labels=dev_labels)
             st._summ = scratch
             st._summaries = scratch.freeze(gen)
             if scratch_idx is not None:

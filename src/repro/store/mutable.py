@@ -104,7 +104,11 @@ class StoreSnapshot(NamedTuple):
     ``points``: (k*cap, dim) f32, sharded over the service axis;
     ``ids``: (k*cap,) int32 global point ids (ID_SENTINEL in dead/free
     slots); ``valid``: (k*cap,) bool live mask; ``live``: global live
-    count at this generation.
+    count at this generation; ``labels``: (k*cap,) f32 per-point
+    label/value payload riding the same slot layout (None unless the
+    store was built ``with_labels=True``) — frozen with the generation
+    so prediction can never read labels torn from a different epoch
+    than the points that carry them.
     """
 
     generation: int
@@ -112,6 +116,7 @@ class StoreSnapshot(NamedTuple):
     ids: jax.Array
     valid: jax.Array
     live: int
+    labels: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass
@@ -133,6 +138,7 @@ class _Op:
     id: int
     point: Optional[np.ndarray] = None
     value: Optional[int] = None
+    label: Optional[float] = None  # None on update = keep current label
 
 
 class MutableStore:
@@ -148,6 +154,7 @@ class MutableStore:
                  compact_tombstone_frac: float = 0.35,
                  compact_imbalance_frac: float = 0.5,
                  auto_compact: bool = True, with_values: bool = False,
+                 with_labels: bool = False,
                  track_history: bool = False,
                  summary_projections: int = 8, summary_seed: int = 0,
                  placement="balance", placement_guard_slack: int = 32,
@@ -177,6 +184,7 @@ class MutableStore:
         self.compact_imbalance_frac = float(compact_imbalance_frac)
         self.auto_compact = bool(auto_compact)
         self.with_values = bool(with_values)
+        self.with_labels = bool(with_labels)
         # Placement subsystem (store/placement.py): the policy object that
         # places every applied insert, and the repack mode that re-deals
         # live points at compaction.
@@ -205,6 +213,15 @@ class MutableStore:
         self._live = np.zeros(self.k, np.int64)   # live points per shard
         self._used = np.zeros(self.k, np.int64)   # high-water mark per shard
         self._values: dict[int, int] = {}
+        # Per-slot label payload mirror (prediction plane).  f32 serves
+        # both classification (integer class ids are exact below 2^24)
+        # and regression; slots ride the exact same scatter / validity /
+        # repack machinery as the points they annotate.  The id -> label
+        # map is monotone like _values, so oracle lookups against older
+        # generations' ids stay well-defined.
+        self._labels = (np.zeros(self.total, np.float32)
+                        if self.with_labels else None)
+        self._label_of: dict[int, float] = {}
         self._next_id = 0
 
         # Write-ahead staging.
@@ -212,9 +229,12 @@ class MutableStore:
         self._staged_state: dict[int, bool] = {}  # id -> live after flush
         self._projected_live = 0
 
+        # The labeled variant carries one extra buffer through the same
+        # scatter; arity is fixed at construction so the jit cache never
+        # sees a mixed signature (maintenance.py calls through this too).
         self._apply_fn = jax.jit(
-            _scatter_apply,
-            out_shardings=(self._sharding, self._sharding, self._sharding))
+            _scatter_apply_labeled if self.with_labels else _scatter_apply,
+            out_shardings=(self._sharding,) * (4 if self.with_labels else 3))
 
         # Per-shard pivot summaries for pruned routing (store/summaries.py),
         # in the adaptive form (store/adaptive.py): updated incrementally
@@ -443,18 +463,43 @@ class MutableStore:
             return np.array([self._values.get(int(i), -1) for i in ids],
                             np.int32)
 
+    def labels_for(self, ids: np.ndarray) -> np.ndarray:
+        """Map global point ids to their label payloads, NaN where absent.
+
+        Monotone like the id→value map: a label survives its point's
+        deletion, so oracle lookups against older generations' answers
+        stay well-defined (requires ``with_labels``).
+        """
+        if not self.with_labels:
+            raise RuntimeError("store built with with_labels=False")
+        with self._lock:
+            return np.array([self._label_of.get(int(i), np.nan) for i in ids],
+                            np.float32)
+
+    def live_labels(self) -> tuple[np.ndarray, np.ndarray]:
+        """(ids, labels) of the applied live set, ascending by id —
+        aligned with :meth:`live_arrays` (requires ``with_labels``)."""
+        if not self.with_labels:
+            raise RuntimeError("store built with with_labels=False")
+        with self._lock:
+            slots = np.flatnonzero(self._valid)
+            order = slots[np.argsort(self._ids[slots], kind="stable")]
+            return self._ids[order].copy(), self._labels[order].copy()
+
     # ---- write side (staging) -------------------------------------------
 
-    def insert(self, points, ids=None, values=None) -> np.ndarray:
+    def insert(self, points, ids=None, values=None, labels=None) -> np.ndarray:
         """Stage point insertions; returns the assigned global ids.
 
         ``points``: (n, dim) or (dim,).  ``ids`` (optional) must be fresh —
         never used before, not even by a since-deleted point (ids are
         single-use so the id->value map stays monotone); omitted ids are
         assigned from a monotone counter.  ``values`` (optional, requires
-        ``with_values``): per-point int payloads.  Atomic: on any
-        validation error (duplicate/reused id, capacity) the whole batch
-        is rejected and nothing is staged.
+        ``with_values``): per-point int payloads.  ``labels`` (optional,
+        requires ``with_labels``): per-point f32 label/value payloads for
+        the prediction plane (class id or regression target; default 0.0
+        when omitted).  Atomic: on any validation error (duplicate/reused
+        id, capacity) the whole batch is rejected and nothing is staged.
         """
         points = np.atleast_2d(np.asarray(points, np.float32))
         n = points.shape[0]
@@ -464,6 +509,10 @@ class MutableStore:
             raise ValueError("store built with with_values=False")
         if values is not None:
             values = np.broadcast_to(np.asarray(values, np.int32), (n,))
+        if labels is not None and not self.with_labels:
+            raise ValueError("store built with with_labels=False")
+        if labels is not None:
+            labels = np.broadcast_to(np.asarray(labels, np.float32), (n,))
         with self._lock:
             if ids is None:
                 ids = np.arange(self._next_id, self._next_id + n,
@@ -488,7 +537,9 @@ class MutableStore:
                 pid = int(ids[t])
                 self._pending.append(_Op(
                     "insert", pid, point=points[t].copy(),
-                    value=None if values is None else int(values[t])))
+                    value=None if values is None else int(values[t]),
+                    label=(0.0 if labels is None else float(labels[t]))
+                    if self.with_labels else None))
                 self._staged_state[pid] = True
                 self._used_ids.add(pid)
                 self._next_id = max(self._next_id, pid + 1)
@@ -514,20 +565,29 @@ class MutableStore:
             self._projected_live -= len(ids)
             self._maybe_autoflush_locked()
 
-    def update(self, ids, points) -> None:
+    def update(self, ids, points, labels=None) -> None:
         """Stage in-place point overwrites (same id, same slot).
+        ``labels`` (optional, requires ``with_labels``) overwrites the
+        label payload alongside; omitted labels stay as they were.
         Atomic: one unknown id rejects the whole batch, staging nothing."""
         ids = np.atleast_1d(np.asarray(ids, np.int64))
         points = np.atleast_2d(np.asarray(points, np.float32))
         if points.shape != (len(ids), self.dim):
             raise ValueError(
                 f"points shape {points.shape} != ({len(ids)}, {self.dim})")
+        if labels is not None and not self.with_labels:
+            raise ValueError("store built with with_labels=False")
+        if labels is not None:
+            labels = np.broadcast_to(np.asarray(labels, np.float32),
+                                     (len(ids),))
         with self._lock:
             for pid in ids:
                 if not self._would_be_live(int(pid)):
                     raise KeyError(f"id {int(pid)} is not live")
-            for pid, pt in zip(ids, points):
-                self._pending.append(_Op("update", int(pid), point=pt.copy()))
+            for t, (pid, pt) in enumerate(zip(ids, points)):
+                self._pending.append(_Op(
+                    "update", int(pid), point=pt.copy(),
+                    label=None if labels is None else float(labels[t])))
             self._maybe_autoflush_locked()
 
     def _would_be_live(self, pid: int) -> bool:
@@ -588,11 +648,14 @@ class MutableStore:
                 self._slot_of[op.id] = slot
                 if op.value is not None:
                     self._values[op.id] = op.value
+                if self.with_labels:
+                    self._labels[slot] = op.label
+                    self._label_of[op.id] = float(op.label)
                 touched.add(slot)
                 self.stats.inserted += 1
                 if self._journal is not None:
                     self._journal.append(("insert", op.id, j, op.point,
-                                          None))
+                                          None, op.label))
             elif op.kind == "delete":
                 slot = self._slot_of.pop(op.id)
                 self._live[slot // self.cap] -= 1
@@ -602,7 +665,7 @@ class MutableStore:
                 if self._journal is not None:
                     self._journal.append(("delete", op.id,
                                           slot // self.cap, None,
-                                          self._pts[slot].copy()))
+                                          self._pts[slot].copy(), None))
                 self._valid[slot] = False
                 self._ids[slot] = ID_SENTINEL
                 touched.add(slot)
@@ -616,8 +679,11 @@ class MutableStore:
                 if self._journal is not None:
                     self._journal.append(("update", op.id,
                                           slot // self.cap, op.point,
-                                          self._pts[slot].copy()))
+                                          self._pts[slot].copy(), op.label))
                 self._pts[slot] = op.point
+                if self.with_labels and op.label is not None:
+                    self._labels[slot] = op.label
+                    self._label_of[op.id] = float(op.label)
                 touched.add(slot)
                 self.stats.updated += 1
 
@@ -670,10 +736,12 @@ class MutableStore:
             # A repack moves slots wholesale: one full upload.
             self._snap = self._upload_snapshot_locked(generation=gen)
         else:
-            new_pts, new_ids, new_valid = self._scatter_locked(sorted(touched))
+            new_pts, new_ids, new_valid, new_labels = self._scatter_locked(
+                sorted(touched))
             self._snap = StoreSnapshot(generation=gen, points=new_pts,
                                        ids=new_ids, valid=new_valid,
-                                       live=self._projected_live)
+                                       live=self._projected_live,
+                                       labels=new_labels)
         self.stats.applies += 1
         self._summaries = self._summ.freeze(gen)
         if self._index is not None:
@@ -706,7 +774,9 @@ class MutableStore:
             points=jax.device_put(self._pts.copy(), self._sharding),
             ids=jax.device_put(self._ids.copy(), self._sharding),
             valid=jax.device_put(self._valid.copy(), self._sharding),
-            live=int(self._live.sum()))
+            live=int(self._live.sum()),
+            labels=(jax.device_put(self._labels.copy(), self._sharding)
+                    if self.with_labels else None))
 
     def _pick_shard_locked(self, point=None) -> int:
         """Policy-dispatched placement (store/placement.py): hand the
@@ -759,6 +829,13 @@ class MutableStore:
             res = compaction.repack(self._pts, self._ids, self._valid,
                                     self.k, self.cap,
                                     id_sentinel=ID_SENTINEL)
+        if self.with_labels:
+            # Labels follow their points through the re-deal: remap the
+            # per-slot payload from the old layout to the new one by id
+            # (compaction.remap_payload) — alignment is what the
+            # labels-survive-compaction regression test asserts.
+            self._labels = compaction.remap_payload(
+                self._labels, self._ids, self._valid, res.ids, res.valid)
         self._pts, self._ids, self._valid = res.points, res.ids, res.valid
         self._slot_of = res.slot_of
         self._live, self._used = res.live, res.used
@@ -788,9 +865,17 @@ class MutableStore:
         idx, upd_pts, upd_ids, upd_valid = compaction.scatter_operands(
             slots, self._pts, self._ids, self._valid, self.total,
             self.dim, id_sentinel=ID_SENTINEL)
-        return self._apply_fn(self._snap.points, self._snap.ids,
-                              self._snap.valid, idx, upd_pts, upd_ids,
-                              upd_valid)
+        if self.with_labels:
+            upd_labels = compaction.payload_operand(slots, self._labels,
+                                                    len(idx))
+            return self._apply_fn(self._snap.points, self._snap.ids,
+                                  self._snap.valid, self._snap.labels,
+                                  idx, upd_pts, upd_ids, upd_valid,
+                                  upd_labels)
+        out = self._apply_fn(self._snap.points, self._snap.ids,
+                             self._snap.valid, idx, upd_pts, upd_ids,
+                             upd_valid)
+        return out + (None,)
 
     def _record_history(self):
         if self._track_history:
@@ -805,3 +890,14 @@ def _scatter_apply(pts, ids, valid, slots, upd_pts, upd_ids, upd_valid):
     return (pts.at[slots].set(upd_pts, mode="drop"),
             ids.at[slots].set(upd_ids, mode="drop"),
             valid.at[slots].set(upd_valid, mode="drop"))
+
+
+def _scatter_apply_labeled(pts, ids, valid, labels, slots, upd_pts,
+                           upd_ids, upd_valid, upd_labels):
+    """_scatter_apply with the label payload riding the same scatter —
+    same indices, same drop semantics, same no-donation contract, so a
+    generation's labels can never tear from its points."""
+    return (pts.at[slots].set(upd_pts, mode="drop"),
+            ids.at[slots].set(upd_ids, mode="drop"),
+            valid.at[slots].set(upd_valid, mode="drop"),
+            labels.at[slots].set(upd_labels, mode="drop"))

@@ -299,7 +299,8 @@ def test_explain_report_sections_and_recompute(explain_server):
     rep = res.explain()
     assert rep["schema"] == EXPLAIN_SCHEMA
     assert set(rep) == {"schema", "batch", "request", "routing", "index",
-                        "timings", "maintenance"}
+                        "predict", "timings", "maintenance"}
+    assert rep["predict"] == {"enabled": False}
     assert rep["request"]["l"] == 4
     assert rep["request"]["recall_mode"] == "approx"
     assert rep["routing"]["mode"] == "pruned"

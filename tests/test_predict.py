@@ -1,0 +1,299 @@
+"""Label-prediction property harness (src/repro/predict/, DESIGN.md §15).
+
+The contracts under test:
+
+* **Exact predict is the single-machine oracle, bit-for-bit** — on every
+  route (exact/pruned) × route_compute (host/device) × search (exact,
+  and approx with an unreachably large oversample target, which keeps
+  every bucket and must stay bit-identical): the served label equals a
+  numpy majority vote / mean over the true l nearest neighbors, and the
+  label bytes agree across all modes.
+* **The 1-shard ensemble degenerates to the exact vote** — local_k_for's
+  auto split gives kl = l on one shard, so the one-message answer is
+  bit-identical to the exact fold.
+* **Ties are deterministic** — two independently constructed servers at
+  the same key and generation produce identical label bytes, and a tied
+  vote breaks toward the lowest class id, in both modes.
+* **Tombstoned neighbors never vote** — deleting the nearest neighbor
+  flips the vote in both exact and ensemble modes (the validity mask
+  reaches the label path end-to-end), and labels survive compaction and
+  proximity re-deals aligned with their points.
+* **Racing ingest keeps the ensemble accuracy contract** — under
+  concurrent inserts the accuracy-mode shadow audit (ensemble vs the
+  exact fold at the *same generation*) never dips below the floor, and
+  every answer's message bill is exactly its touched-shard count.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs.knn_service import KnnServiceConfig
+from repro.data import bayes_labels, labeled_mixture
+from repro.parallel.compat import make_mesh
+from repro.runtime import KnnServer
+from repro.store import MutableStore
+
+K = 8
+DIM = 8
+N = 128                   # static-server point count (divides K)
+NUM_CLASSES = 4
+L_MAX = 16
+
+BASE = KnnServiceConfig(
+    bucket_sizes=(4,), l_max=L_MAX, num_classes=NUM_CLASSES,
+    predict="vote", max_wait_ms=0.1)
+
+
+def _instance(seed=0, n=N):
+    pts, labels, centers = labeled_mixture(n, DIM, NUM_CLASSES,
+                                           separation=6.0, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    qs = (centers[rng.integers(0, NUM_CLASSES, 4)]
+          + rng.normal(size=(4, DIM))).astype(np.float32)
+    return pts, labels.astype(np.float32), qs
+
+
+def _oracle_vote(pts, labels, q, l):
+    """Single-machine majority vote over the true l-NN (f64 distances,
+    ties toward the lowest class — the repo-wide tie rule)."""
+    d = ((q.astype(np.float64) - pts.astype(np.float64)) ** 2).sum(-1)
+    top = np.argsort(d, kind="stable")[:l]
+    hist = np.bincount(labels[top].astype(int), minlength=NUM_CLASSES)
+    return float(hist.argmax()), hist
+
+
+# ---- exact predict: the oracle matrix ------------------------------------
+
+MATRIX = [
+    dict(route="exact", route_compute="host", search="exact"),
+    dict(route="pruned", route_compute="host", search="exact"),
+    dict(route="pruned", route_compute="device", search="exact"),
+    # approx with an unreachable oversample target keeps every bucket:
+    # answers (and therefore votes) must stay bit-identical to exact.
+    dict(route="exact", route_compute="host", search="approx",
+         index_buckets=4, index_oversample=1e9),
+    dict(route="pruned", route_compute="host", search="approx",
+         index_buckets=4, index_oversample=1e9),
+    dict(route="pruned", route_compute="device", search="approx",
+         index_buckets=4, index_oversample=1e9),
+]
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+def test_exact_predict_matches_oracle_on_every_mode(seed):
+    pts, labels, qs = _instance(seed)
+    ls = [1, 5, L_MAX, 3]
+    per_mode = []
+    for knobs in MATRIX:
+        srv = KnnServer(pts, labels=labels, cfg=BASE.replace(**knobs))
+        res = srv.query_batch(qs, ls=ls)
+        got = np.array([r.label for r in res], np.float32)
+        for q, l, r in zip(qs, ls, res):
+            want, hist = _oracle_vote(pts, labels, q, l)
+            assert r.predict_mode == "exact"
+            assert r.label == want, (knobs, l)
+            assert r.confidence == pytest.approx(
+                hist.max() / hist.sum())
+        per_mode.append(got)
+        srv.close()
+    for got in per_mode[1:]:
+        assert got.tobytes() == per_mode[0].tobytes()
+
+
+def test_exact_regress_matches_oracle():
+    pts, labels, qs = _instance(7)
+    srv = KnnServer(pts, labels=labels, cfg=BASE.replace(predict="regress"))
+    for q, r in zip(qs, srv.query_batch(qs, ls=[5] * 4)):
+        d = ((q.astype(np.float64) - pts.astype(np.float64)) ** 2).sum(-1)
+        top = np.argsort(d, kind="stable")[:5]
+        assert r.label == pytest.approx(
+            labels[top].astype(np.float32).mean(), rel=1e-6)
+        assert r.confidence == pytest.approx(1.0)
+    srv.close()
+
+
+# ---- ensemble: degenerate case, bill, determinism ------------------------
+
+def test_one_shard_ensemble_is_bitwise_exact_vote():
+    """kl = ceil(l / 1) = l on a single shard: the one-message local
+    vote IS the global vote, so the two modes must agree to the byte."""
+    pts, labels, qs = _instance(2, n=64)
+    mesh = make_mesh((1,), ("knn",))
+    exact = KnnServer(pts, labels=labels, mesh=mesh, cfg=BASE)
+    ens = KnnServer(pts, labels=labels, mesh=mesh,
+                    cfg=BASE.replace(predict_mode="ensemble"))
+    ls = [1, 4, 9, L_MAX]
+    le = np.array([r.label for r in exact.query_batch(qs, ls=ls)],
+                  np.float32)
+    lo = np.array([r.label for r in ens.query_batch(qs, ls=ls)],
+                  np.float32)
+    assert le.tobytes() == lo.tobytes()
+    exact.close()
+    ens.close()
+
+
+def test_ensemble_message_bill_is_touched_shards():
+    pts, labels, qs = _instance(4)
+    srv = KnnServer(pts, labels=labels,
+                    cfg=BASE.replace(predict_mode="ensemble"))
+    for r in srv.query_batch(qs, ls=[3, 8, 1, L_MAX]):
+        assert r.predict_mode == "ensemble"
+        assert r.rounds == 1
+        assert r.messages == r.shards_touched == K
+        # no point identity ever leaves its shard
+        assert (r.ids == 2**31 - 1).all()
+        assert np.isinf(r.dists).all()
+    srv.close()
+
+
+def _tie_instance():
+    """A query whose l=4 neighborhood votes 2:2 between classes 1 and 3
+    (far label-0 filler beyond l keeps n divisible by the mesh)."""
+    pts = np.zeros((16, DIM), np.float32)
+    pts[0, 0], pts[1, 0] = 1.0, -1.0
+    pts[2, 1], pts[3, 1] = 1.0, -1.0
+    pts[4:] = 100.0 + np.arange(12)[:, None]
+    labels = np.zeros(16, np.float32)
+    labels[[0, 2]] = 3.0
+    labels[[1, 3]] = 1.0
+    q = np.zeros(DIM, np.float32)
+    return pts, labels, q
+
+
+@pytest.mark.parametrize("mode", ["exact", "ensemble"])
+def test_tied_votes_are_deterministic_across_fresh_servers(mode):
+    pts, labels, q = _tie_instance()
+    cfg = BASE.replace(predict_mode=mode)
+    got = []
+    for _ in range(2):
+        srv = KnnServer(pts, labels=labels, cfg=cfg, seed=0)
+        r = srv.query_batch([q], ls=[4])[0]
+        assert r.generation == 0
+        got.append(np.float32(r.label))
+        srv.close()
+    assert got[0].tobytes() == got[1].tobytes()
+    if mode == "exact":
+        # 2:2 between classes 1 and 3 -> the tie rule: lowest class wins
+        assert got[0] == 1.0
+    else:
+        # ensemble character, pinned: every shard votes its local kNN
+        # regardless of distance (arXiv 1812.05005), so the six far
+        # label-0 shards outvote the two near tied shards.
+        assert got[0] == 0.0
+
+
+# ---- validity mask end-to-end: tombstones, compaction, re-deals ----------
+
+def _labeled_store(cfg, seed=0, **kw):
+    return MutableStore(DIM, mesh=make_mesh((K,), ("knn",)),
+                        **{**cfg.store_kwargs(), **kw})
+
+
+@pytest.mark.parametrize("mode", ["exact", "ensemble"])
+def test_tombstoned_nearest_neighbor_never_votes(mode):
+    """The regression the label path must hold end-to-end: delete the
+    query's nearest neighbor and its label must vanish from the vote in
+    the very next generation — in both modes."""
+    cfg = BASE.replace(predict_mode=mode,
+                       store_capacity_per_shard=16, num_classes=4)
+    store = _labeled_store(cfg)
+    rng = np.random.default_rng(5)
+    q = np.zeros(DIM, np.float32)
+    far = rng.normal(size=(31, DIM)).astype(np.float32) + 20.0
+    store.insert(far, labels=np.full(31, 2.0))
+    nearest = store.insert(q + 0.01, labels=[3.0])   # lone class-3 voter
+    store.flush()
+    srv = KnnServer(store=store, cfg=cfg)
+
+    def class3_votes(r):
+        """Total class-3 mass in the vote: the exact fold's winner set,
+        or (ensemble) the per-shard local histograms from the explain
+        vote table — either way the lone tombstone-candidate's voice."""
+        if mode == "exact":
+            return int(r.label == 3.0)
+        table = np.array(r.explain()["predict"]["shard_answers"])
+        return int(table[:, 3].sum())
+
+    before = srv.query_batch([q], ls=[1])[0]
+    assert class3_votes(before) == 1      # the nearest neighbor votes
+    srv.delete(nearest)
+    srv.flush_store()
+    after = srv.query_batch([q], ls=[1])[0]
+    assert class3_votes(after) == 0, "tombstoned neighbor's label voted"
+    assert after.label == 2.0
+    srv.close()
+
+
+def test_labels_survive_compaction_and_proximity_redeal():
+    cfg = BASE.replace(store_capacity_per_shard=64, redeal="proximity",
+                       placement="affinity")
+    store = _labeled_store(cfg)
+    pts, labels, _ = _instance(9, n=256)
+    ids = store.insert(pts, labels=labels)
+    store.flush()
+    # delete every third point, force the repack, and re-check the
+    # surviving id -> label map against the insert-time assignment
+    store.delete(ids[::3])
+    store.flush()
+    store.compact()
+    keep = np.ones(len(ids), bool)
+    keep[::3] = False
+    kept_ids = ids[keep]
+    np.testing.assert_array_equal(store.labels_for(kept_ids),
+                                  labels[keep])
+    live_ids, live_labels = store.live_labels()
+    assert set(live_ids.tolist()) == set(kept_ids.tolist())
+    # and the server still votes the surviving labels, not stale slots
+    srv = KnnServer(store=store, cfg=cfg)
+    q = pts[kept_ids[0] == ids][0] if (kept_ids[0] == ids).any() else pts[1]
+    r = srv.query_batch([q], ls=[1])[0]
+    assert r.label == float(store.labels_for([r.ids[0]])[0])
+    srv.close()
+
+
+# ---- racing ingest: the accuracy contract under churn --------------------
+
+def test_racing_ingest_holds_accuracy_floor():
+    """Ensemble accuracy vs the exact fold at the same generation, while
+    an ingest thread races the queries: the accuracy-mode shadow audit
+    replays every batch and must never dip below the floor on the
+    well-separated mixture (and every bill stays touched_shards)."""
+    cfg = BASE.replace(predict_mode="ensemble", obs_audit_every=1,
+                       accuracy_floor=0.9, store_capacity_per_shard=256)
+    store = _labeled_store(cfg)
+    pts, labels, centers = labeled_mixture(512, DIM, NUM_CLASSES,
+                                           separation=8.0, seed=11)
+    labels = labels.astype(np.float32)
+    store.insert(pts[:256], labels=labels[:256])
+    store.flush()
+    srv = KnnServer(store=store, cfg=cfg)
+
+    stop = threading.Event()
+
+    def ingest():
+        i = 256
+        while not stop.is_set() and i < 512:
+            srv.insert(pts[i:i + 8], labels=labels[i:i + 8])
+            srv.flush_store()
+            i += 8
+
+    t = threading.Thread(target=ingest)
+    t.start()
+    try:
+        rng = np.random.default_rng(12)
+        qbase = bayes_labels  # noqa: F841 (oracle available for debugging)
+        for _ in range(12):
+            qs = (centers[rng.integers(0, NUM_CLASSES, 4)]
+                  + 0.5 * rng.normal(size=(4, DIM))).astype(np.float32)
+            for r in srv.query_batch(qs, ls=[5, 5, 5, 5]):
+                assert r.messages == r.shards_touched
+    finally:
+        stop.set()
+        t.join()
+    shadow = srv.obs_snapshot()["audit"]["shadow"]
+    assert shadow["mode"] == "accuracy"
+    assert shadow["checks"] > 0
+    assert shadow["divergences"] == 0, shadow["details"]
+    srv.close()
